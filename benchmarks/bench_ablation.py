@@ -1,0 +1,56 @@
+"""Tables VII/VIII + Fig. 13: ablations of the 3rd-stage optimization
+(cushion slots) and the continuous monitoring mechanism."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.metronome_testbed import SNAPSHOTS, make_snapshot
+from repro.core.harness import priority_split, run_experiment
+from repro.core.simulator import SimConfig
+
+from .common import Timer, emit
+
+# more drift to make the cushions/monitor matter (paper runs real hardware
+# noise; we dial jitter up to the same effect)
+ABLATION_CFG = SimConfig(duration_ms=150_000.0, seed=3, jitter_std=0.02)
+
+
+def run() -> None:
+    for sid in SNAPSHOTS:
+        variants = {}
+        for label, kw in (
+            ("full", {}),
+            # paper's ablation: compact rotation (no cushion slots) and no
+            # Psi-maximizing offline recalculation
+            ("wo_stage3", {"skip_third_stage": True,
+                           "rotation_mode": "compact"}),
+        ):
+            cluster, wls, bg = make_snapshot(sid, n_iterations=400)
+            with Timer() as t:
+                variants[label] = run_experiment(
+                    "metronome", cluster, wls, ABLATION_CFG, background=bg,
+                    **kw)
+        cluster, wls, bg = make_snapshot(sid, n_iterations=400)
+        cfg = SimConfig(duration_ms=150_000.0, seed=3, jitter_std=0.02,
+                        monitor=False)
+        variants["wo_monitor"] = run_experiment(
+            "metronome", cluster, wls, cfg, background=bg)
+
+        hi, lo = priority_split(wls)
+        full = variants["full"]
+
+        def agg(r, names):
+            vals = [r.sim.time_per_1000_iters_s[j] for j in names
+                    if j in r.sim.time_per_1000_iters_s]
+            return float(np.mean(vals)) if vals else float("nan")
+
+        for label in ("wo_stage3", "wo_monitor"):
+            v = variants[label]
+            emit(f"tableVII_{sid}_{label}" if label == "wo_stage3"
+                 else f"tableVIII_{sid}_{label}", 0.0,
+                 f"lo_pct={100*(agg(v, lo)/agg(full, lo)-1):.2f};"
+                 f"hi_pct={100*(agg(v, hi)/agg(full, hi)-1):.2f};"
+                 f"gamma_delta_pp="
+                 f"{100*(v.sim.avg_bw_utilization - full.sim.avg_bw_utilization):.2f};"
+                 f"readj_full={full.sim.readjustments};"
+                 f"readj_variant={v.sim.readjustments}")

@@ -1,0 +1,54 @@
+"""Kernel micro-benchmarks (beyond paper): flash attention / score kernel /
+rg-lru vs their jnp references, CPU wall-time (interpret-mode correctness is
+covered by tests; these numbers track the XLA reference path)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.core import geometry as G
+from repro.core import scoring as S
+
+from .common import Timer, emit
+
+
+def _bench(fn, *args, reps=3):
+    fn(*args)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(0)
+    # attention reference path (the dry-run fallback)
+    for s in (512, 1024):
+        q = jax.random.normal(key, (1, 8, s, 64), jnp.float32)
+        k = jax.random.normal(key, (1, 2, s, 64), jnp.float32)
+        v = jax.random.normal(key, (1, 2, s, 64), jnp.float32)
+        us = _bench(jax.jit(lambda a, b, c: ref.attention_ref(
+            a, b, c, causal=True)), q, k, v)
+        flops = 4 * s * s * 64 * 8
+        emit(f"kernel_attention_ref_s{s}", us,
+             f"gflops_per_s={flops/us/1e3:.1f}")
+
+    # metronome scoring: exhaustive enumeration throughput (Eq. 18)
+    pats = G.pattern_matrix([1, 1, 1], [0.3, 0.3, 0.3], 72)
+    bw = np.array([20.0, 20.0, 20.0])
+    with Timer() as t:
+        res = S.find_optimal_rotation(pats, bw, 25.0, [1, 1, 1], 0)
+    emit("kernel_score_enumeration_3tasks", t.us,
+         f"combos={res.n_evaluated};combos_per_s={res.n_evaluated/(t.us/1e6):.0f}")
+
+    # rg-lru associative scan reference
+    a = jax.nn.sigmoid(jax.random.normal(key, (4, 2048, 512))) * 0.3 + 0.65
+    x = jax.random.normal(key, (4, 2048, 512), jnp.float32)
+    us = _bench(jax.jit(ref.rg_lru_ref), a, x)
+    emit("kernel_rg_lru_ref_4x2048x512", us,
+         f"melems_per_s={4*2048*512/us:.1f}")

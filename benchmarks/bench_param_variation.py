@@ -1,0 +1,62 @@
+"""Fig. 11 (bandwidth/duty change via batch-size halving) and
+Fig. 12 (latency parameter sweep)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.metronome_testbed import make_snapshot
+from repro.core.harness import priority_split, run_experiment
+from repro.core.simulator import SimConfig
+
+from .common import BENCH_CFG, Timer, emit
+
+
+def run() -> None:
+    # --- Fig. 11: halve the batch size of all S1 jobs at t=30s -> duty up ---
+    for label, changes in (("orig", ()),
+                           ("halved_batch", (("t", None, 1.4),))):
+        results = {}
+        for sched in ("metronome", "default", "diktyo"):
+            cluster, wls, bg = make_snapshot("S1", n_iterations=400)
+            tc = []
+            if changes:
+                tc = [(30_000.0, j.name, 1.4) for wl in wls for j in wl.jobs]
+            with Timer() as t:
+                results[sched] = run_experiment(
+                    sched, cluster, wls, BENCH_CFG, background=bg,
+                    traffic_changes=tc)
+        me = results["metronome"]
+        for other in ("default", "diktyo"):
+            o = results[other]
+            both = set(me.sim.time_per_1000_iters_s) & set(
+                o.sim.time_per_1000_iters_s)
+            acc = 100.0 * (1 - np.mean([me.sim.time_per_1000_iters_s[j]
+                                        for j in both])
+                           / np.mean([o.sim.time_per_1000_iters_s[j]
+                                      for j in both]))
+            emit(f"fig11_{label}_accel_vs_{other}", t.us,
+                 f"accel_pct={acc:.2f};"
+                 f"gamma_me={me.sim.avg_bw_utilization:.4f};"
+                 f"gamma_other={o.sim.avg_bw_utilization:.4f}")
+
+    # --- Fig. 12: sweep the congestion latency parameter on S4/S5 ----------
+    for sid in ("S4", "S5"):
+        for tau in (10.0, 40.0, 80.0):
+            results = {}
+            for sched in ("metronome", "default", "diktyo"):
+                cluster, wls, bg = make_snapshot(sid, n_iterations=300)
+                for other in cluster.node_names:
+                    if other != "worker-a30-2":
+                        cluster.set_latency("worker-a30-2", other, tau)
+                with Timer() as t:
+                    results[sched] = run_experiment(
+                        sched, cluster, wls, BENCH_CFG, background=bg)
+            me = results["metronome"]
+            for other in ("default", "diktyo"):
+                o = results[other]
+                both = set(me.sim.time_per_1000_iters_s)
+                acc = 100.0 * (1 - np.mean(
+                    [me.sim.time_per_1000_iters_s[j] for j in both])
+                    / np.mean([o.sim.time_per_1000_iters_s[j] for j in both]))
+                emit(f"fig12_{sid}_tau{int(tau)}_vs_{other}", t.us,
+                     f"accel_pct={acc:.2f}")

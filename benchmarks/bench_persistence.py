@@ -1,0 +1,33 @@
+"""Table VI: short vs extended observation windows (gain persistence)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.metronome_testbed import make_snapshot
+from repro.core.harness import priority_split, run_experiment
+from repro.core.simulator import SimConfig
+
+from .common import Timer, emit
+
+
+def run() -> None:
+    for sid in ("S1", "S2", "S3"):
+        rows = {}
+        for label, dur, iters in (("short", 150_000.0, 400),
+                                  ("long", 600_000.0, 5000)):
+            cluster, wls, bg = make_snapshot(sid, n_iterations=iters)
+            cfg = SimConfig(duration_ms=dur, seed=3, jitter_std=0.01)
+            with Timer() as t:
+                rows[label] = (run_experiment("metronome", cluster, wls, cfg,
+                                              background=bg), wls, t)
+        res_s, wls, t = rows["short"]
+        res_l, _, _ = rows["long"]
+        hi, lo = priority_split(wls)
+
+        def agg(r, names):
+            v = [r.sim.time_per_1000_iters_s[j] for j in names]
+            return float(np.mean(v)) if v else float("nan")
+
+        emit(f"tableVI_{sid}", t.us,
+             f"lo_short={agg(res_s, lo):.2f};lo_long={agg(res_l, lo):.2f};"
+             f"hi_short={agg(res_s, hi):.2f};hi_long={agg(res_l, hi):.2f}")

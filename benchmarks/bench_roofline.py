@@ -1,0 +1,32 @@
+"""Roofline summary from the dry-run results (sections Dry-run / Roofline of
+EXPERIMENTS.md are generated from the same data)."""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun.json")
+
+
+def run() -> None:
+    if not os.path.exists(RESULTS):
+        emit("roofline_missing", 0.0, "run=repro.launch.dryrun first")
+        return
+    with open(RESULTS) as f:
+        results = json.load(f)
+    for cell in sorted(results):
+        info = results[cell]
+        if info.get("status") != "ok":
+            continue
+        r = info["roofline"]
+        total = r["compute_s"] + r["memory_s"] + r["collective_s"]
+        frac = r["compute_s"] / total if total else 0.0
+        emit(f"roofline_{cell.replace('|', '_')}",
+             info.get("compile_s", 0.0) * 1e6,
+             f"compute_s={r['compute_s']:.4f};memory_s={r['memory_s']:.4f};"
+             f"collective_s={r['collective_s']:.4f};"
+             f"bottleneck={info['bottleneck']};roofline_frac={frac:.4f};"
+             f"model_vs_hlo={info.get('model_vs_hlo_flops')}")

@@ -1,0 +1,63 @@
+"""Fig. 16: scheduler execution time vs number of contending jobs, plus the
+stop-and-wait controller's offline recalculation time (<5 s in the paper)."""
+from __future__ import annotations
+
+import time
+
+from repro.core.cluster import Cluster, Node, Resources
+from repro.core.controller import StopAndWaitController
+from repro.core.framework import SchedulingFramework
+from repro.core.scheduler import MetronomePlugin
+from repro.core.baselines import DefaultPlugin, DiktyoPlugin
+from repro.core.workload import Workload, make_job
+
+from .common import Timer, emit
+
+
+def _cluster():
+    nodes = [Node(f"n{i}", Resources(cpu=64, mem=512, gpu=8), bw_gbps=25.0)
+             for i in range(4)]
+    return Cluster(nodes)
+
+
+def run() -> None:
+    periods = [96.0, 90.0, 120.0, 245.0, 80.0]
+    for n_existing in range(0, 5):
+        for plugin_name, plugin_fn in (
+            ("metronome", lambda c: MetronomePlugin(controller=c)),
+            ("default", lambda c: DefaultPlugin()),
+            ("diktyo", lambda c: DiktyoPlugin()),
+        ):
+            cluster = _cluster()
+            ctrl = StopAndWaitController()
+            fw = SchedulingFramework(cluster, plugin_fn(ctrl))
+            for i in range(n_existing):
+                j = make_job(f"bg-{i}", n_tasks=2, period_ms=periods[i],
+                             duty=0.45, bw_gbps=20.0)
+                fw.schedule_workload(Workload(name=j.name, jobs=[j]))
+            new = make_job("new", n_tasks=2, period_ms=96.0, duty=0.45,
+                           bw_gbps=20.0)
+            reps = 5
+            t0 = time.perf_counter()
+            for r in range(reps):
+                for t in new.tasks:
+                    t.node = None
+                wl = Workload(name=f"new-{r}", jobs=[new])
+                fw.schedule_workload(wl)
+                fw.evict_job(new)
+            us = (time.perf_counter() - t0) / reps * 1e6
+            emit(f"fig16_sched_{plugin_name}_{n_existing}jobs", us,
+                 f"ms_per_pod={us/2/1000:.2f}")
+        # controller offline recalculation time at this contention level
+        cluster = _cluster()
+        ctrl = StopAndWaitController()
+        fw = SchedulingFramework(cluster, MetronomePlugin(controller=ctrl))
+        for i in range(n_existing + 1):
+            j = make_job(f"bg-{i}", n_tasks=2, period_ms=periods[i],
+                         duty=0.45, bw_gbps=20.0)
+            fw.schedule_workload(Workload(name=j.name, jobs=[j]))
+        ctrl.pending_recalc = list(ctrl.links.keys())
+        with Timer() as t:
+            ctrl.run_offline_recalculation(fw.registry, cluster)
+        emit(f"fig16_recalc_{n_existing + 1}jobs", t.us,
+             f"s={t.us/1e6:.3f}")

@@ -1,0 +1,32 @@
+"""Fig. 10: total completion time of a Gavel-style trace (online arrivals)."""
+from __future__ import annotations
+
+from repro.configs.metronome_testbed import MODEL_FLEET, make_snapshot
+from repro.core.harness import run_trace_experiment
+from repro.core.simulator import SimConfig
+from repro.core.trace import cluster_load, generate_trace, trace_to_jobs
+from repro.core.workload import Workload
+
+from .common import Timer, emit
+
+
+def run() -> None:
+    trace = generate_trace(MODEL_FLEET, duration_s=1800, total_gpus=13,
+                           target_load=0.85, seed=1,
+                           job_duration_range_s=(120, 240))[:10]
+    load = cluster_load(trace, 13, 1800)
+    cfg = SimConfig(duration_ms=1_200_000, seed=0, jitter_std=0.01)
+    for sched in ("metronome", "default", "diktyo", "ideal"):
+        cluster, _, _ = make_snapshot("S1")
+        jobs = trace_to_jobs(trace, MODEL_FLEET, time_scale=1.0)
+        wls = [Workload(name=j.name, jobs=[j]) for j in jobs]
+        for w in wls:
+            for j in w.jobs:
+                j.workload = w.name
+                for t in j.tasks:
+                    t.workload = w.name
+        with Timer() as t:
+            res = run_trace_experiment(sched, cluster, wls, cfg)
+        emit(f"fig10_tct_{sched}", t.us,
+             f"tct_s={res.sim.total_completion_ms/1e3:.1f};load={load:.2f};"
+             f"n_jobs={len(jobs)};queued_left={len(res.rejected)}")

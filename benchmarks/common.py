@@ -1,0 +1,39 @@
+"""Shared helpers for the per-table benchmarks."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.configs.metronome_testbed import SNAPSHOTS, make_snapshot
+from repro.core.harness import RunResult, priority_split, run_experiment
+from repro.core.simulator import SimConfig
+
+SCHEDULERS = ("metronome", "default", "diktyo", "ideal")
+
+BENCH_CFG = SimConfig(duration_ms=150_000.0, seed=3, jitter_std=0.01)
+
+
+def run_snapshot_all(sid: str, n_iterations: int = 400,
+                     cfg: SimConfig = BENCH_CFG,
+                     schedulers=SCHEDULERS, **kw) -> Dict[str, RunResult]:
+    out = {}
+    for sched in schedulers:
+        cluster, wls, bg = make_snapshot(sid, n_iterations=n_iterations)
+        out[sched] = run_experiment(sched, cluster, wls, cfg, background=bg,
+                                    **kw)
+        out["_workloads"] = wls
+    return out
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """The harness contract: ``name,us_per_call,derived`` CSV rows."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.us = (time.perf_counter() - self.t0) * 1e6

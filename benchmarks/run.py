@@ -1,0 +1,49 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (see each bench_* module for
+the paper artifact it reproduces; the mapping lives in DESIGN.md section 7).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from . import (bench_ablation, bench_kernels, bench_param_variation,
+               bench_persistence, bench_roofline, bench_sched_time,
+               bench_snapshots, bench_tct, bench_thresholds)
+
+ALL = {
+    "snapshots": bench_snapshots,     # Fig. 7/8 + Table V
+    "tct": bench_tct,                 # Fig. 10
+    "param_variation": bench_param_variation,  # Fig. 11/12
+    "persistence": bench_persistence,  # Table VI
+    "ablation": bench_ablation,       # Tables VII/VIII + Fig. 13
+    "thresholds": bench_thresholds,   # Fig. 14/15
+    "sched_time": bench_sched_time,   # Fig. 16
+    "kernels": bench_kernels,         # kernel micro-benches
+    "roofline": bench_roofline,       # dry-run roofline summary
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names (default: all)")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(ALL)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in names:
+        try:
+            ALL[name].run()
+        except Exception:  # noqa: BLE001 — keep the harness going
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"# FAILED benches: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

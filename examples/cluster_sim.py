@@ -1,0 +1,59 @@
+"""Full-trace cluster simulation: Metronome vs Default vs Diktyo vs Ideal.
+
+Reproduces the paper's Fig. 10 experiment shape: a Gavel-style trace of
+training jobs arrives online; each scheduler places (and Metronome
+interleaves) them; we report TCT, bandwidth utilization, and per-priority
+iteration-time ratios.
+
+Run:  PYTHONPATH=src python examples/cluster_sim.py [--jobs 10] [--seed 1]
+"""
+import argparse
+
+import numpy as np
+
+from repro.configs.metronome_testbed import MODEL_FLEET, make_snapshot
+from repro.core.harness import run_trace_experiment
+from repro.core.simulator import SimConfig
+from repro.core.trace import cluster_load, generate_trace, trace_to_jobs
+from repro.core.workload import Workload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jobs", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=1)
+    ap.add_argument("--duration-s", type=float, default=1800.0)
+    args = ap.parse_args()
+
+    trace = generate_trace(MODEL_FLEET, duration_s=args.duration_s,
+                           total_gpus=13, target_load=0.85, seed=args.seed,
+                           job_duration_range_s=(120, 240))[: args.jobs]
+    print(f"trace: {len(trace)} jobs, load="
+          f"{cluster_load(trace, 13, args.duration_s):.2f}")
+    cfg = SimConfig(duration_ms=1_200_000, seed=0, jitter_std=0.01)
+
+    rows = []
+    for sched in ("metronome", "default", "diktyo", "ideal"):
+        cluster, _, _ = make_snapshot("S1")
+        jobs = trace_to_jobs(trace, MODEL_FLEET, time_scale=1.0)
+        wls = [Workload(name=j.name, jobs=[j]) for j in jobs]
+        for w in wls:
+            for j in w.jobs:
+                j.workload = w.name
+                for t in j.tasks:
+                    t.workload = w.name
+        res = run_trace_experiment(sched, cluster, wls, cfg)
+        rows.append((sched, res.sim.total_completion_ms / 1e3,
+                     res.sim.avg_bw_utilization, res.sim.readjustments))
+    print(f"\n{'scheduler':12s} {'TCT (s)':>10s} {'avg BW util':>12s} "
+          f"{'readjusts':>10s}")
+    for sched, tct, gamma, readj in rows:
+        print(f"{sched:12s} {tct:10.1f} {gamma:12.3f} {readj:10d}")
+    me = rows[0][1]
+    de = rows[1][1]
+    print(f"\nMetronome finishes {de - me:+.1f}s relative to Default "
+          f"({100 * (1 - me / de):.1f}% faster)")
+
+
+if __name__ == "__main__":
+    main()

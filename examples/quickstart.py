@@ -1,0 +1,68 @@
+"""Quickstart: schedule two contending training jobs with Metronome.
+
+Shows the whole mechanism in one page: placement (Algorithm 1), the TDM
+circle with assigned rotations, and the resulting interleaved bandwidth
+demand (Eq. 4) vs the naive zero-shift overlap.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import geometry
+from repro.core.cluster import Cluster, Node, Resources
+from repro.core.controller import StopAndWaitController
+from repro.core.framework import SchedulingFramework
+from repro.core.scheduler import MetronomePlugin
+from repro.core.workload import HIGH, LOW, Workload, make_job
+
+
+def bar(v, cap, width=50):
+    n = int(min(v / cap, 2.0) * width / 2)
+    mark = "#" * min(n, width // 2) + "!" * max(0, n - width // 2)
+    return mark.ljust(width)
+
+
+def main():
+    nodes = [Node(f"n{i}", Resources(cpu=32, mem=256, gpu=4), bw_gbps=25.0)
+             for i in range(2)]
+    cluster = Cluster(nodes)
+    controller = StopAndWaitController()
+    fw = SchedulingFramework(cluster, MetronomePlugin(controller=controller))
+
+    hi = make_job("train-hi", n_tasks=2, period_ms=100.0, duty=0.45,
+                  bw_gbps=20.0, priority=HIGH)
+    lo = make_job("train-lo", n_tasks=2, period_ms=100.0, duty=0.45,
+                  bw_gbps=20.0, priority=LOW, submit_time_s=1.0)
+    for job in (hi, lo):
+        ok = fw.schedule_workload(Workload(name=job.name, jobs=[job]))
+        print(f"scheduled {job.name}: {ok}, placement={job.nodes_used()}")
+    controller.run_offline_recalculation(fw.registry, cluster)
+
+    print("\nassigned global offsets (ms):")
+    for j in ("train-hi", "train-lo"):
+        print(f"  {j}: {controller.job_offset_ms(j):.1f}")
+
+    pats = geometry.pattern_matrix([1, 1], [0.45, 0.45], 72)
+    bw = np.array([20.0, 20.0])
+    shift_lo = geometry.delay_to_shift_slots(
+        controller.job_offset_ms("train-lo"), 100.0)
+    for title, shifts in (("NAIVE (zero shifts) — contention:", [0, 0]),
+                          ("METRONOME (interleaved):", [0, shift_lo])):
+        d = geometry.demand(pats, bw, np.array(shifts))
+        util = geometry.link_utilization(pats, bw, np.array(shifts), 25.0)
+        ex = geometry.excess(pats, bw, np.array(shifts), 25.0)
+        print(f"\n{title}  link util={util:.2f}  excess={ex:.0f}")
+        print("  circle (72 slots, # = demand, ! = over capacity):")
+        for row in range(0, 72, 24):
+            line = "".join(
+                "!" if d[s] > 25 else ("#" if d[s] > 0 else ".")
+                for s in range(row, row + 24))
+            print(f"    [{row:2d}-{row+23:2d}] {line}")
+    print("\nscore (Eq. 18) naive:",
+          geometry.score(pats, bw, np.array([0, 0]), 25.0))
+    print("score (Eq. 18) metronome:",
+          geometry.score(pats, bw, np.array([0, shift_lo]), 25.0))
+
+
+if __name__ == "__main__":
+    main()

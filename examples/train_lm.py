@@ -1,0 +1,104 @@
+"""End-to-end training driver: the full substrate on one page.
+
+Trains a language model with the production code paths — synthetic data
+pipeline, sharded train_step (grad accumulation + remat), AdamW, async
+checkpointing with restart, and the Metronome integration (comm gate +
+iteration reporting, exactly the paper's modified-DDP hookup).
+
+Default is a ~8M-parameter model so the demo finishes in minutes on CPU;
+``--preset 100m`` selects the ~110M-parameter configuration the assignment
+names (same code path, bigger shapes — practical on real accelerators).
+
+Run:  PYTHONPATH=src python examples/train_lm.py --steps 300
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager, latest_step
+from repro.core.controller import StopAndWaitController
+from repro.data import SyntheticLM
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig
+from repro.runtime.comm_gate import CommGate, IterationReporter
+from repro.runtime.steps import build_train_step, init_train_state
+from repro.sharding import use_rules
+from repro.launch.mesh import make_host_mesh
+
+PRESETS = {
+    # ~8M params: fast CPU demo
+    "tiny": ModelConfig(name="lm-tiny", family="dense", n_layers=4,
+                        d_model=256, n_heads=4, n_kv=2, d_ff=1024,
+                        vocab=8192),
+    # ~110M params: the assignment's "~100M model" (GPT-2-small-like)
+    "100m": ModelConfig(name="lm-100m", family="dense", n_layers=12,
+                        d_model=768, n_heads=12, n_kv=4, d_ff=2048,
+                        vocab=32000),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=PRESETS, default="tiny")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--n-micro", type=int, default=2)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--crash-at", type=int, default=0,
+                    help="simulate a failure at this step (restart demo)")
+    args = ap.parse_args()
+
+    cfg = PRESETS[args.preset]
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=20, total_steps=args.steps)
+    ds = SyntheticLM(cfg.vocab, args.seq, args.batch, seed=0)
+    mesh = make_host_mesh(1, 1)
+
+    # Metronome hookup: in a multi-tenant cluster the scheduler would assign
+    # this job an offset; standalone the gate is a no-op but the code path
+    # is identical to the gated run.
+    controller = StopAndWaitController()
+    gate = CommGate(controller, job="train-lm")
+    reporter = IterationReporter(controller, "train-lm", priority=1)
+
+    with use_rules(mesh):
+        state, _ = init_train_state(cfg, opt_cfg, jax.random.PRNGKey(0))
+        from repro.models import param_count
+        print(f"model: {cfg.name}  params={param_count(state.params):,}")
+        step_fn = jax.jit(build_train_step(cfg, opt_cfg, args.n_micro))
+
+        mgr = CheckpointManager(args.ckpt_dir, keep_n=2)
+        start = 0
+        if latest_step(args.ckpt_dir) is not None:
+            state, start, _ = mgr.restore_latest(state)
+            print(f"[fault-tolerance] resumed from checkpoint at step {start}")
+
+        t_last = time.perf_counter()
+        for step in range(start, args.steps):
+            if args.crash_at and step == args.crash_at:
+                print(f"[fault-tolerance] simulated crash at step {step}; "
+                      "re-run the same command to resume")
+                return
+            batch = {k: jnp.asarray(v) for k, v in ds.batch_at(step).items()}
+            gate.wait_for_slot()
+            state, metrics = step_fn(state, batch)
+            loss = float(metrics["loss"])  # block: honest per-step timing
+            dt = time.perf_counter() - t_last
+            t_last = time.perf_counter()
+            reporter.report(dt)
+            if step % 20 == 0 or step == args.steps - 1:
+                print(f"step {step:4d}  loss {loss:.4f}  "
+                      f"lr {float(metrics['lr']):.2e}  {dt*1e3:.0f} ms/it",
+                      flush=True)
+            if (step + 1) % 100 == 0:
+                mgr.save(step + 1, state)
+        mgr.save(args.steps, state)
+        mgr.wait()
+    print("done — loss should have dropped by >1 nat from ~ln(vocab)")
+
+
+if __name__ == "__main__":
+    main()

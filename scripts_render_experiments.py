@@ -1,0 +1,81 @@
+"""Render the roofline/dry-run tables of EXPERIMENTS.md from results/*.json."""
+import json
+import sys
+
+d = json.load(open("results/dryrun.json"))
+
+
+def row(k, v):
+    r = v["roofline"]
+    rf = v.get("roofline_flash") or {}
+    tot = r["compute_s"] + r["memory_s"] + r["collective_s"]
+    mem_fl = rf.get("memory_s")
+    if mem_fl is not None:
+        totf = r["compute_s"] + mem_fl + r["collective_s"]
+        fl = f"{mem_fl:.3f}"
+        frf = f"{r['compute_s']/totf:.1%}"
+    else:
+        fl, frf = "—", "—"
+    mvh = v.get("model_vs_hlo_flops")
+    # perfect-overlap bound: compute / max(terms) — the MFU ceiling if
+    # memory and collectives fully hide behind compute (and vice versa)
+    mx = max(r["compute_s"], (mem_fl if mem_fl is not None else r["memory_s"]),
+             r["collective_s"])
+    ovl = f"{r['compute_s']/mx:.1%}" if mx else "—"
+    return (f"| {k.replace('|', ' × ')} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"{v['bottleneck']} | {mvh:.2f} | {fl} | "
+            f"{r['compute_s']/tot:.1%} | {frf} | {ovl} |"
+            if mvh is not None else "")
+
+
+hdr = ("| cell | compute s | memory s | collective s | bottleneck | "
+       "6ND/HLO | mem s (flash) | roofline frac | frac (flash) | "
+       "overlap bound |\n"
+       "|---|---|---|---|---|---|---|---|---|---|")
+
+print("### single-pod baselines (16x16)\n")
+print(hdr)
+for k in sorted(d):
+    v = d[k]
+    if v.get("status") != "ok" or "|multi" in k or k.count("|") > 2:
+        continue
+    print(row(k, v))
+
+print("\n### perf-iteration variants\n")
+print(hdr)
+for k in sorted(d):
+    v = d[k]
+    if v.get("status") != "ok" or k.count("|") <= 2:
+        continue
+    print(row(k, v))
+
+print("\n### multi-pod pass (2x16x16)\n")
+n_ok = sum(1 for k, v in d.items()
+           if "|multi" in k and v.get("status") == "ok")
+n_skip = sum(1 for k, v in d.items()
+             if "|multi" in k and v.get("status") == "skipped")
+print(f"{n_ok} compiled OK, {n_skip} skipped (long_500k on full-attention).")
+print("\n| cell | compute s | memory s | collective s | peak GB/chip |")
+print("|---|---|---|---|---|")
+for k in sorted(d):
+    v = d[k]
+    if v.get("status") != "ok" or "|multi" not in k:
+        continue
+    r = v["roofline"]
+    peak = (v["memory"]["peak_bytes"] or 0) / 1e9
+    print(f"| {k.replace('|', ' × ')} | {r['compute_s']:.3f} | "
+          f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | {peak:.1f} |")
+
+print("\n### memory analysis (single-pod, peak bytes/chip)\n")
+print("| cell | args GB | temps GB | peak GB | fits 16 GB HBM |")
+print("|---|---|---|---|---|")
+for k in sorted(d):
+    v = d[k]
+    if v.get("status") != "ok" or "|multi" in k or k.count("|") > 2:
+        continue
+    m = v["memory"]
+    peak = (m["peak_bytes"] or 0) / 1e9
+    print(f"| {k.replace('|', ' × ')} | {(m['argument_bytes'] or 0)/1e9:.1f} | "
+          f"{(m['temp_bytes'] or 0)/1e9:.1f} | {peak:.1f} | "
+          f"{'yes' if peak <= 16 else 'NO'} |")

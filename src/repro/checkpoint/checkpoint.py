@@ -1,0 +1,142 @@
+"""Fault-tolerant checkpointing: atomic, versioned, keep-N, async.
+
+Layout:  <dir>/step_<N>/{manifest.json, arrays.npz}
+Writes go to a tmp dir + os.replace (atomic on POSIX), so a crash mid-save
+never corrupts the latest checkpoint; restore skips incomplete steps.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+MANIFEST = "manifest.json"
+ARRAYS = "arrays.npz"
+
+
+def _flatten(tree) -> Tuple[List[str], List[np.ndarray], Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = [f"a{i}" for i in range(len(leaves))]
+    out = []
+    for x in leaves:
+        arr = np.asarray(x)
+        if arr.dtype.kind == "V" or arr.dtype.name in (
+                "bfloat16", "float8_e4m3fn", "float8_e5m2"):
+            # npz cannot store ml_dtypes natively; upcast losslessly to f32
+            # (restore casts back to the target tree's dtype)
+            arr = arr.astype(np.float32)
+        out.append(arr)
+    return keys, out, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree, extra: Optional[Dict] = None
+                    ) -> str:
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    keys, arrays, _ = _flatten(tree)
+    np.savez(os.path.join(tmp, ARRAYS), **dict(zip(keys, arrays)))
+    manifest = {"step": step, "n_arrays": len(arrays), "extra": extra or {},
+                "complete": True}
+    with open(os.path.join(tmp, MANIFEST), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            path = os.path.join(directory, name, MANIFEST)
+            try:
+                with open(path) as f:
+                    m = json.load(f)
+                if m.get("complete"):
+                    steps.append(int(name[5:]))
+            except (OSError, ValueError, json.JSONDecodeError):
+                continue  # skip corrupt/partial checkpoints
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, like_tree, step: Optional[int] = None
+                       ) -> Tuple[Any, int, Dict]:
+    """Restore into the structure of ``like_tree``; returns (tree, step, extra)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no complete checkpoint in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, MANIFEST)) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, ARRAYS))
+    leaves, treedef = jax.tree.flatten(like_tree)
+    assert manifest["n_arrays"] == len(leaves), \
+        f"checkpoint has {manifest['n_arrays']} arrays, tree expects {len(leaves)}"
+    restored = []
+    for i, like in enumerate(leaves):
+        arr = data[f"a{i}"]
+        dtype = like.dtype if hasattr(like, "dtype") else arr.dtype
+        restored.append(np.asarray(arr).astype(dtype, copy=False))
+    return treedef.unflatten(restored), step, manifest.get("extra", {})
+
+
+class CheckpointManager:
+    """keep-N policy + async (background thread) saving."""
+
+    def __init__(self, directory: str, keep_n: int = 3, async_save: bool = True):
+        self.directory = directory
+        self.keep_n = keep_n
+        self._pool = (concurrent.futures.ThreadPoolExecutor(max_workers=1)
+                      if async_save else None)
+        self._pending: Optional[concurrent.futures.Future] = None
+        self._lock = threading.Lock()
+
+    def save(self, step: int, tree, extra: Optional[Dict] = None) -> None:
+        # snapshot to host now, write possibly in the background
+        host_tree = jax.tree.map(np.asarray, tree)
+
+        def work():
+            save_checkpoint(self.directory, step, host_tree, extra)
+            self._gc()
+
+        if self._pool is not None:
+            self.wait()
+            with self._lock:
+                self._pending = self._pool.submit(work)
+        else:
+            work()
+
+    def wait(self) -> None:
+        with self._lock:
+            pending = self._pending
+            self._pending = None
+        if pending is not None:
+            pending.result()
+
+    def _gc(self) -> None:
+        if not os.path.isdir(self.directory):
+            return
+        steps = sorted(
+            int(n[5:]) for n in os.listdir(self.directory)
+            if n.startswith("step_") and not n.endswith(".tmp"))
+        for s in steps[:-self.keep_n]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def restore_latest(self, like_tree):
+        self.wait()
+        return restore_checkpoint(self.directory, like_tree)

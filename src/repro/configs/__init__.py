@@ -1,0 +1,50 @@
+"""Architecture configs (one module per assigned arch) + the paper testbed."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+ARCHS: List[str] = [
+    "arctic_480b",
+    "qwen2_moe_a2_7b",
+    "internlm2_20b",
+    "qwen3_14b",
+    "llama3_8b",
+    "starcoder2_15b",
+    "qwen2_vl_72b",
+    "whisper_small",
+    "recurrentgemma_2b",
+    "xlstm_125m",
+]
+
+_ALIAS = {a.replace("_", "-"): a for a in ARCHS}
+_ALIAS.update({a: a for a in ARCHS})
+# assignment ids use dashes/dots
+_ALIAS.update({
+    "arctic-480b": "arctic_480b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "internlm2-20b": "internlm2_20b",
+    "qwen3-14b": "qwen3_14b",
+    "llama3-8b": "llama3_8b",
+    "starcoder2-15b": "starcoder2_15b",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "whisper-small": "whisper_small",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "xlstm-125m": "xlstm_125m",
+})
+
+
+def get_config(arch: str):
+    """Load the full-size ModelConfig for an architecture id."""
+    mod = importlib.import_module(f"repro.configs.{_ALIAS[arch]}")
+    return mod.config()
+
+
+def get_smoke_config(arch: str):
+    """Reduced same-family config for CPU smoke tests."""
+    mod = importlib.import_module(f"repro.configs.{_ALIAS[arch]}")
+    return mod.smoke_config()
+
+
+def canonical(arch: str) -> str:
+    return _ALIAS[arch]

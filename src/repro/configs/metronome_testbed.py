@@ -1,0 +1,131 @@
+"""The paper's testbed fleet and snapshots (sections IV-A, Table III/IV).
+
+Traffic parameters (period / duty / bandwidth) are calibrated against the
+paper's own measurements where the text pins them down:
+
+  * Table VI gives Metronome's (near-ideal) time per 1,000 iterations per
+    snapshot: S1 ~ 422 s, S2 ~ 88/99 s, S3 ~ 124/103 s, S4 ~ 533 s,
+    S5 ~ 112/430 s  -> ideal iteration times in ms below.
+  * section IV-D: in S3, after period doubling of VGG19, WideResNet101 is
+    35 ms shorter; G_T = 5 ms, E_T = 10 %.
+  * snapshot 0 (GPT-2 + GoogLeNet) is INCOMPATIBLE: the summed communication
+    phases exceed the LCM period.
+
+Where the paper gives no number we use plausible values for A30-class DP/MP
+training on 25 GbE (duty cycles 0.2-0.6, bandwidth demand 8-24 Gbps).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from repro.core.cluster import Cluster, make_testbed_cluster
+from repro.core.simulator import BackgroundFlow
+from repro.core.workload import HIGH, LOW, Job, Workload, make_job
+
+# model -> traffic; period_ms = ideal iteration time (contention free)
+MODEL_FLEET: Dict[str, dict] = {
+    "VGG11":          dict(period_ms=80.0,  duty=0.40, bw_gbps=20.0, n_tasks=2),
+    # FT-VGG16 period chosen so S2 exercises the E_T idle-injection path:
+    # 96 - 90 = 6 ms mismatch (> G_T = 5, <= E_T = 10% of 90) -> inject 6 ms
+    "FT-VGG16":       dict(period_ms=90.0,  duty=0.48, bw_gbps=25.0, n_tasks=2),
+    "FT-VGG19":       dict(period_ms=96.0,  duty=0.48, bw_gbps=25.0, n_tasks=2),
+    "FT-VGG19-S3":    dict(period_ms=245.0, duty=0.30, bw_gbps=22.0, n_tasks=2),
+    "Pre-VGG19":      dict(period_ms=418.0, duty=0.30, bw_gbps=22.0, n_tasks=2),
+    "ResNet18":       dict(period_ms=60.0,  duty=0.25, bw_gbps=12.0, n_tasks=2),
+    "ResNet50":       dict(period_ms=120.0, duty=0.30, bw_gbps=15.0, n_tasks=2),
+    "FT-ResNet152":   dict(period_ms=110.0, duty=0.25, bw_gbps=18.0, n_tasks=2),
+    "FT-WideResNet101": dict(period_ms=120.0, duty=0.35, bw_gbps=20.0, n_tasks=2),
+    "GoogLeNet":      dict(period_ms=70.0,  duty=0.20, bw_gbps=8.0,  n_tasks=2),
+    "GoogLeNet-S0":   dict(period_ms=70.0,  duty=0.60, bw_gbps=10.0, n_tasks=2),
+    "DenseNet201":    dict(period_ms=160.0, duty=0.25, bw_gbps=12.0, n_tasks=2),
+    "AlexNet":        dict(period_ms=45.0,  duty=0.50, bw_gbps=24.0, n_tasks=2),
+    "GPT-1":          dict(period_ms=424.0, duty=0.17, bw_gbps=20.0, n_tasks=2),
+    "GPT-2":          dict(period_ms=600.0, duty=0.50, bw_gbps=22.0, n_tasks=2),
+    # BERT's per-pod demand (10G) fits one 25G link twice -> the S4 pair is
+    # "strongly compatible" (paper IV-C); congestion avoidance is the gain.
+    "BERT":           dict(period_ms=527.0, duty=0.40, bw_gbps=10.0, n_tasks=2),
+}
+
+# 13 "real" models of Table III (the -S0/-S3 variants are batch variants)
+TABLE_III_MODELS: List[str] = [
+    "VGG11", "FT-VGG16", "FT-VGG19", "ResNet18", "ResNet50", "FT-ResNet152",
+    "FT-WideResNet101", "GoogLeNet", "DenseNet201", "AlexNet",
+    "GPT-1", "GPT-2", "BERT",
+]
+
+
+def _wl(name: str, jobs: List[Job]) -> Workload:
+    for j in jobs:
+        j.workload = name
+        for t in j.tasks:
+            t.workload = name
+    return Workload(name=name, jobs=jobs)
+
+
+def make_snapshot(sid: str, n_iterations: int = 400
+                  ) -> Tuple[Cluster, List[Workload], List[BackgroundFlow]]:
+    """Snapshot compositions of Table IV.  '*' jobs are high priority;
+    otherwise earlier-deployed jobs are higher priority (paper note)."""
+    cluster = make_testbed_cluster()
+    bg: List[BackgroundFlow] = []
+
+    def job(name, model, prio, submit=0.0):
+        f = MODEL_FLEET[model]
+        return make_job(name, n_tasks=f["n_tasks"], period_ms=f["period_ms"],
+                        duty=f["duty"], bw_gbps=f["bw_gbps"], priority=prio,
+                        n_iterations=n_iterations, submit_time_s=submit,
+                        model=model)
+
+    if sid == "S0":  # incompatible pair (section IV-B1, last paragraph)
+        wls = [
+            _wl("wl-gpt2", [job("gpt2-0", "GPT-2", HIGH)]),
+            _wl("wl-googlenet", [job("googlenet-0", "GoogLeNet-S0", LOW, 0.001)]),
+        ]
+    elif sid == "S1":  # DP HPO training job x3 (same workload)
+        wls = [_wl("wl-hpo-vgg19", [
+            job("vgg19-hpo-0", "Pre-VGG19", HIGH),
+            job("vgg19-hpo-1", "Pre-VGG19", LOW, 0.001),
+            job("vgg19-hpo-2", "Pre-VGG19", LOW, 0.002),
+        ])]
+    elif sid == "S2":  # FT-VGG16 + FT-VGG19*
+        wls = [
+            _wl("wl-vgg19", [job("vgg19-ft", "FT-VGG19", HIGH)]),
+            _wl("wl-vgg16", [job("vgg16-ft", "FT-VGG16", LOW, 0.001)]),
+        ]
+    elif sid == "S3":  # FT-WideResNet101 + FT-VGG19*, 2:1 period ratio
+        wls = [
+            _wl("wl-vgg19s3", [job("vgg19-ft", "FT-VGG19-S3", HIGH)]),
+            _wl("wl-wrn", [job("wrn101-ft", "FT-WideResNet101", LOW, 0.001)]),
+        ]
+    elif sid == "S4":  # Pre-BERT x2 with a congested link
+        wls = [_wl("wl-hpo-bert", [
+            job("bert-0", "BERT", HIGH),
+            job("bert-1", "BERT", LOW, 0.001),
+        ])]
+        _congest(cluster, bg, "worker-a30-2", iperf_gbps=16.0, tau_ms=40.0)
+    elif sid == "S5":  # FT-ResNet152 + Pre-GPT-1*, congested link, DP + MP
+        wls = [
+            _wl("wl-gpt1", [job("gpt1-pre", "GPT-1", HIGH)]),
+            _wl("wl-rn152", [job("rn152-ft", "FT-ResNet152", LOW, 0.001)]),
+        ]
+        _congest(cluster, bg, "worker-a30-2", iperf_gbps=16.0, tau_ms=40.0)
+    else:
+        raise ValueError(f"unknown snapshot {sid!r}")
+    return cluster, wls, bg
+
+
+def _congest(cluster: Cluster, bg: List[BackgroundFlow], node: str,
+             iperf_gbps: float, tau_ms: float) -> None:
+    """iPerf3-style congestion (section IV-A 'Traces'): an unregulated flow
+    occupies the node's host link; the cluster manager lowers the node's
+    ALLOCATABLE bandwidth accordingly (NodeBandwidth CR, section III-A) and
+    the latency monitor reports a high tau to that node."""
+    bg.append(BackgroundFlow(node=node, rate_gbps=iperf_gbps))
+    n = cluster.node(node)
+    n.allocatable_gbps = max(0.0, n.bw_gbps - iperf_gbps)
+    for other in cluster.node_names:
+        if other != node:
+            cluster.set_latency(node, other, tau_ms)
+
+
+SNAPSHOTS = ("S1", "S2", "S3", "S4", "S5")

@@ -1,0 +1,17 @@
+# The paper's primary contribution: the Metronome scheduling mechanism.
+#   geometry  — TDM circle abstraction (Eqs. 1-6, 9)
+#   scoring   — rotation-scheme enumeration (Eq. 18, stages 1 & 3)
+#   framework — K8s-scheduling-framework analogue (extension points)
+#   scheduler — Algorithm 1 (MetronomePlugin)
+#   controller— stop-and-wait controller (global offset, recalc, regulation)
+#   baselines — Default / Diktyo / Exclusive
+#   simulator — event-driven fluid-flow cluster simulator
+#   trace     — Gavel-style workload generator
+#   harness   — scheduler -> controller -> simulator glue
+from . import (baselines, cluster, controller, framework, geometry, harness,
+               scheduler, scoring, simulator, trace, workload)
+
+__all__ = [
+    "baselines", "cluster", "controller", "framework", "geometry", "harness",
+    "scheduler", "scoring", "simulator", "trace", "workload",
+]

@@ -1,0 +1,148 @@
+"""Cluster model: nodes, host links, latency topology.
+
+Mirrors the paper's CRDs:
+  - NodeBandwidth  -> :class:`Node` (capacity + deployed pods)
+  - NetworkTopology-> :class:`Cluster.latency` (tau_{x,y} matrix)
+
+Per the paper's Eq. (14) simplification (1:1 oversubscription), contention
+is modeled on *host links* only: every node owns one host link of capacity
+``bw_gbps``; inter-switch links are never the bottleneck.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Resources:
+    """Multi-dimensional resource vector (paper's r_p^s, R^s(n))."""
+
+    cpu: float = 0.0
+    mem: float = 0.0  # GB
+    gpu: float = 0.0  # logical GPUs (MIG slices in the testbed)
+
+    def fits_in(self, other: "Resources") -> bool:
+        return self.cpu <= other.cpu and self.mem <= other.mem and self.gpu <= other.gpu
+
+    def __add__(self, other: "Resources") -> "Resources":
+        return Resources(self.cpu + other.cpu, self.mem + other.mem, self.gpu + other.gpu)
+
+    def __sub__(self, other: "Resources") -> "Resources":
+        return Resources(self.cpu - other.cpu, self.mem - other.mem, self.gpu - other.gpu)
+
+
+@dataclasses.dataclass
+class Node:
+    """A worker node and its host link (NodeBandwidth CR)."""
+
+    name: str
+    capacity: Resources
+    bw_gbps: float  # physical host-link bandwidth capacity B_l(n)
+    # NodeBandwidth CR: the manager may lower the ALLOCATABLE bandwidth to
+    # account for reserved/unregulated traffic (paper section III-A); the
+    # schedulers see this value, the fluid simulator uses the physical one.
+    allocatable_gbps: Optional[float] = None
+    # pods deployed on this node (pod uid -> bandwidth demand in Gbps)
+    pods: Dict[str, float] = dataclasses.field(default_factory=dict)
+    allocated: Resources = dataclasses.field(default_factory=Resources)
+
+    @property
+    def alloc_bw(self) -> float:
+        return self.bw_gbps if self.allocatable_gbps is None else self.allocatable_gbps
+
+    @property
+    def free(self) -> Resources:
+        return self.capacity - self.allocated
+
+    def allocate(self, uid: str, req: Resources, bw_gbps: float) -> None:
+        self.pods[uid] = bw_gbps
+        self.allocated = self.allocated + req
+
+    def release(self, uid: str, req: Resources) -> None:
+        if uid in self.pods:
+            del self.pods[uid]
+            self.allocated = self.allocated - req
+
+
+class Cluster:
+    """A set of nodes plus the latency matrix tau (NetworkTopology CR)."""
+
+    def __init__(self, nodes: List[Node], latency_ms: Optional[np.ndarray] = None):
+        self.nodes: Dict[str, Node] = {n.name: n for n in nodes}
+        self.node_names: List[str] = [n.name for n in nodes]
+        self._index = {name: i for i, name in enumerate(self.node_names)}
+        n = len(nodes)
+        if latency_ms is None:
+            # default: uniform 1ms between distinct nodes, 1 on the diagonal
+            # (the paper defines tau_{x,x} = 1)
+            latency_ms = np.ones((n, n), dtype=np.float64)
+        self.latency = np.asarray(latency_ms, dtype=np.float64)
+        assert self.latency.shape == (n, n)
+
+    # -- helpers -----------------------------------------------------------
+    def node(self, name: str) -> Node:
+        return self.nodes[name]
+
+    def index(self, name: str) -> int:
+        return self._index[name]
+
+    def tau(self, a: str, b: str) -> float:
+        return float(self.latency[self._index[a], self._index[b]])
+
+    @property
+    def b_max(self) -> float:
+        """B^max — maximum host-link capacity across the cluster."""
+        return max(n.bw_gbps for n in self.nodes.values())
+
+    def set_latency(self, a: str, b: str, ms: float) -> None:
+        i, j = self._index[a], self._index[b]
+        self.latency[i, j] = ms
+        self.latency[j, i] = ms
+
+    def copy(self) -> "Cluster":
+        nodes = [
+            Node(
+                name=n.name,
+                capacity=dataclasses.replace(n.capacity),
+                bw_gbps=n.bw_gbps,
+                allocatable_gbps=n.allocatable_gbps,
+                pods=dict(n.pods),
+                allocated=dataclasses.replace(n.allocated),
+            )
+            for n in self.nodes.values()
+        ]
+        return Cluster(nodes, self.latency.copy())
+
+
+def make_testbed_cluster() -> Cluster:
+    """The paper's Fig. 4 testbed: 3x A30 workers @25G + 1x T4 worker @10G.
+
+    Each A30 is MIG-sliced into 4 logical GPUs.
+    """
+    nodes = [
+        Node("worker-a30-0", Resources(cpu=32, mem=1024, gpu=4), bw_gbps=25.0),
+        Node("worker-a30-1", Resources(cpu=32, mem=1024, gpu=4), bw_gbps=25.0),
+        Node("worker-a30-2", Resources(cpu=32, mem=1024, gpu=4), bw_gbps=25.0),
+        Node("worker-t4-0", Resources(cpu=20, mem=32, gpu=1), bw_gbps=10.0),
+    ]
+    lat = np.ones((4, 4))
+    # paper introduces a congested node with a high-latency link via iPerf3;
+    # benchmarks override this as needed.
+    return Cluster(nodes, lat)
+
+
+def make_tpu_host_cluster(n_hosts: int = 8, bw_gbps: float = 25.0,
+                          chips_per_host: int = 4) -> Cluster:
+    """TPU-adapted cluster: v5e hosts (4 chips each) with DCN uplinks.
+
+    Metronome schedules training jobs onto hosts; "gpu" counts map to TPU
+    chips. See DESIGN.md section 2.
+    """
+    nodes = [
+        Node(f"host-{i}", Resources(cpu=112, mem=384, gpu=chips_per_host), bw_gbps=bw_gbps)
+        for i in range(n_hosts)
+    ]
+    return Cluster(nodes)

@@ -1,0 +1,364 @@
+"""The Metronome stop-and-wait controller — paper section III-C.
+
+Three duties:
+  1. **Global offset**: per-link rotation schemes arrive from the scheduler;
+     jobs spanning several links need consistent time-shifts. We traverse the
+     job-link affinity graph (Cassini-style) anchored at the *highest
+     priority* job (the paper's difference vs Cassini's random reference).
+  2. **Offline recalculation**: when SkipPhaseThree == 0, re-run the
+     exhaustive 3rd-stage search (maximize Psi among perfect-score interval
+     midpoints) and update the scheme.
+  3. **Continuous regulation**: monitor per-job iteration times; within a
+     window of 10 iterations, if a job exceeds ``A_T`` x baseline more than
+     ``O_T`` times, pause LOW priority jobs to realign their communication
+     phases. High priority jobs are never touched.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import networkx as nx
+import numpy as np
+
+from . import geometry, scoring
+from .cluster import Cluster
+from .framework import TaskRegistry
+from .geometry import DI_PRE
+from .scheduler import LinkScheme, ReserveMessage
+from .workload import HIGH, Task, TrafficSpec
+
+MONITOR_WINDOW = 10  # fixed time window (iterations) — paper section III-C
+
+
+@dataclasses.dataclass
+class RealignAction:
+    """Instruction to the node agent: pause a low-priority job."""
+
+    job: str
+    reason: str  # 'drift' | 'traffic_change'
+
+
+@dataclasses.dataclass
+class LinkState:
+    """Current scheme on one host link (node)."""
+
+    scheme: LinkScheme
+    optimal: bool  # False until offline recalculation has run
+
+
+class StopAndWaitController:
+    def __init__(
+        self,
+        *,
+        a_t: float = 1.10,  # iteration-time factor threshold A_T
+        o_t: int = 5,  # occurrence threshold O_T within the window
+        di_pre: int = DI_PRE,
+        recalc_hook: Optional[Callable[[str], None]] = None,
+        phase_monitor: bool = False,
+    ) -> None:
+        self.a_t = a_t
+        self.o_t = o_t
+        self.di_pre = di_pre
+        self.links: Dict[str, LinkState] = {}  # node name -> state
+        self.global_offsets_ms: Dict[str, float] = {}
+        self.injected_ms: Dict[str, float] = {}  # per-job E_T idle injection
+        self._history: Dict[str, collections.deque] = {}
+        self._baseline_ms: Dict[str, float] = {}
+        self._priorities: Dict[str, int] = {}
+        self.readjust_count = 0
+        self.recalc_count = 0
+        self.pending_recalc: List[str] = []
+        self.recalc_hook = recalc_hook
+        self.phase_monitor = phase_monitor
+        self._phase_strikes: Dict[str, int] = {}
+        self._last_phase: Dict[str, float] = {}  # folded drift per job (ms)
+
+    # ------------------------------------------------------------- scheduling
+    def on_schedule(self, cluster: Cluster, registry: TaskRegistry,
+                    msg: ReserveMessage) -> None:
+        """Receive SEND(Shifts, SkipPhaseThree, P_l(n*)) from the scheduler."""
+        if msg.scheme is not None:
+            self.links[msg.node] = LinkState(scheme=msg.scheme,
+                                             optimal=msg.skip_phase_three)
+            for j, inj in msg.scheme.injected_ms.items():
+                if inj > 0:
+                    self.injected_ms[j] = inj
+            if not msg.skip_phase_three:
+                self.pending_recalc.append(msg.node)
+        for jname, job in registry.jobs.items():
+            self._priorities[jname] = job.priority
+        self._recompute_global_offsets()
+        # offline recalculation is delegated (the paper decouples it from the
+        # scheduling fast path); callers may run run_offline_recalculation()
+        # asynchronously or via the hook.
+        if self.recalc_hook is not None:
+            while self.pending_recalc:
+                self.recalc_hook(self.pending_recalc.pop())
+
+    def on_evict(self, node: str, pod: Task) -> None:
+        state = self.links.get(node)
+        if state is not None and pod.job in state.scheme.jobs:
+            idx = state.scheme.jobs.index(pod.job)
+            state.scheme.jobs.pop(idx)
+            state.scheme.shifts_slots = np.delete(state.scheme.shifts_slots, idx)
+            state.scheme.muls = np.delete(state.scheme.muls, idx)
+            if not state.scheme.jobs:
+                del self.links[node]
+        self._recompute_global_offsets()
+
+    # ---------------------------------------------------------- global offset
+    def _recompute_global_offsets(self) -> None:
+        """Traverse the affinity graph; reference = highest-priority job.
+
+        Edge (job_a, job_b) on link l implies a *relative* time shift
+        delta = shift_b - shift_a (ms on that link's base circle). A BFS from
+        the reference (offset 0) assigns each job a global offset; Eq. 17
+        consistency across links is guaranteed by the scheduler's loop filter.
+        """
+        g = nx.Graph()
+        link_shift_ms: Dict[Tuple[str, str], float] = {}
+        for node, state in self.links.items():
+            sch = state.scheme
+            delays = geometry.shifts_to_delay_ms(sch.shifts_slots, sch.base_ms,
+                                                 self.di_pre)
+            for j, d in zip(sch.jobs, delays):
+                link_shift_ms[(node, j)] = float(d)
+                g.add_node(j)
+            for i in range(len(sch.jobs)):
+                for k in range(i + 1, len(sch.jobs)):
+                    a, b = sch.jobs[i], sch.jobs[k]
+                    rel = link_shift_ms[(node, b)] - link_shift_ms[(node, a)]
+                    g.add_edge(a, b, rel=rel, src=a)
+
+        offsets: Dict[str, float] = {}
+        for comp in nx.connected_components(g):
+            comp = list(comp)
+            # reference: highest priority, ties -> arbitrary-but-stable
+            ref = sorted(comp, key=lambda j: (-self._priorities.get(j, 0), j))[0]
+            offsets[ref] = 0.0
+            for u, v in nx.bfs_edges(g, ref):
+                rel = g[u][v]["rel"]
+                if g[u][v]["src"] != u:
+                    rel = -rel
+                offsets[v] = offsets[u] + rel
+        # normalize: reference stays 0; negative offsets wrap onto the circle
+        self.global_offsets_ms = offsets
+
+    def job_offset_ms(self, job: str) -> float:
+        base = 0.0
+        for state in self.links.values():
+            if job in state.scheme.jobs:
+                base = state.scheme.base_ms
+                break
+        off = self.global_offsets_ms.get(job, 0.0)
+        if base > 0:
+            off = off % base
+        return off
+
+    def job_alignment(self, job: str) -> Optional[Tuple[float, float]]:
+        """(offset_ms, effective_period_ms) for aligning the job's comm
+        phases on the unified circle, or None if the job is unconstrained.
+
+        The job's communication phases must start at absolute times
+        ``t ≡ offset (mod period_eff)`` where period_eff = T_l / mul_p.
+        """
+        for state in self.links.values():
+            sch = state.scheme
+            if job in sch.jobs:
+                mul = int(sch.muls[sch.jobs.index(job)])
+                period_eff = sch.base_ms / max(mul, 1)
+                off = self.global_offsets_ms.get(job, 0.0)
+                # track the reference job's measured drift: alignment is
+                # relative (common-mode fleet drift must not be fought).
+                # Only under the experimental phase monitor — the paper's
+                # iteration-time rule realigns to absolute offsets.
+                if self.phase_monitor:
+                    ref = sch.ref_job
+                    if ref and ref != job:
+                        off += self._last_phase.get(ref, 0.0)
+                return off % period_eff, period_eff
+        return None
+
+    # ---------------------------------------------------- offline recalculation
+    def run_offline_recalculation(
+        self, registry: TaskRegistry, cluster: Cluster
+    ) -> int:
+        """Process pending SkipPhaseThree==0 links: exhaustive 3rd stage."""
+        done = 0
+        while self.pending_recalc:
+            node = self.pending_recalc.pop()
+            state = self.links.get(node)
+            if state is None:
+                continue
+            sch = state.scheme
+            duties, bws = self._link_traffic(registry, sch)
+            patterns = geometry.pattern_matrix(sch.muls, duties, self.di_pre)
+            ref_index = sch.jobs.index(sch.ref_job) if sch.ref_job in sch.jobs else 0
+            result = scoring.find_optimal_rotation(
+                patterns, bws, cluster.node(node).alloc_bw, sch.muls,
+                ref_index, self.di_pre,
+            )
+            sch.shifts_slots = result.shifts
+            sch.score = result.score
+            state.optimal = True
+            self.recalc_count += 1
+            done += 1
+        self._recompute_global_offsets()
+        return done
+
+    def _link_traffic(self, registry: TaskRegistry, sch: LinkScheme
+                      ) -> Tuple[List[float], List[float]]:
+        duties: List[float] = []
+        bws: List[float] = []
+        for idx, j in enumerate(sch.jobs):
+            tasks = registry.job_tasks(j)
+            spec = tasks[0].traffic if tasks else TrafficSpec(100.0, 0.3, 1.0)
+            eff_period = sch.base_ms / max(int(sch.muls[idx]), 1)
+            duties.append(min(1.0, spec.comm_ms / eff_period))
+            bws.append(sum(t.traffic.bw_gbps for t in tasks if t.node is not None))
+        return duties, bws
+
+    # ------------------------------------------------------ continuous monitor
+    def set_baseline(self, job: str, baseline_ms: float, priority: int) -> None:
+        """Baseline = ideal contention-free iteration time (+ injected idle)."""
+        self._baseline_ms[job] = baseline_ms + self.injected_ms.get(job, 0.0)
+        self._priorities[job] = priority
+        self._history[job] = collections.deque(maxlen=MONITOR_WINDOW)
+
+    @staticmethod
+    def _fold(err: float, pe: float) -> float:
+        return ((err + pe / 2.0) % pe) - pe / 2.0
+
+    def report_phase_error(self, job: str, error_ms: float,
+                           period_eff_ms: float) -> List[RealignAction]:
+        """BEYOND-PAPER (DESIGN.md section 11): agents also report the comm
+        phase error vs the assigned offset. Sub-A_T partial overlaps drift
+        forever under the paper's iteration-time rule; realigning when the
+        RELATIVE error vs the link's reference job exceeds ~2 circle slots
+        restores the cushion before it costs iteration time. The whole
+        fleet drifts common-mode (iterations average above the ideal
+        period), so only reference-relative error matters — absolute error
+        would thrash.
+
+        EXPERIMENTAL (default off): measured on S1-S5, chasing the
+        reference's drift with one-report-old data lags the actual phase by
+        ~one period of drift, so the realign pauses cost low-priority jobs
+        more than the restored cushion saves (S2 lo +10% vs +2% under the
+        paper's iteration-time rule). A drift-rate predictor would be
+        needed to make this win; the paper-faithful monitor remains the
+        default."""
+        self._last_phase[job] = self._fold(error_ms, period_eff_ms)
+        if not self.phase_monitor:
+            return []
+        ref = self._ref_of(job)
+        if ref is None or ref == job:
+            return []
+        rel = self._fold(
+            self._last_phase[job] - self._last_phase.get(ref, 0.0),
+            period_eff_ms)
+        tol = 2.0 * period_eff_ms * max(int(self._link_mul(job)), 1) / self.di_pre
+        if abs(rel) <= tol:
+            self._phase_strikes[job] = 0
+            return []
+        self._phase_strikes[job] = self._phase_strikes.get(job, 0) + 1
+        if self._phase_strikes[job] < 3:  # debounce transient jitter
+            return []
+        self._phase_strikes[job] = 0
+        actions = self._realign_actions(job)
+        if actions:
+            self.readjust_count += 1
+            for a in actions:
+                if a.job in self._history:
+                    self._history[a.job].clear()
+        return actions
+
+    def _ref_of(self, job: str) -> Optional[str]:
+        for state in self.links.values():
+            sch = state.scheme
+            if job in sch.jobs:
+                return sch.ref_job or None
+        return None
+
+    def _link_mul(self, job: str) -> int:
+        for state in self.links.values():
+            sch = state.scheme
+            if job in sch.jobs:
+                return int(sch.muls[sch.jobs.index(job)])
+        return 1
+
+    def report_iteration(self, job: str, iter_ms: float) -> List[RealignAction]:
+        """DDP/DeepSpeed-style iteration report. Returns realign actions when
+        the A_T/O_T drift rule trips."""
+        if job not in self._history:
+            self.set_baseline(job, iter_ms, self._priorities.get(job, 0))
+            return []
+        hist = self._history[job]
+        hist.append(iter_ms)
+        base = self._baseline_ms.get(job, iter_ms)
+        n_slow = sum(1 for x in hist if x > self.a_t * base)
+        if n_slow > self.o_t:
+            hist.clear()
+            actions = self._realign_actions(job)
+            if actions:
+                self.readjust_count += 1
+                # realignment perturbs every affected job's next iterations;
+                # restart their windows so the pauses themselves don't trip
+                # the rule again
+                for a in actions:
+                    if a.job in self._history:
+                        self._history[a.job].clear()
+            return actions
+        return []
+
+    def _realign_actions(self, job: str) -> List[RealignAction]:
+        """Pause every LOW priority job sharing a link with ``job`` (including
+        itself if low priority); high priority jobs are never paused.
+
+        Realignment only makes sense where an interleave actually exists:
+        links whose best scheme is imperfect (unavoidable contention, the
+        SkipPhaseThree case 2 of the paper) are left alone — pausing cannot
+        restore a separation that never existed."""
+        affected: List[str] = []
+        for state in self.links.values():
+            sch = state.scheme
+            if job in sch.jobs and sch.score >= 100.0 - 1e-6:
+                affected.extend(sch.jobs)
+        actions = []
+        for j in sorted(set(affected)):
+            if self._priorities.get(j, 0) != HIGH:
+                actions.append(RealignAction(job=j, reason="drift"))
+        return actions
+
+    # ----------------------------------------------------- traffic-change path
+    def report_traffic_change(self, registry: TaskRegistry, cluster: Cluster,
+                              job: str, new_spec: TrafficSpec) -> None:
+        """Duty-cycle / period change (batch-size change, congestion onset):
+        update CRs and recalculate rotation angles (paper section III-C)."""
+        for t in registry.job_tasks(job):
+            t.traffic = dataclasses.replace(new_spec)
+        for node, state in self.links.items():
+            if job in state.scheme.jobs:
+                # re-unify periods for this link and recalc
+                jobs = state.scheme.jobs
+                periods, prios = [], []
+                for j in jobs:
+                    tasks = registry.job_tasks(j)
+                    periods.append(tasks[0].traffic.period_ms if tasks else 100.0)
+                    prios.append(self._priorities.get(j, 0))
+                unified = geometry.unify_periods(periods, prios)
+                state.scheme.base_ms = unified.base_ms
+                state.scheme.muls = unified.muls
+                state.scheme.injected_ms = {
+                    j: float(unified.injected_ms[i]) for i, j in enumerate(jobs)
+                }
+                self.pending_recalc.append(node)
+        self.run_offline_recalculation(registry, cluster)
+        if job in self._history:
+            self._history[job].clear()
+        # baseline must track the new traffic
+        tasks = registry.job_tasks(job)
+        if tasks:
+            self.set_baseline(job, tasks[0].traffic.period_ms,
+                              self._priorities.get(job, 0))

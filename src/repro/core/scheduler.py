@@ -1,0 +1,309 @@
+"""The Metronome scheduler plugin — Algorithm 1 of the paper.
+
+Implements the five extension points:
+
+  PreFilter      : latency score Delta_n per node + resource caching
+  Filter         : dependency-loop, CPU/MEM/GPU and bandwidth (Eq. 13-14)
+  Score          : Eq. 18 over rotation schemes (1st opt. stage + Eqs. 15-17)
+  NormalizeScore : Eq. 19 latency tie-break (2nd opt. stage)
+  Reserve        : state update + SEND(shifts, SkipPhaseThree) to controller
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import networkx as nx
+import numpy as np
+
+from . import geometry, scoring
+from .cluster import Cluster
+from .framework import ScheduleContext, SchedulerPlugin, TaskRegistry
+from .geometry import DI_PRE
+from .workload import Task
+
+PERFECT = 100.0
+
+
+@dataclasses.dataclass
+class LinkScheme:
+    """Result of the Score phase for one candidate node's host link."""
+
+    jobs: List[str]  # job order used in the rotation problem
+    shifts_slots: np.ndarray  # theta per job (slots)
+    base_ms: float
+    muls: np.ndarray
+    score: float
+    early_return: bool
+    injected_ms: Dict[str, float]  # E_T idle injection per job
+    ref_job: str = ""
+
+
+@dataclasses.dataclass
+class ReserveMessage:
+    """What Reserve SENDs to the stop-and-wait controller (Alg. 1 line 40)."""
+
+    node: str
+    scheme: Optional[LinkScheme]
+    shifts_ms: Dict[str, float]
+    skip_phase_three: bool
+
+
+class MetronomePlugin(SchedulerPlugin):
+    name = "metronome"
+
+    def __init__(
+        self,
+        controller=None,
+        *,
+        g_t_ms: float = 5.0,
+        e_t_frac: float = 0.10,
+        di_pre: int = DI_PRE,
+        rotation_mode: str = "intermediate",  # 'compact' = stage-3 ablation
+    ) -> None:
+        self.controller = controller
+        self.g_t_ms = g_t_ms
+        self.e_t_frac = e_t_frac
+        self.di_pre = di_pre
+        self.rotation_mode = rotation_mode
+        self.messages: List[ReserveMessage] = []
+
+    # ------------------------------------------------------------------ utils
+    def _node_jobs(self, cluster: Cluster, node_name: str,
+                   registry: TaskRegistry, extra: Optional[Task] = None
+                   ) -> Dict[str, List[Task]]:
+        """Group the node's bandwidth-consuming pods by job (Eq. 17 ties tasks
+        of one job to a single rotation)."""
+        groups: Dict[str, List[Task]] = {}
+        for t in registry.deployed_on(node_name):
+            if not t.low_comm:
+                groups.setdefault(t.job, []).append(t)
+        if extra is not None and not extra.low_comm:
+            groups.setdefault(extra.job, []).append(extra)
+        return groups
+
+    def _job_bw(self, tasks: List[Task]) -> float:
+        """Aggregate host-link demand of one job's pods on this node."""
+        return sum(t.traffic.bw_gbps for t in tasks)
+
+    def _priority_order(self, registry: TaskRegistry, jobs: Sequence[str]) -> List[str]:
+        """Sort jobs by (priority desc, deployment order asc)."""
+        def key(j: str):
+            job = registry.jobs.get(j)
+            prio = job.priority if job else 0
+            sub = job.submit_time_s if job else 0.0
+            return (-prio, sub, j)
+        return sorted(jobs, key=key)
+
+    # -------------------------------------------------------------- PreFilter
+    def pre_filter(self, ctx: ScheduleContext, cluster: Cluster, pod: Task,
+                   registry: TaskRegistry) -> None:
+        """CALCULATELATENCYSCORE for every node + cache resources."""
+        deps = registry.dependencies_of(pod)
+        deployed_deps = [t for t in deps if t.node is not None]
+        delta: Dict[str, float] = {}
+        for n in cluster.node_names:
+            total = sum(cluster.tau(n, t.node) for t in deployed_deps)
+            if total == 0.0:
+                # LowComm pod or no deployed dependency: use average latency
+                # between the candidate node and all nodes in the cluster.
+                total = float(np.mean([cluster.tau(n, m) for m in cluster.node_names]))
+            delta[n] = total
+        ctx.cache["delta"] = delta
+        ctx.cache["deployed_deps"] = deployed_deps
+
+    # ----------------------------------------------------------------- Filter
+    def filter(self, ctx: ScheduleContext, cluster: Cluster, pod: Task,
+               node_name: str, registry: TaskRegistry) -> bool:
+        node = cluster.node(node_name)
+        # resources (Eq. 13)
+        if not pod.resources.fits_in(node.free):
+            return False
+        # bandwidth capacity (Eq. 14)
+        if pod.traffic.bw_gbps > node.alloc_bw:
+            return False
+        # Dependency loops (Cassini) are handled at the Score phase: on a
+        # loaded cluster a hard filter would leave pods unschedulable, and
+        # the paper's own section V prescribes scoring toward less-contended
+        # nodes instead. The loop check caps the node's score below perfect
+        # so loop-free placements always win ties (see score()).
+        return True
+
+    def _creates_dependency_loop(self, cluster: Cluster, pod: Task,
+                                 node_name: str, registry: TaskRegistry) -> bool:
+        """Cassini's affinity-loop filter, restricted to edges that matter.
+
+        Only *contending* pairs (combined demand exceeding the link's
+        allocatable capacity — the same criterion as Eq. 9) constrain
+        relative rotations; sub-capacity co-location imposes nothing. And a
+        pre-existing loop between other jobs is not this pod's problem: we
+        reject the node only when the NEW placement closes a cross-link
+        cycle through the pod's own job.
+        """
+        g = nx.Graph()
+        for n in cluster.node_names:
+            groups = self._node_jobs(cluster, n, registry,
+                                     extra=pod if n == node_name else None)
+            jobs = list(groups.keys())
+            cap = cluster.node(n).alloc_bw
+            bws = {j: self._job_bw(ts) for j, ts in groups.items()}
+            for i in range(len(jobs)):
+                for j in range(i + 1, len(jobs)):
+                    a, b = jobs[i], jobs[j]
+                    if bws[a] + bws[b] <= cap:
+                        continue  # not contending: no rotation constraint
+                    if g.has_edge(a, b):
+                        g[a][b]["links"].add(n)
+                    else:
+                        g.add_edge(a, b, links={n})
+        # a 2-job multi-link relation is consistent (one relative shift);
+        # cross-link cycles of length >= 3 THROUGH THIS JOB prevent a
+        # consistent global offset.
+        if pod.job not in g:
+            return False
+        try:
+            for cyc in nx.cycle_basis(g, pod.job):
+                if len(cyc) < 3 or pod.job not in cyc:
+                    continue
+                common = None
+                for a, b in zip(cyc, cyc[1:] + cyc[:1]):
+                    links = g[a][b]["links"]
+                    common = set(links) if common is None else common & links
+                if not common:
+                    return True
+        except nx.NetworkXError:
+            pass
+        return False
+
+    # ------------------------------------------------------------------ Score
+    def score(self, ctx: ScheduleContext, cluster: Cluster, pod: Task,
+              node_name: str, registry: TaskRegistry) -> float:
+        node = cluster.node(node_name)
+        schemes: Dict[str, LinkScheme] = ctx.cache.setdefault("schemes", {})
+
+        # early return 1: LowComm pod — communication need not be guaranteed
+        if pod.low_comm:
+            ctx.cache.setdefault("early", {})[node_name] = True
+            return PERFECT
+
+        groups = self._node_jobs(cluster, node_name, registry, extra=pod)
+        deployed_groups = {j: ts for j, ts in groups.items() if j != pod.job or
+                           any(t.uid != pod.uid for t in ts)}
+        total_bw = sum(self._job_bw(ts) for ts in groups.values())
+
+        # early return 2: empty node or aggregate demand within capacity
+        only_self = list(groups.keys()) == [pod.job]
+        if only_self or total_bw <= node.alloc_bw:
+            ctx.cache.setdefault("early", {})[node_name] = True
+            return PERFECT
+
+        # cross-link dependency loop: the computed rotation cannot be made
+        # globally consistent -> cap below perfect (loop-free nodes win)
+        loop_cap = (99.0 if self._creates_dependency_loop(
+            cluster, pod, node_name, registry) else PERFECT)
+
+        # --- two-dimensional bandwidth scheduling: interleave phases -------
+        jobs = self._priority_order(registry, groups.keys())
+        ref_index = 0  # highest priority (ties: earliest) — Eq. 16
+        periods = []
+        prios = []
+        for j in jobs:
+            ts = groups[j]
+            periods.append(ts[0].traffic.period_ms)
+            job = registry.jobs.get(j)
+            prios.append(job.priority if job else 0)
+        unified = geometry.unify_periods(
+            periods, prios, g_t_ms=self.g_t_ms, e_t_frac=self.e_t_frac
+        )
+        duties = []
+        bws = []
+        for idx, j in enumerate(jobs):
+            ts = groups[j]
+            spec = ts[0].traffic
+            # idle injection stretches the period -> duty shrinks (comm time
+            # m_p is unchanged); this is the E_T mechanism's second insight.
+            eff_period = unified.periods_ms[idx]
+            duties.append(min(1.0, spec.comm_ms / eff_period))
+            bws.append(self._job_bw(ts))
+        patterns = geometry.pattern_matrix(unified.muls, duties, self.di_pre)
+        result = scoring.find_feasible_rotation(
+            patterns, bws, node.alloc_bw, unified.muls, ref_index,
+            self.di_pre, mode=self.rotation_mode,
+        )
+        score = float(min(result.score, loop_cap))
+        schemes[node_name] = LinkScheme(
+            jobs=jobs,
+            shifts_slots=result.shifts,
+            base_ms=unified.base_ms,
+            muls=unified.muls,
+            # the scheme keeps the RAW rotation score: the loop cap only
+            # demotes the NODE choice; the controller's realign guard needs
+            # to know whether an interleave actually exists on this link
+            score=float(result.score),
+            early_return=False,
+            injected_ms={j: float(unified.injected_ms[i]) for i, j in enumerate(jobs)},
+            ref_job=jobs[ref_index],
+        )
+        ctx.cache.setdefault("early", {})[node_name] = False
+        return score
+
+    # -------------------------------------------------------- NormalizeScore
+    def normalize_scores(self, ctx: ScheduleContext, cluster: Cluster, pod: Task,
+                         scores: Dict[str, float],
+                         registry: TaskRegistry) -> Dict[str, float]:
+        max_score = max(scores.values())
+        ctx.cache["max_score"] = max_score
+        candidates = [n for n, s in scores.items() if s >= max_score - 1e-9]
+        if len(candidates) == 1:
+            return scores
+        # 2nd optimization stage: Eq. 19 reverse-mapped latency among the
+        # bandwidth-optimal candidates; all other nodes are zeroed.
+        delta = ctx.cache["delta"]
+        dvals = [delta[n] for n in candidates]
+        dmin, dmax = min(dvals), max(dvals)
+        out = {n: 0.0 for n in scores}
+        for n in candidates:
+            if dmax != dmin:
+                norm = 100.0 - math.floor(100.0 * (delta[n] - dmin) / (dmax - dmin))
+            else:
+                norm = 100.0 - (delta[n] - dmin)
+            if pod.low_comm:
+                # LowComm pods take the WORST network location
+                out[n] = 100.0 - norm
+            else:
+                out[n] = norm
+        return out
+
+    # ---------------------------------------------------------------- Reserve
+    def reserve(self, ctx: ScheduleContext, cluster: Cluster, pod: Task,
+                node_name: str, registry: TaskRegistry) -> None:
+        schemes: Dict[str, LinkScheme] = ctx.cache.get("schemes", {})
+        early = ctx.cache.get("early", {}).get(node_name, True)
+        max_score = ctx.cache.get("max_score", PERFECT)
+        scheme = schemes.get(node_name)
+
+        n_jobs_on_link = len(self._node_jobs(cluster, node_name, registry))
+        skip = bool(
+            early
+            or max_score < PERFECT - 1e-9
+            or n_jobs_on_link == 2
+        )
+
+        shifts_ms: Dict[str, float] = {}
+        if scheme is not None and not early:
+            delays = geometry.shifts_to_delay_ms(
+                scheme.shifts_slots, scheme.base_ms, self.di_pre
+            )
+            shifts_ms = {j: float(d) for j, d in zip(scheme.jobs, delays)}
+
+        msg = ReserveMessage(node=node_name, scheme=scheme,
+                             shifts_ms=shifts_ms, skip_phase_three=skip)
+        self.messages.append(msg)
+        if self.controller is not None:
+            self.controller.on_schedule(cluster, registry, msg)
+
+    def unreserve(self, cluster: Cluster, pod: Task, node_name: str,
+                  registry: TaskRegistry) -> None:
+        if self.controller is not None:
+            self.controller.on_evict(node_name, pod)

@@ -1,0 +1,485 @@
+"""Event-driven fluid-flow cluster simulator.
+
+Executes placed training jobs with periodic on-off traffic over shared host
+links (the paper's contention model):
+
+  * each job iterates: compute phase -> synchronized communication phase;
+  * during communication, each multi-node job places one flow per used host
+    link with demand ``r^BW`` and volume ``r^BW * m_p``;
+  * concurrent flows on a link share bandwidth max-min fairly, so contention
+    stretches the communication phase and stalls the next compute phase
+    ("delayed flows stall the subsequent computations", section I);
+  * compute-phase jitter models the paper's communication drift; the
+    Metronome stop-and-wait controller pauses LOW priority jobs to realign.
+
+Measured outputs per run: per-job iteration durations, average time per
+1,000 iterations, per-link utilization, Gamma (Eq. 5), readjustment count,
+and total completion time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .cluster import Cluster
+from .controller import StopAndWaitController
+from .framework import SchedulingFramework
+from .workload import HIGH, Job, Task
+
+EPS = 1e-9
+
+COMPUTE, COMM, PAUSED, WAITING, DONE = "compute", "comm", "paused", "waiting", "done"
+
+
+@dataclasses.dataclass
+class BackgroundFlow:
+    """iPerf3-style unregulated traffic occupying a host link permanently."""
+
+    node: str
+    rate_gbps: float
+
+
+@dataclasses.dataclass
+class SimConfig:
+    duration_ms: float = 60_000.0
+    jitter_std: float = 0.02  # compute-phase noise (fraction), causes drift
+    startup_ms: float = 0.0
+    latency_penalty_ms_per_tau: float = 1.0  # extra comm ms per unit tau above 1
+    seed: int = 0
+    sample_interval_ms: float = 1000.0
+    monitor: bool = True  # enable the continuous monitoring mechanism
+
+
+@dataclasses.dataclass
+class FlowState:
+    job: str
+    node: str  # host link
+    demand_gbps: float
+    remaining_gb: float
+    rate_gbps: float = 0.0
+
+
+@dataclasses.dataclass
+class JobState:
+    job: Job
+    phase: str = WAITING
+    phase_end: float = math.inf
+    flows: List[FlowState] = dataclasses.field(default_factory=list)
+    iter_index: int = 0
+    iter_start: float = 0.0
+    durations_ms: List[float] = dataclasses.field(default_factory=list)
+    pending_pause_ms: float = 0.0
+    pause_in_iter_ms: float = 0.0  # controller-initiated pause this iteration
+    realign_pending: bool = False
+    start_time: float = 0.0
+    finish_time: Optional[float] = None
+    comm_extra_ms: float = 0.0  # latency penalty tail of the comm phase
+
+    @property
+    def name(self) -> str:
+        return self.job.name
+
+
+@dataclasses.dataclass
+class SimResult:
+    durations_ms: Dict[str, List[float]]
+    time_per_1000_iters_s: Dict[str, float]
+    link_utilization: Dict[str, float]
+    avg_bw_utilization: float  # Gamma, Eq. 5
+    readjustments: int
+    finish_times_ms: Dict[str, float]
+    total_completion_ms: float
+    iterations_done: Dict[str, int]
+
+    def mean_iter_ms(self, job: str) -> float:
+        d = self.durations_ms.get(job, [])
+        return float(np.mean(d)) if d else math.nan
+
+
+class ClusterSimulator:
+    def __init__(
+        self,
+        cluster: Cluster,
+        jobs: Sequence[Job],
+        config: SimConfig,
+        controller: Optional[StopAndWaitController] = None,
+        background: Sequence[BackgroundFlow] = (),
+        traffic_changes: Sequence[Tuple[float, str, float]] = (),
+        registry=None,
+        framework=None,
+        arrivals: Sequence = (),
+    ) -> None:
+        """``traffic_changes``: (time_ms, job, duty_multiplier) events.
+
+        Online mode: pass ``framework`` + ``arrivals`` (workloads whose jobs
+        carry submit_time_s). Workloads are scheduled when they arrive,
+        queued when the cluster is full, and their pods are evicted on
+        completion (the K8s behavior the paper's trace runs under).
+        """
+        self.cluster = cluster
+        self.config = config
+        self.controller = controller
+        self.rng = np.random.default_rng(config.seed)
+        self.jobs: Dict[str, JobState] = {}
+        self.registry = registry
+        self.framework = framework
+        self.background = list(background)
+        self.traffic_changes = sorted(traffic_changes)
+        self.delivered_gb: Dict[str, float] = {n: 0.0 for n in cluster.node_names}
+        self.now = 0.0
+        self.rejected: List[str] = []
+        # (arrival_ms, workload) queue for online scheduling
+        self._arrivals = sorted(
+            ((min(j.submit_time_s for j in wl.jobs) * 1e3, i, wl)
+             for i, wl in enumerate(arrivals)),
+            key=lambda t: (t[0], t[1]))
+        self._pending = []  # workloads waiting for capacity
+        for job in jobs:
+            self._admit_job(job)
+
+    def _admit_job(self, job: Job) -> None:
+        config = self.config
+        controller = self.controller
+        st = JobState(job=job)
+        base_start = max(self.now, job.submit_time_s * 1e3) + config.startup_ms
+        if controller is not None:
+            controller.set_baseline(job.name, job.traffic.period_ms,
+                                    job.priority)
+            align = controller.job_alignment(job.name)
+            if align is not None:
+                # delay the job start so its FIRST comm phase lands on
+                # the assigned circle offset (absolute-time epoch)
+                offset, period_eff = align
+                inject = controller.injected_ms.get(job.name, 0.0)
+                first_comm = base_start + job.traffic.compute_ms + inject
+                base_start += (offset - first_comm) % period_eff
+        st.start_time = base_start
+        st.phase = WAITING
+        st.phase_end = st.start_time
+        self.jobs[job.name] = st
+
+    # ------------------------------------------------------- online arrivals
+    def _try_schedule(self, wl) -> bool:
+        assert self.framework is not None
+        if self.framework.schedule_workload(wl):
+            if self.controller is not None:
+                self.controller.run_offline_recalculation(
+                    self.framework.registry, self.cluster)
+            for job in wl.jobs:
+                self._admit_job(job)
+            # a new scheme may shift existing low-priority jobs
+            if self.controller is not None:
+                for name, st in self.jobs.items():
+                    job = st.job
+                    if (st.phase not in (DONE,) and job.priority != HIGH
+                            and name not in {j.name for j in wl.jobs}):
+                        self._apply_realign(name)
+            return True
+        return False
+
+    def _process_arrivals(self) -> None:
+        while self._arrivals and self._arrivals[0][0] <= self.now + EPS:
+            _, _, wl = self._arrivals.pop(0)
+            if not self._try_schedule(wl):
+                self._pending.append(wl)
+
+    def _on_job_done(self, st: JobState) -> None:
+        if self.framework is not None:
+            job_obj = self.framework.registry.jobs.get(st.job.name)
+            if job_obj is not None:
+                self.framework.evict_job(job_obj)
+            # freed capacity: retry the pending queue in FIFO order
+            still = []
+            for wl in self._pending:
+                if not self._try_schedule(wl):
+                    still.append(wl)
+            self._pending = still
+
+    # --------------------------------------------------------------- traffic
+    def _job_links(self, job: Job) -> Dict[str, float]:
+        """host link -> aggregate bandwidth demand of the job's pods there.
+
+        Single-node jobs produce no host-link traffic (localhost sync)."""
+        nodes = job.nodes_used()
+        if len(nodes) <= 1:
+            return {}
+        out: Dict[str, float] = {}
+        for t in job.tasks:
+            if t.node is None or t.traffic.bw_gbps <= 0:
+                continue
+            out[t.node] = out.get(t.node, 0.0) + t.traffic.bw_gbps
+        return out
+
+    def _latency_penalty(self, job: Job) -> float:
+        nodes = job.nodes_used()
+        if len(nodes) <= 1:
+            return 0.0
+        worst = max(
+            self.cluster.tau(a, b) for a in nodes for b in nodes if a != b
+        )
+        return self.config.latency_penalty_ms_per_tau * max(0.0, worst - 1.0)
+
+    # ----------------------------------------------------------- rate sharing
+    def _assign_rates(self) -> None:
+        """Max-min fair share per host link, demands capped at r^BW."""
+        by_link: Dict[str, List[FlowState]] = {}
+        for st in self.jobs.values():
+            for f in st.flows:
+                if f.remaining_gb > EPS:
+                    by_link.setdefault(f.node, []).append(f)
+        bg_by_link: Dict[str, float] = {}
+        for bg in self.background:
+            bg_by_link[bg.node] = bg_by_link.get(bg.node, 0.0) + bg.rate_gbps
+        for node_name, flows in by_link.items():
+            cap = self.cluster.node(node_name).bw_gbps
+            cap = max(0.0, cap - bg_by_link.get(node_name, 0.0))
+            demands = np.array([f.demand_gbps for f in flows])
+            rates = _max_min_fair(demands, cap)
+            for f, r in zip(flows, rates):
+                f.rate_gbps = float(r)
+
+    # ------------------------------------------------------------- main loop
+    def run(self) -> SimResult:
+        cfg = self.config
+        changes = list(self.traffic_changes)
+        while self.now < cfg.duration_ms:
+            self._assign_rates()
+            # next event time
+            nxt = cfg.duration_ms
+            for st in self.jobs.values():
+                if st.phase in (COMPUTE, PAUSED, WAITING):
+                    nxt = min(nxt, st.phase_end)
+                elif st.phase == COMM:
+                    if st.flows:
+                        for f in st.flows:
+                            if f.remaining_gb > EPS and f.rate_gbps > EPS:
+                                nxt = min(nxt, self.now + f.remaining_gb / f.rate_gbps * 1e3)
+                    else:
+                        nxt = min(nxt, st.phase_end)
+            if changes:
+                nxt = min(nxt, changes[0][0])
+            if self._arrivals:
+                nxt = min(nxt, self._arrivals[0][0])
+            nxt = max(nxt, self.now)  # no time travel
+            dt = nxt - self.now
+
+            # advance flows and accounting
+            if dt > 0:
+                for st in self.jobs.values():
+                    for f in st.flows:
+                        if f.remaining_gb > EPS:
+                            moved = min(f.remaining_gb, f.rate_gbps * dt / 1e3)
+                            f.remaining_gb -= moved
+                            self.delivered_gb[f.node] += moved
+                for bg in self.background:
+                    self.delivered_gb[bg.node] += bg.rate_gbps * dt / 1e3
+            self.now = nxt
+            if self.now >= cfg.duration_ms:
+                break
+
+            # traffic-change events (batch-size change etc.)
+            while changes and changes[0][0] <= self.now + EPS:
+                _, jname, duty_mult = changes.pop(0)
+                self._apply_traffic_change(jname, duty_mult)
+
+            # online arrivals (may add jobs)
+            self._process_arrivals()
+
+            # job phase transitions
+            done_before = {n for n, s in self.jobs.items() if s.phase == DONE}
+            for st in list(self.jobs.values()):
+                self._step_job(st)
+            for name, st in list(self.jobs.items()):
+                if st.phase == DONE and name not in done_before:
+                    self._on_job_done(st)
+        return self._result()
+
+    def _apply_traffic_change(self, jname: str, duty_mult: float) -> None:
+        st = self.jobs.get(jname)
+        if st is None:
+            return
+        spec = st.job.traffic
+        new_comm = min(spec.period_ms, spec.comm_ms * duty_mult)
+        new_spec = dataclasses.replace(
+            spec, duty=new_comm / spec.period_ms
+        )
+        for t in st.job.tasks:
+            t.traffic = dataclasses.replace(new_spec)
+        if self.controller is not None and self.registry is not None:
+            self.controller.report_traffic_change(
+                self.registry, self.cluster, jname, new_spec
+            )
+
+    def _step_job(self, st: JobState) -> None:
+        if st.phase == DONE:
+            return
+        job = st.job
+        spec = job.traffic
+        inject = 0.0
+        if self.controller is not None:
+            inject = self.controller.injected_ms.get(job.name, 0.0)
+
+        if st.phase == WAITING and self.now + EPS >= st.phase_end:
+            st.iter_start = self.now
+            self._enter_compute(st, inject)
+            return
+        if st.phase in (COMPUTE, PAUSED) and self.now + EPS >= st.phase_end:
+            # phase-aware drift detection (controller.report_phase_error)
+            if self.controller is not None and self.config.monitor:
+                align = self.controller.job_alignment(job.name)
+                if align is not None:
+                    offset, period_eff = align
+                    err = (self.now - offset) % period_eff
+                    for act in self.controller.report_phase_error(
+                            job.name, err, period_eff):
+                        self._apply_realign(act.job)
+            # start synchronized communication
+            links = self._job_links(job)
+            st.flows = [
+                FlowState(job.name, n, bw, bw * spec.comm_ms / 1e3)
+                for n, bw in links.items()
+            ]
+            st.comm_extra_ms = self._latency_penalty(job)
+            st.phase = COMM
+            if not st.flows:
+                # single-node job: loopback sync takes the ideal comm time
+                st.phase_end = self.now + spec.comm_ms + st.comm_extra_ms
+            else:
+                st.phase_end = math.inf
+            return
+        if st.phase == COMM:
+            if st.flows:
+                if all(f.remaining_gb <= EPS for f in st.flows):
+                    # flows done -> latency tail, then iteration completes
+                    if st.comm_extra_ms > 0:
+                        st.flows = []
+                        st.phase_end = self.now + st.comm_extra_ms
+                        st.comm_extra_ms = 0.0
+                        return
+                    st.flows = []
+                    self._complete_iteration(st, inject)
+            else:
+                if self.now + EPS >= st.phase_end:
+                    self._complete_iteration(st, inject)
+
+    def _enter_compute(self, st: JobState, inject: float) -> None:
+        spec = st.job.traffic
+        jitter = 1.0 + self.rng.normal(0.0, self.config.jitter_std)
+        dur = max(0.0, spec.compute_ms * max(0.1, jitter)) + inject
+        dur += st.pending_pause_ms
+        st.pause_in_iter_ms += st.pending_pause_ms
+        st.pending_pause_ms = 0.0
+        if st.realign_pending and self.controller is not None:
+            align = self.controller.job_alignment(st.name)
+            if align is not None:
+                offset, period_eff = align
+                pause = (offset - ((self.now + dur) % period_eff)) % period_eff
+                dur += pause
+                st.pause_in_iter_ms += pause
+            st.realign_pending = False
+        st.phase = COMPUTE
+        st.phase_end = self.now + dur
+
+    def _complete_iteration(self, st: JobState, inject: float) -> None:
+        dur = self.now - st.iter_start
+        st.durations_ms.append(dur)
+        st.iter_index += 1
+        job = st.job
+        if self.controller is not None and self.config.monitor:
+            # the controller knows which pauses IT injected — report the
+            # organic iteration time so its own actions don't re-trigger
+            # the drift rule (a realign storm otherwise)
+            organic = max(0.0, dur - st.pause_in_iter_ms)
+            actions = self.controller.report_iteration(job.name, organic)
+            for act in actions:
+                self._apply_realign(act.job)
+        st.pause_in_iter_ms = 0.0
+        if st.iter_index >= job.n_iterations:
+            st.phase = DONE
+            st.finish_time = self.now
+            return
+        st.iter_start = self.now
+        self._enter_compute(st, inject)
+
+    def _apply_realign(self, jname: str) -> None:
+        """Stop-and-wait: pause a low-priority job so its next comm phase
+        starts at its assigned offset on the circle (absolute-time epoch)."""
+        st = self.jobs.get(jname)
+        if st is None or st.phase == DONE or self.controller is None:
+            return
+        align = self.controller.job_alignment(jname)
+        if align is None:
+            return
+        offset, period_eff = align
+        if st.phase in (COMPUTE, PAUSED):
+            projected = st.phase_end
+            pause = (offset - (projected % period_eff)) % period_eff
+            st.phase_end += pause
+            st.pause_in_iter_ms += pause
+            st.phase = PAUSED
+        else:
+            # mid-comm: realign when the next compute phase begins
+            st.realign_pending = True
+
+    # ---------------------------------------------------------------- metrics
+    def _result(self) -> SimResult:
+        elapsed = max(self.now, 1.0)
+        link_util = {}
+        for n in self.cluster.node_names:
+            cap = self.cluster.node(n).bw_gbps
+            link_util[n] = min(1.0, self.delivered_gb[n] / (cap * elapsed / 1e3))
+        b_max = self.cluster.b_max
+        caps = np.array([self.cluster.node(n).bw_gbps for n in self.cluster.node_names])
+        utils = np.array([link_util[n] for n in self.cluster.node_names])
+        # Eq. 5: capacity-weighted mean over links, normalized by B^max.
+        # Only links that carried (or could carry) job traffic are counted.
+        active = [i for i, n in enumerate(self.cluster.node_names)
+                  if self.delivered_gb[n] > 0]
+        if active:
+            gamma = float(np.mean(caps[active] * utils[active] / b_max))
+        else:
+            gamma = 0.0
+        per_1000 = {}
+        finish = {}
+        iters = {}
+        for name, st in self.jobs.items():
+            if st.durations_ms:
+                per_1000[name] = float(np.mean(st.durations_ms)) * 1000.0 / 1e3  # s
+            else:
+                per_1000[name] = math.nan
+            finish[name] = st.finish_time if st.finish_time is not None else math.nan
+            iters[name] = st.iter_index
+        tct = max((f for f in finish.values() if not math.isnan(f)), default=self.now)
+        return SimResult(
+            durations_ms={n: st.durations_ms for n, st in self.jobs.items()},
+            time_per_1000_iters_s=per_1000,
+            link_utilization=link_util,
+            avg_bw_utilization=gamma,
+            readjustments=self.controller.readjust_count if self.controller else 0,
+            finish_times_ms=finish,
+            total_completion_ms=tct,
+            iterations_done=iters,
+        )
+
+
+def _max_min_fair(demands: np.ndarray, capacity: float) -> np.ndarray:
+    """Water-filling max-min fair allocation, each flow capped at its demand."""
+    n = len(demands)
+    if n == 0:
+        return demands
+    if demands.sum() <= capacity:
+        return demands.copy()
+    rates = np.zeros(n)
+    remaining = capacity
+    order = np.argsort(demands)
+    left = n
+    for idx in order:
+        fair = remaining / left
+        give = min(demands[idx], fair)
+        rates[idx] = give
+        remaining -= give
+        left -= 1
+    return rates

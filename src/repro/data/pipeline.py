@@ -1,0 +1,89 @@
+"""Deterministic synthetic LM data pipeline.
+
+Produces packed next-token batches from a seeded Markov-ish token stream
+(deterministic per (seed, step) — a restart resumes exactly where it left
+off, which the checkpoint/resume tests rely on). A background thread
+prefetches ahead of the training loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+from repro.models.config import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        """Deterministic batch for a given step (restart-safe)."""
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step]))
+        # zipf-ish marginal + local repetition gives a learnable signal
+        base = rng.zipf(1.3, size=(self.global_batch, self.seq_len + 1))
+        tokens = (base % (self.vocab - 2)) + 1
+        rep = rng.random((self.global_batch, self.seq_len + 1)) < 0.3
+        tokens[:, 1:] = np.where(rep[:, 1:], tokens[:, :-1], tokens[:, 1:])
+        tokens = tokens.astype(np.int32)
+        return {"tokens": tokens[:, :-1], "labels": tokens[:, 1:].copy()}
+
+
+def packed_batch_iterator(ds: SyntheticLM, start_step: int = 0,
+                          prefetch: int = 2) -> Iterator[Dict[str, np.ndarray]]:
+    """Host-side prefetching iterator."""
+    q: "queue.Queue" = queue.Queue(maxsize=prefetch)
+    stop = threading.Event()
+
+    def worker():
+        step = start_step
+        while not stop.is_set():
+            q.put(ds.batch_at(step))
+            step += 1
+
+    t = threading.Thread(target=worker, daemon=True)
+    t.start()
+    try:
+        while True:
+            yield q.get()
+    finally:
+        stop.set()
+
+
+def make_batch_specs(cfg: ModelConfig, shape: ShapeConfig,
+                     batch_override: Optional[int] = None) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input of a shape cell.
+
+    This is the single source of truth consumed by the dry-run and the
+    serving/training step builders (weak-type-correct, shardable, no device
+    allocation).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    b = batch_override or shape.global_batch
+    s = shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+        }
+    elif shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    else:  # decode
+        specs = {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+    if cfg.family == "encdec" and shape.kind != "decode":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, max(s // cfg.enc_frames_ratio, 1), cfg.d_model), jnp.float32)
+    if cfg.mrope_sections and shape.kind != "decode":
+        specs["positions"] = jax.ShapeDtypeStruct((3, b, s), i32)
+    return specs

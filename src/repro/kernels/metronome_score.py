@@ -1,0 +1,81 @@
+"""Pallas TPU kernel for Metronome's rotation-scheme scoring (Eq. 18).
+
+The paper calls the Score phase "computationally intensive" (section III-B):
+for every candidate rotation scheme, sum the bandwidth demand over the
+discretized circle and measure the excess over link capacity. We adapt the
+enumeration to the TPU as a *pairwise* product core: two free tasks' rolled
+banks (Ra, S) and (Rb, S) are resident in VMEM and a (block_a x Rb x S)
+broadcast-accumulate + relu-reduce produces a block of the (Ra, Rb) score
+matrix per grid step. Outer tasks (if any) are folded into ``base_demand``
+by the caller (repro.core.scoring holds all but the innermost two fixed —
+the paper's own reduction argument).
+
+The slot axis S (Di-Pre = 72) is padded to the 128-wide TPU lane dimension;
+padded slots carry zero demand so they never contribute excess.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANE = 128
+
+
+def _score_kernel(base_ref, bank_a_ref, bank_b_ref, out_ref, *,
+                  capacity: float, n_slots: int, block_a: int, rb: int):
+    base = base_ref[...]           # (1, S_pad)
+    bank_a = bank_a_ref[...]       # (block_a, S_pad)
+    bank_b = bank_b_ref[...]       # (Rb, S_pad)
+    # total[a, b, s] = base[s] + bank_a[a, s] + bank_b[b, s]
+    total = (base[None, :, :] + bank_a[:, None, :] + bank_b[None, :, :]
+             )  # (block_a, Rb, S_pad)
+    excess = jnp.maximum(total - capacity, 0.0)
+    ex = jnp.sum(excess, axis=-1)  # (block_a, Rb)
+    score = jnp.maximum(0.0, 100.0 * (1.0 - ex / (capacity * n_slots)))
+    out_ref[...] = score.astype(out_ref.dtype)
+
+
+def metronome_score_pairwise(
+    base_demand: jax.Array,  # (S,)
+    bank_a: jax.Array,  # (Ra, S)
+    bank_b: jax.Array,  # (Rb, S)
+    capacity: float,
+    *,
+    block_a: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """Scores (Ra, Rb) for every rotation pair of two free tasks."""
+    s = base_demand.shape[-1]
+    ra, rb = bank_a.shape[0], bank_b.shape[0]
+    s_pad = -(-s // LANE) * LANE
+    ra_pad = -(-ra // block_a) * block_a
+
+    def pad(x, rows):
+        out = jnp.zeros((rows, s_pad), jnp.float32)
+        return out.at[: x.shape[0], :s].set(x.astype(jnp.float32))
+
+    base = pad(base_demand[None, :], 1)
+    a = pad(bank_a, ra_pad)
+    b = pad(bank_b, rb)
+
+    kernel = functools.partial(_score_kernel, capacity=float(capacity),
+                               n_slots=s, block_a=block_a, rb=rb)
+    out = pl.pallas_call(
+        kernel,
+        grid=(ra_pad // block_a,),
+        in_specs=[
+            pl.BlockSpec((1, s_pad), lambda i: (0, 0)),
+            pl.BlockSpec((block_a, s_pad), lambda i: (i, 0)),
+            pl.BlockSpec((rb, s_pad), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_a, rb), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((ra_pad, rb), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(base, a, b)
+    return out[:ra, :rb]

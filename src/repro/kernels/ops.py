@@ -1,0 +1,79 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Each op dispatches: real TPU -> compiled Pallas; anything else (this CPU
+container, tests) -> interpret mode or the jnp reference. Training gets a
+``custom_vjp`` whose backward recomputes through the jnp oracle (flash
+forward is exact, so gradients match the reference path).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .flash_attention import flash_attention_fwd
+from .metronome_score import metronome_score_pairwise
+from .rg_lru import rg_lru_pallas
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except RuntimeError:
+        return False
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    interpret: Optional[bool] = None):
+    """(B,H,S,D) x (B,Hkv,S,D)^2 -> (B,H,S,D)."""
+    itp = (not _on_tpu()) if interpret is None else interpret
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               interpret=itp)
+
+
+def _fa_fwd(q, k, v, causal, window, interpret):
+    out = flash_attention(q, k, v, causal, window, interpret)
+    return out, (q, k, v)
+
+
+def _fa_bwd(causal, window, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: ref.attention_ref(q_, k_, v_, causal=causal,
+                                             window=window), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+# ---------------------------------------------------------------------------
+# metronome rotation scoring
+# ---------------------------------------------------------------------------
+
+def score_pairwise(base_demand, bank_a, bank_b, capacity: float,
+                   interpret: Optional[bool] = None) -> np.ndarray:
+    """Eq. 18 scores for every (rot_a, rot_b) pair; see core/scoring.py."""
+    itp = (not _on_tpu()) if interpret is None else interpret
+    out = metronome_score_pairwise(
+        jnp.asarray(base_demand), jnp.asarray(bank_a), jnp.asarray(bank_b),
+        capacity, interpret=itp)
+    return np.asarray(out)
+
+
+# ---------------------------------------------------------------------------
+# rg-lru recurrence
+# ---------------------------------------------------------------------------
+
+def rg_lru(a, x, interpret: Optional[bool] = None):
+    itp = (not _on_tpu()) if interpret is None else interpret
+    return rg_lru_pallas(a, x, interpret=itp)

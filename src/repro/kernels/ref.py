@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal=True, window=0,
+                  sm_scale: Optional[float] = None) -> jax.Array:
+    """Naive full-softmax GQA attention. q: (B,H,S,D), k/v: (B,Hkv,S,D)."""
+    b, h, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    g = h // hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(d)
+    kr = jnp.repeat(k, g, axis=1)
+    vr = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def metronome_score_ref(base_demand: np.ndarray, bank_a: np.ndarray,
+                        bank_b: np.ndarray, capacity: float) -> np.ndarray:
+    """Pairwise rotation-score enumeration oracle.
+
+    base_demand: (S,) demand of all FIXED tasks (already rotated).
+    bank_a:      (Ra, S) demand of free task A at every candidate rotation.
+    bank_b:      (Rb, S) demand of free task B at every candidate rotation.
+    Returns scores (Ra, Rb) per Eq. 18, scaled to [0, 100].
+    """
+    s = base_demand.shape[-1]
+    total = (base_demand[None, None, :] + bank_a[:, None, :]
+             + bank_b[None, :, :])
+    excess = np.maximum(total - capacity, 0.0).sum(axis=-1)
+    return np.maximum(0.0, 100.0 * (1.0 - excess / (capacity * s)))
+
+
+def rg_lru_ref(a: jax.Array, x: jax.Array, h0: Optional[jax.Array] = None
+               ) -> jax.Array:
+    """Linear recurrence oracle: y_t = a_t * y_{t-1} + x_t. (B, S, W)."""
+    b, s, w = x.shape
+    if h0 is None:
+        h0 = jnp.zeros((b, w), x.dtype)
+
+    def step(h, inputs):
+        at, xt = inputs
+        h = at * h + xt
+        return h, h
+
+    _, ys = jax.lax.scan(step, h0.astype(jnp.float32),
+                         (jnp.moveaxis(a, 1, 0).astype(jnp.float32),
+                          jnp.moveaxis(x, 1, 0).astype(jnp.float32)))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)

@@ -1,0 +1,488 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count on first init). Everything below is ordinary.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell we build the real train/prefill/serve step, lower it with
+ShapeDtypeStruct inputs (no allocation), compile for the production mesh,
+and record memory_analysis / cost_analysis / per-collective byte counts —
+the inputs to EXPERIMENTS.md sections Dry-run and Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+      --shape train_4k --mesh single --out results/dryrun.json
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs as config_registry
+from repro.data.pipeline import make_batch_specs
+from repro.models import init_cache, init_model
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+from repro.optim import AdamWConfig, adamw_init
+from repro.runtime.steps import (TrainState, auto_microbatches,
+                                 build_prefill_step, build_serve_step,
+                                 build_train_step)
+from repro.sharding import AxisRules, best_spec, use_rules
+from repro.launch.mesh import make_production_mesh
+
+_is_spec = lambda x: isinstance(x, tuple)
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+# ---------------------------------------------------------------------------
+# Sharding helpers
+# ---------------------------------------------------------------------------
+
+def param_shardings(mesh, shapes_tree, spec_tree, rules=None):
+    rules = rules or AxisRules(mesh)
+    leaves, treedef = jax.tree.flatten(shapes_tree)
+    spec_leaves = treedef.flatten_up_to(spec_tree)
+    out = [NamedSharding(mesh, best_spec(l.shape, s, rules))
+           for l, s in zip(leaves, spec_leaves)]
+    return treedef.unflatten(out)
+
+
+def batch_shardings(mesh, batch_specs, rules=None):
+    rules = rules or AxisRules(mesh)
+    out = {}
+    for k, v in batch_specs.items():
+        if k == "positions":  # (3, B, S)
+            logical = (None, "batch", None)
+        else:
+            logical = ("batch",) + (None,) * (v.ndim - 1)
+        out[k] = NamedSharding(mesh, best_spec(v.shape, logical, rules))
+    return out
+
+
+def cache_logical(cfg: ModelConfig, head_sharded: bool = False
+                  ) -> Dict[str, Tuple]:
+    """Logical axes for each decode-state leaf.
+
+    Default is seq-sharded cache (flash-decoding style — works for every
+    kv count). ``head_sharded`` prefers the kv-head axis (no cross-shard
+    softmax combine) and is valid when n_kv % tp == 0 (perf lever for
+    qwen2-moe/whisper-class archs)."""
+    if cfg.family in ("dense", "moe"):
+        kv = ((None, "batch", None, "kv_heads", None) if head_sharded
+              else (None, "batch", "kv_seq", "kv_heads", None))
+        return {"k": kv, "v": kv, "index": ()}
+    if cfg.family == "griffin":
+        kv = (None, "batch", "kv_seq", "kv_heads", None)
+        d = {
+            "k": kv, "v": kv,
+            "conv": (None, None, "batch", None, "w_state"),
+            "h": (None, None, "batch", "w_state"),
+            "index": (),
+        }
+        n_tail = cfg.n_layers - 3 * (cfg.n_layers // 3)
+        if n_tail:
+            d["tail_conv"] = (None, "batch", None, "w_state")
+            d["tail_h"] = (None, "batch", "w_state")
+        return d
+    if cfg.family == "xlstm":
+        return {
+            "s_c": (None, "batch", "w_state"), "s_n": (None, "batch", "w_state"),
+            "s_m": (None, "batch", "w_state"),
+            "m_C": (None, "batch", "heads", None, None),
+            "m_n": (None, "batch", "heads", None),
+            "m_m": (None, "batch", "heads"),
+            "index": (),
+        }
+    if cfg.family == "encdec":
+        kv = (None, "batch", "kv_seq", "kv_heads", None)
+        return {"k": kv, "v": kv, "enc_out": ("batch", None, None), "index": ()}
+    raise ValueError(cfg.family)
+
+
+def input_specs(arch: str, shape_name: str) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of a cell."""
+    cfg = config_registry.get_config(arch)
+    shape = SHAPES[shape_name]
+    return make_batch_specs(cfg, shape)
+
+
+# ---------------------------------------------------------------------------
+# Cell lowering
+# ---------------------------------------------------------------------------
+
+# Alternative sharding layouts for the perf loop (section Perf):
+# pure_fsdp — no tensor parallelism; weights fully sharded over every mesh
+# axis and gathered layer-wise (right-sizes small-dense models where TP
+# activation psums dominate the collective term).
+RULES_PRESETS = {
+    # pod axis used as additional FSDP for weights/optimizer (instead of
+    # pure DP) — the 1000+-node memory story for the giants
+    "pod_fsdp": {
+        "w_embed": [("pod", "data"), "data", None],
+        "w_vocab": ["model", None],
+    },
+    "pure_fsdp": {
+        "batch": [("pod", "data", "model"), ("data", "model"), None],
+        "heads": [None], "kv_heads": [None],
+        "mlp_act": [None], "vocab_act": [None], "experts_act": [None],
+        "w_embed": [("data", "model"), "data", None],
+        "w_heads": [None], "w_mlp": [None],
+        "w_vocab": [("data", "model"), "data", None],
+        "w_state": [None],
+    },
+}
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               opt_overrides: Optional[Dict] = None) -> Dict[str, Any]:
+    import dataclasses as _dc
+    cfg = config_registry.get_config(arch)
+    if opt_overrides and opt_overrides.get("cfg_replace"):
+        cfg = _dc.replace(cfg, **opt_overrides["cfg_replace"])
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return {"status": "skipped",
+                "reason": "full-attention arch at 524k context (see DESIGN.md)"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules_over = None
+    if opt_overrides and opt_overrides.get("rules_preset"):
+        rules_over = RULES_PRESETS[opt_overrides["rules_preset"]]
+    rules = AxisRules(mesh, rules_over)
+    n_data = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    if rules_over is not None:
+        n_data *= mesh.shape.get("model", 1)  # batch spans every axis
+    key = jax.random.PRNGKey(0)
+
+    t0 = time.time()
+    # shapes + logical specs without allocating anything
+    spec_box: Dict[str, Any] = {}
+
+    def _init(k):
+        p, s = init_model(cfg, k)
+        spec_box["s"] = s
+        return p
+
+    param_shapes = jax.eval_shape(_init, key)
+    logical = spec_box["s"]
+    p_shard = param_shardings(mesh, param_shapes, logical, rules)
+
+    batch_specs = make_batch_specs(cfg, shape)
+    b_shard = batch_shardings(mesh, batch_specs, rules)
+
+    info: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "params": int(sum(np.prod(l.shape) for l in jax.tree.leaves(param_shapes))),
+    }
+
+    with use_rules(mesh, rules_over):
+        if shape.kind == "train":
+            opt_cfg = AdamWConfig(
+                moment_dtype=jnp.bfloat16 if info["params"] > 1e11 else jnp.float32)
+            n_micro = auto_microbatches(cfg, shape, n_data)
+            accum = jnp.bfloat16 if info["params"] > 1e11 else jnp.float32
+            if opt_overrides:
+                n_micro = opt_overrides.get("n_micro", n_micro)
+            specs_for_grads = logical if (
+                opt_overrides and opt_overrides.get("grad_rs")) else None
+            step_fn = build_train_step(cfg, opt_cfg, n_micro,
+                                       accum_dtype=accum,
+                                       param_specs=specs_for_grads)
+            opt_shapes = jax.eval_shape(
+                lambda p: adamw_init(opt_cfg, p), param_shapes)
+            opt_shard = {
+                "m": p_shard, "v": p_shard,
+                "step": NamedSharding(mesh, P()),
+            }
+            state_shapes = TrainState(
+                param_shapes, opt_shapes,
+                jax.ShapeDtypeStruct((), jnp.int32))
+            state_shard = TrainState(p_shard, opt_shard, NamedSharding(mesh, P()))
+            info["n_micro"] = n_micro
+            jitted = jax.jit(step_fn, in_shardings=(state_shard, b_shard),
+                             out_shardings=(state_shard, None))
+            lowered = jitted.lower(state_shapes, batch_specs)
+        elif shape.kind == "prefill":
+            step_fn = build_prefill_step(cfg)
+            jitted = jax.jit(step_fn, in_shardings=(p_shard, b_shard))
+            lowered = jitted.lower(param_shapes, batch_specs)
+        else:  # decode
+            step_fn = build_serve_step(cfg)
+            cache_shapes = jax.eval_shape(
+                lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+            c_logical = cache_logical(
+                cfg, head_sharded=bool(opt_overrides
+                                       and opt_overrides.get("kv_head_shard")))
+            c_shard = {
+                k: NamedSharding(mesh, best_spec(v.shape, c_logical[k], rules))
+                for k, v in cache_shapes.items()
+            }
+            tok_shard = b_shard["tokens"]
+            jitted = jax.jit(step_fn,
+                             in_shardings=(p_shard, c_shard, tok_shard),
+                             out_shardings=(None, c_shard))
+            lowered = jitted.lower(param_shapes, cache_shapes,
+                                   batch_specs["tokens"])
+
+    info["lower_s"] = round(time.time() - t0, 1)
+    t1 = time.time()
+    compiled = lowered.compile()
+    info["compile_s"] = round(time.time() - t1, 1)
+
+    mem = compiled.memory_analysis()
+    info["memory"] = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "peak_bytes": (getattr(mem, "argument_size_in_bytes", 0) or 0)
+        + (getattr(mem, "temp_size_in_bytes", 0) or 0),
+    }
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    # raw cost_analysis is loop-UNAWARE (scan bodies counted once) — kept
+    # for reference; the roofline uses the trip-count-aware HLO analysis.
+    info["cost_raw"] = {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+    }
+    hlo = compiled.as_text()
+    if opt_overrides is None or opt_overrides.get("dump_hlo", True):
+        import gzip
+        os.makedirs("results/hlo", exist_ok=True)
+        tag = (opt_overrides or {}).get("tag", "")
+        cell_id = f"{arch}__{shape_name}__{'multi' if multi_pod else 'single'}"
+        if tag:
+            cell_id += f"__{tag}"
+        with gzip.open(f"results/hlo/{cell_id}.txt.gz", "wt") as f:
+            f.write(hlo)
+    from repro.launch import hlo_analysis
+    hc = hlo_analysis.analyze(hlo)
+    info["cost"] = {"flops": hc["flops"], "bytes": hc["hbm_bytes"]}
+    info["attention_hbm_bytes"] = hc["attention_hbm_bytes"]
+    info["collectives"] = hc["per_collective"]
+    info["collective_bytes_total"] = int(hc["collective_bytes"])
+    info["hlo_warnings"] = hc["n_warnings"]
+    info["status"] = "ok"
+
+    # roofline terms (per chip program; see EXPERIMENTS.md section Roofline)
+    chips = int(np.prod(list(mesh.shape.values())))
+    info["chips"] = chips
+    info["roofline"] = {
+        "compute_s": info["cost"]["flops"] / PEAK_FLOPS,
+        "memory_s": info["cost"]["bytes"] / HBM_BW,
+        "collective_s": info["collective_bytes_total"] / ICI_BW,
+    }
+    dom = max(info["roofline"], key=info["roofline"].get)
+    info["bottleneck"] = dom.replace("_s", "")
+    info["model_flops_global"] = model_flops(cfg, shape)
+    per_chip = info["model_flops_global"] / chips
+    info["model_vs_hlo_flops"] = (per_chip / info["cost"]["flops"]
+                                  if info["cost"]["flops"] else None)
+    info["roofline_flash"] = optimized_roofline(info, cfg, shape)
+    return info
+
+
+def flash_attention_bytes(cfg: ModelConfig, shape: ShapeConfig,
+                          n_micro: int, mesh_shape: Dict[str, int]) -> float:
+    """Per-chip HBM traffic of attention under the Pallas flash kernel:
+    q, k, v read + o written per pass; scores never leave VMEM.
+
+    Training runs ~3 passes (fwd + remat-fwd + bwd reading q,k,v,o,do);
+    prefill 1. Used to model the TPU-target roofline where the kernel
+    replaces the XLA chunked path (see EXPERIMENTS.md section Perf).
+    """
+    if cfg.family in ("xlstm",):
+        return 0.0  # no softmax attention
+    dp = mesh_shape.get("data", 1) * mesh_shape.get("pod", 1)
+    tp = mesh_shape.get("model", 1)
+    b_local = max(shape.global_batch / dp, 1.0)
+    s = shape.seq_len
+    hd = cfg.head_dim
+    h_local = max(cfg.n_heads / tp, 1.0)
+    kv_local = max(cfg.n_kv / tp, 1.0)
+    per_layer = 2.0 * (b_local * s * hd) * (2 * h_local + 2 * kv_local)
+    if shape.kind == "train":
+        passes = 3.0
+        per_micro = per_layer / n_micro * passes
+        n_layers = cfg.n_layers + cfg.n_enc_layers
+        if cfg.family == "griffin":
+            n_layers = cfg.n_layers // 3  # only the local-attention blocks
+        return per_micro * n_micro * n_layers
+    if shape.kind == "prefill":
+        n_layers = cfg.n_layers + cfg.n_enc_layers
+        if cfg.family == "griffin":
+            n_layers = cfg.n_layers // 3
+        return per_layer * n_layers
+    return 0.0  # decode attention is cache-read dominated; no substitution
+
+
+def optimized_roofline(info: Dict[str, Any], cfg: ModelConfig,
+                       shape: ShapeConfig) -> Optional[Dict[str, float]]:
+    """TPU-target roofline with the Pallas flash-attention substitution."""
+    att = info.get("attention_hbm_bytes")
+    if not att:
+        return None
+    mesh_shape = ({"pod": 2, "data": 16, "model": 16}
+                  if info.get("mesh") == "2x16x16"
+                  else {"data": 16, "model": 16})
+    flash = flash_attention_bytes(cfg, shape, info.get("n_micro", 1),
+                                  mesh_shape)
+    mem = max(info["cost"]["bytes"] - att + flash, 0.0)
+    return {
+        "compute_s": info["roofline"]["compute_s"],
+        "memory_s": mem / HBM_BW,
+        "collective_s": info["roofline"]["collective_s"],
+        "attention_bytes_removed": att,
+        "flash_bytes_added": flash,
+    }
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) per step (global).
+
+    For prefill we count 2*N*D (forward only); decode counts one new token
+    per sequence.
+    """
+    n_active = _active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch * 1
+    return 2.0 * n_active * tokens
+
+
+def _active_params(cfg: ModelConfig) -> float:
+    """Parameters touched per token (MoE: top_k + shared + dense residual)."""
+    d, hd = cfg.d_model, cfg.head_dim
+    attn = d * hd * (cfg.n_heads + 2 * cfg.n_kv) + cfg.n_heads * hd * d
+    if cfg.family == "griffin":
+        w = cfg.lru_width or d
+        rec = 2 * d * w + w * d + 2 * w * w  # in/gate/out + a/i gates
+        per_group = 2 * (rec + 3 * d * cfg.d_ff) + attn + 3 * d * cfg.d_ff
+        n_groups = cfg.n_layers // 3
+        tail = (cfg.n_layers - 3 * n_groups) * (rec + 3 * d * cfg.d_ff)
+        body = per_group * n_groups + tail
+    elif cfg.family == "xlstm":
+        per_pair = 5 * d * d + (3 * d * d + 2 * d * cfg.n_heads + d * d)
+        body = per_pair * (cfg.n_layers // 2)
+    elif cfg.family == "encdec":
+        enc = cfg.n_enc_layers * (attn + 3 * d * cfg.d_ff)
+        dec = cfg.n_layers * (2 * attn + 3 * d * cfg.d_ff)
+        body = enc + dec
+    else:
+        ff_active = 0.0
+        if cfg.n_experts > 0:
+            f = cfg.moe_d_ff or cfg.d_ff
+            ff_active = 3 * d * f * cfg.top_k
+            if cfg.dense_residual:
+                ff_active += 3 * d * cfg.d_ff
+            if cfg.n_shared:
+                ff_active += 3 * d * f * cfg.n_shared
+            ff_active += d * cfg.n_experts  # router
+        else:
+            ff_active = 3 * d * cfg.d_ff
+        body = cfg.n_layers * (attn + ff_active)
+    head = 2 * d * cfg.vocab  # embed + lm head
+    return body + head
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--overrides", default=None,
+                    help="JSON opt overrides, e.g. "
+                         "'{\"grad_rs\":true,\"n_micro\":2}'")
+    ap.add_argument("--tag", default=None,
+                    help="suffix for the result key (perf iterations)")
+    args = ap.parse_args()
+    overrides = json.loads(args.overrides) if args.overrides else None
+
+    archs = config_registry.ARCHS if (args.all or not args.arch) \
+        else [config_registry.canonical(args.arch)]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results: Dict[str, Any] = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                cell = f"{arch}|{shape}|{'multi' if mp else 'single'}"
+                if args.tag:
+                    cell = f"{cell}|{args.tag}"
+                if cell in results and results[cell].get("status") in (
+                        "ok", "skipped") and not args.force:
+                    print(f"[skip cached] {cell}")
+                    continue
+                print(f"[lowering] {cell}", flush=True)
+                try:
+                    ov = dict(overrides) if overrides else None
+                    if ov is not None and args.tag:
+                        ov["tag"] = args.tag
+                    info = lower_cell(arch, shape, mp, opt_overrides=ov)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    info = {"status": "error", "error": f"{type(e).__name__}: {e}",
+                            "traceback": traceback.format_exc()[-2000:]}
+                    print(f"[ERROR] {cell}: {info['error']}", flush=True)
+                results[cell] = info
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+                if info.get("status") == "ok":
+                    r = info["roofline"]
+                    print(f"[ok] {cell} compile={info['compile_s']}s "
+                          f"flops={info['cost']['flops']:.3e} "
+                          f"comp={r['compute_s']:.4f}s mem={r['memory_s']:.4f}s "
+                          f"coll={r['collective_s']:.4f}s -> {info['bottleneck']}",
+                          flush=True)
+    n_ok = sum(1 for v in results.values() if v.get("status") == "ok")
+    n_skip = sum(1 for v in results.values() if v.get("status") == "skipped")
+    n_err = sum(1 for v in results.values() if v.get("status") == "error")
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,444 @@
+"""Trip-count-aware roofline accounting over optimized (SPMD) HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` visits every computation ONCE —
+a lax.scan over 48 layers or 8 microbatches contributes a single body's
+FLOPs, undercounting by orders of magnitude. This module re-derives the
+three roofline inputs directly from ``compiled.as_text()``:
+
+  * flops            — 2*M*N*K for every dot (+ 1 flop/elt for arithmetic
+                       elementwise ops), weighted by while-loop trip counts;
+  * hbm_bytes        — per *fusion boundary* (operands + result), since
+                       fused internals never touch HBM; weighted by trips;
+  * collective_bytes — operand bytes of all-gather / all-reduce /
+                       reduce-scatter / all-to-all / collective-permute,
+                       weighted by trips, also broken out per op kind.
+
+Trip counts come from each while condition's ``compare(iter, constant)``.
+Unresolvable trips fall back to 1 and are reported in ``warnings``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "log", "tanh", "rsqrt", "sqrt", "negate", "abs",
+    "logistic", "cosine", "sine", "floor", "ceil", "round-nearest-afz",
+    "exponential-minus-one", "log-plus-one", "select", "compare", "and",
+    "or", "not", "xor",
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _type_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            total += _shape_elems(dims) * _DTYPE_BYTES[dt]
+    return total
+
+
+def _type_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    return _shape_elems(m.group(2)) if m else 0
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    by_name: Dict[str, Op]
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    attention_hbm_bytes: float = 0.0  # subset of hbm_bytes in attention scope
+    collective_bytes: float = 0.0
+    per_collective: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.attention_hbm_bytes += other.attention_hbm_bytes * mult
+        self.collective_bytes += other.collective_bytes * mult
+        for k, v in other.per_collective.items():
+            self.per_collective[k] = self.per_collective.get(k, 0.0) + v * mult
+
+
+def parse_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        # computation header: `%name (args) -> type {` or `ENTRY %name ...{`
+        if stripped.endswith("{") and ("(" in stripped) and "=" not in stripped.split("(")[0]:
+            header = stripped.split("(")[0].strip()
+            header = header.replace("ENTRY", "").strip()
+            name = header.lstrip("%").strip()
+            cur = Computation(name, [], {})
+            comps[name] = cur
+            continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        op = Op(name=m.group(1), type_str=m.group(2), opcode=m.group(3),
+                line=stripped)
+        cur.ops.append(op)
+        cur.by_name[op.name] = op
+    return comps
+
+
+def _operand_names(op: Op) -> List[str]:
+    """Names referenced inside the op's parens (before attribute list)."""
+    try:
+        inner = op.line.split(op.opcode + "(", 1)[1]
+    except IndexError:
+        return []
+    # cut at the matching close paren (attributes follow after `), `)
+    depth = 1
+    for i, ch in enumerate(inner):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                inner = inner[:i]
+                break
+    return _OPERAND_RE.findall(inner)
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    """2 * prod(out) * prod(contracting dims of lhs)."""
+    out_elems = _type_elems(op.type_str)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+    operands = _operand_names(op)
+    if not operands:
+        return 0.0
+    lhs = comp.by_name.get(operands[0])
+    if lhs is None or m is None:
+        return 2.0 * out_elems  # degenerate fallback
+    sm = _SHAPE_RE.search(lhs.type_str)
+    if sm is None:
+        return 2.0 * out_elems
+    dims = [int(d) for d in sm.group(2).split(",") if d]
+    k = 1
+    for idx in m.group(1).split(","):
+        if idx and int(idx) < len(dims):
+            k *= dims[int(idx)]
+    return 2.0 * out_elems * k
+
+
+def _trip_count(cond: Computation) -> Optional[int]:
+    """lax loops: condition is compare(iter, constant, LT)."""
+    consts: Dict[str, int] = {}
+    for op in cond.ops:
+        if op.opcode == "constant":
+            m = re.search(r"constant\((-?[0-9]+)\)", op.line)
+            if m and op.type_str.startswith(("s32[]", "s64[]", "u32[]", "u64[]")):
+                consts[op.name] = int(m.group(1))
+    for op in cond.ops:
+        if op.opcode == "compare" and "direction=LT" in op.line:
+            for nm in _operand_names(op):
+                if nm in consts:
+                    return max(consts[nm], 0)
+    # GE/GT countdown loops
+    for op in cond.ops:
+        if op.opcode == "compare":
+            for nm in _operand_names(op):
+                if nm in consts:
+                    return max(consts[nm], 0)
+    return None
+
+
+_PARAM_IDX_RE = re.compile(r"parameter\((\d+)\)")
+
+
+def _fusion_read_bytes(op: Op, operand_names: List[str], comp: Computation,
+                       called: Optional[Computation]) -> float:
+    """Operand bytes with dynamic-slice attribution.
+
+    If a fusion parameter is consumed ONLY by (dynamic-)slice ops inside the
+    fused computation, the HBM read is the slice output, not the whole
+    operand (the common scan-over-stacked-weights pattern)."""
+    param_by_idx: Dict[int, Op] = {}
+    users: Dict[str, List[Op]] = {}
+    if called is not None:
+        for o in called.ops:
+            if o.opcode == "parameter":
+                mm = _PARAM_IDX_RE.search(o.line)
+                if mm:
+                    param_by_idx[int(mm.group(1))] = o
+        for o in called.ops:
+            for nm in _operand_names(o):
+                users.setdefault(nm, []).append(o)
+
+    total = 0.0
+    for i, nm in enumerate(operand_names):
+        src = comp.by_name.get(nm)
+        if src is None:
+            continue
+        full = _type_bytes(src.type_str)
+        eff = full
+        p = param_by_idx.get(i)
+        if p is not None:
+            uses = users.get(p.name, [])
+            if uses and all(u.opcode in ("dynamic-slice", "slice")
+                            for u in uses):
+                eff = sum(_type_bytes(u.type_str) for u in uses)
+            elif uses and all(
+                    u.opcode == "dynamic-update-slice"
+                    and _operand_names(u)[:1] == [p.name] for u in uses):
+                # buffer only updated in place (aliased) — never read
+                eff = 0.0
+        total += min(eff, full)
+    return total
+
+
+def _fusion_write_bytes(op: Op, called: Optional[Computation]) -> float:
+    """Result bytes with dynamic-update-slice attribution: an in-place
+    cache/carry update only writes the update tensor."""
+    full = _type_bytes(op.type_str)
+    if called is None:
+        return full
+    root = None
+    for o in called.ops:
+        if o.line.startswith("ROOT"):
+            root = o
+            break
+    if root is None:
+        return full
+    if root.opcode == "dynamic-update-slice":
+        ops_n = _operand_names(root)
+        if len(ops_n) >= 2 and ops_n[1] in called.by_name:
+            return min(full, _type_bytes(called.by_name[ops_n[1]].type_str))
+    if root.opcode == "tuple":
+        b = 0.0
+        for nm in _operand_names(root):
+            src = called.by_name.get(nm)
+            if src is None:
+                continue
+            if src.opcode == "dynamic-update-slice":
+                sub = _operand_names(src)
+                if len(sub) >= 2 and sub[1] in called.by_name:
+                    b += _type_bytes(called.by_name[sub[1]].type_str)
+                    continue
+            b += _type_bytes(src.type_str)
+        return min(b, full)
+    return full
+
+
+_ATTN_MARK = "chunked_attention"
+
+
+def _in_attention_scope(op: Op, called: Optional[Computation]) -> bool:
+    """True if the op (or its fused computation) carries the model's
+    attention scope marker in its op_name metadata."""
+    if _ATTN_MARK in op.line:
+        return True
+    if called is not None:
+        return any(_ATTN_MARK in o.line for o in called.ops)
+    return False
+
+
+def analyze(hlo: str) -> Dict:
+    comps = parse_computations(hlo)
+    entry = None
+    for raw in hlo.splitlines():
+        if raw.strip().startswith("ENTRY"):
+            name = raw.strip().split("(")[0].replace("ENTRY", "").strip()
+            entry = name.lstrip("%")
+            break
+    if entry is None or entry not in comps:
+        # fall back: first computation containing a root tuple
+        entry = next(iter(comps))
+
+    warnings: List[str] = []
+    memo: Dict[str, Cost] = {}
+    visiting: set = set()
+
+    def cost_of(name: str) -> Cost:
+        if name in memo:
+            return memo[name]
+        if name in visiting or name not in comps:
+            return Cost()
+        visiting.add(name)
+        comp = comps[name]
+        total = Cost()
+        for op in comp.ops:
+            oc = op.opcode
+            if oc == "while":
+                body_m = _BODY_RE.search(op.line)
+                cond_m = _COND_RE.search(op.line)
+                trips = None
+                # XLA annotates resolved loops: known_trip_count:{"n":"7"}
+                tm = re.search(r'known_trip_count[^0-9]*([0-9]+)', op.line)
+                if tm:
+                    trips = int(tm.group(1))
+                if trips is None and cond_m and cond_m.group(1) in comps:
+                    trips = _trip_count(comps[cond_m.group(1)])
+                if trips is None:
+                    trips = 1
+                    warnings.append(f"unresolved trip count for {op.name}")
+                if body_m:
+                    total.add(cost_of(body_m.group(1)), float(trips))
+                continue
+            if oc in ("fusion", "call", "map", "reduce", "reduce-window",
+                      "sort", "scatter", "select-and-scatter"):
+                # hbm traffic at the fusion boundary, with slice-aware
+                # attribution: a fusion that dynamic-slices one layer out of
+                # an (L, ...) stacked weight only reads that layer, and a
+                # fused dynamic-update-slice only writes the update.
+                m = _CALLS_RE.search(op.line)
+                called = comps.get(m.group(1)) if m else None
+                opnds = _operand_names(op)
+                b = _fusion_read_bytes(op, opnds, comp, called)
+                b += _fusion_write_bytes(op, called)
+                total.hbm_bytes += b
+                if _in_attention_scope(op, called):
+                    total.attention_hbm_bytes += b
+                if called is not None:
+                    sub = cost_of(called.name)
+                    total.flops += sub.flops
+                    total.attention_hbm_bytes += sub.attention_hbm_bytes
+                    total.collective_bytes += sub.collective_bytes
+                    for k, v in sub.per_collective.items():
+                        total.per_collective[k] = total.per_collective.get(k, 0) + v
+                continue
+            if oc == "conditional":
+                branches = re.findall(r"branch_computations=\{([^}]*)\}", op.line)
+                if branches:
+                    names = [b.strip().lstrip("%") for b in branches[0].split(",")]
+                    subs = [cost_of(n) for n in names if n in comps]
+                    if subs:
+                        worst = max(subs, key=lambda c: c.flops)
+                        total.add(worst)
+                continue
+            if oc == "dot":
+                total.flops += _dot_flops(op, comp)
+                b = _type_bytes(op.type_str)
+                for nm in _operand_names(op):
+                    src = comp.by_name.get(nm)
+                    if src is not None:
+                        b += _type_bytes(src.type_str)
+                total.hbm_bytes += b
+                if _ATTN_MARK in op.line:
+                    total.attention_hbm_bytes += b
+                continue
+            if oc == "convolution":
+                # 2 * out_elems * kernel_elems_per_output (approx)
+                out_elems = _type_elems(op.type_str)
+                opnds = _operand_names(op)
+                kb = 1.0
+                if len(opnds) > 1 and opnds[1] in comp.by_name:
+                    kb = max(1.0, _type_elems(comp.by_name[opnds[1]].type_str)
+                             / max(out_elems, 1))
+                total.flops += 2.0 * out_elems * kb
+                total.hbm_bytes += _type_bytes(op.type_str)
+                continue
+            base = oc[:-6] if oc.endswith("-start") else oc
+            if base in _COLLECTIVES:
+                b = 0
+                for nm in _operand_names(op):
+                    src = comp.by_name.get(nm)
+                    if src is not None:
+                        b += _type_bytes(src.type_str)
+                if b == 0:  # operands not found: use result size
+                    b = _type_bytes(op.type_str)
+                # wire-bytes model (ring algorithms, (n-1)/n ~ 1):
+                #   all-reduce: 2x operand; all-gather: result size;
+                #   reduce-scatter / all-to-all / permute: operand size
+                # XLA:CPU promotes bf16 all-reduces to f32 ("..._promoted"
+                # reducer); the TPU target keeps them bf16 -> halve.
+                if base == "all-reduce":
+                    if "promoted" in op.line and "f32[" in op.type_str:
+                        b *= 0.5
+                    wire = 2.0 * b
+                elif base == "all-gather":
+                    wire = max(b, _type_bytes(op.type_str))
+                else:
+                    wire = b
+                total.collective_bytes += wire
+                total.per_collective[base] = (
+                    total.per_collective.get(base, 0) + wire)
+                total.hbm_bytes += b
+                continue
+            if oc in _ELEMENTWISE:
+                n = _type_elems(op.type_str)
+                total.flops += n
+                continue
+            if oc == "dynamic-update-slice":
+                ops_n = _operand_names(op)
+                if len(ops_n) >= 2 and ops_n[1] in comp.by_name:
+                    total.hbm_bytes += _type_bytes(
+                        comp.by_name[ops_n[1]].type_str)
+                else:
+                    total.hbm_bytes += _type_bytes(op.type_str)
+                continue
+            if oc in ("copy", "copy-start", "transpose", "broadcast",
+                      "dynamic-slice", "gather",
+                      "concatenate", "slice", "pad", "reverse", "iota"):
+                # data movement at top level (outside fusions)
+                total.hbm_bytes += _type_bytes(op.type_str)
+                if _ATTN_MARK in op.line:
+                    total.attention_hbm_bytes += _type_bytes(op.type_str)
+                continue
+        visiting.discard(name)
+        memo[name] = total
+        return total
+
+    c = cost_of(entry)
+    return {
+        "flops": c.flops,
+        "hbm_bytes": c.hbm_bytes,
+        "attention_hbm_bytes": c.attention_hbm_bytes,
+        "collective_bytes": c.collective_bytes,
+        "per_collective": {k: int(v) for k, v in c.per_collective.items()},
+        "warnings": warnings[:20],
+        "n_warnings": len(warnings),
+    }

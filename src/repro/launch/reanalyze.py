@@ -1,0 +1,69 @@
+"""Re-run the roofline analysis over dumped HLO (no recompilation).
+
+PYTHONPATH=src python -m repro.launch.reanalyze --hlo results/hlo \
+    --out results/dryrun.json
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import gzip
+import json
+import os
+
+from repro import configs as config_registry
+from repro.launch import hlo_analysis
+from repro.launch.dryrun import (HBM_BW, ICI_BW, PEAK_FLOPS,
+                                 optimized_roofline)
+from repro.models.config import SHAPES
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hlo", default="results/hlo")
+    ap.add_argument("--out", default="results/dryrun.json")
+    args = ap.parse_args()
+
+    with open(args.out) as f:
+        results = json.load(f)
+    for path in sorted(glob.glob(os.path.join(args.hlo, "*.txt.gz"))):
+        cell_id = os.path.basename(path)[:-7]
+        parts = cell_id.split("__")
+        arch, shape, mesh = parts[:3]
+        key = "|".join([arch, shape, mesh] + parts[3:])
+        if key not in results:
+            continue
+        with gzip.open(path, "rt") as f:
+            hlo = f.read()
+        hc = hlo_analysis.analyze(hlo)
+        info = results[key]
+        info["cost"] = {"flops": hc["flops"], "bytes": hc["hbm_bytes"]}
+        info["attention_hbm_bytes"] = hc["attention_hbm_bytes"]
+        info["collectives"] = hc["per_collective"]
+        info["collective_bytes_total"] = int(hc["collective_bytes"])
+        info["hlo_warnings"] = hc["n_warnings"]
+        info["roofline"] = {
+            "compute_s": hc["flops"] / PEAK_FLOPS,
+            "memory_s": hc["hbm_bytes"] / HBM_BW,
+            "collective_s": hc["collective_bytes"] / ICI_BW,
+        }
+        info["bottleneck"] = max(
+            info["roofline"], key=info["roofline"].get).replace("_s", "")
+        if info.get("model_flops_global") and hc["flops"]:
+            info["model_vs_hlo_flops"] = (
+                info["model_flops_global"] / info["chips"] / hc["flops"])
+        try:
+            cfg = config_registry.get_config(arch)
+            info["roofline_flash"] = optimized_roofline(
+                info, cfg, SHAPES[shape])
+        except KeyError:
+            pass
+        r = info["roofline"]
+        print(f"{key}: comp={r['compute_s']:.4f} mem={r['memory_s']:.4f} "
+              f"coll={r['collective_s']:.4f} -> {info['bottleneck']}")
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

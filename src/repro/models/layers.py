@@ -1,0 +1,325 @@
+"""Core layers: norms, RoPE/M-RoPE, chunked (flash-style) attention, MLP.
+
+Everything is pure JAX (no flax). Parameters are nested dicts; each ``init_*``
+returns (params, spec) where spec mirrors the params tree with logical-axis
+tuples consumed by repro.sharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding import logical_shard
+
+from .config import ModelConfig
+
+
+def truncated_normal(key, shape, dtype, std):
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+@jax.custom_vjp
+def grad_bf16_barrier(x):
+    """Identity with a bf16 cotangent cast.
+
+    The f32 logits/loss head makes every residual-stream cotangent f32; XLA
+    then promotes the tensor-parallel psums in the backward pass to f32
+    (2x wire bytes + 2x bwd activation traffic). Casting the cotangent back
+    to bf16 at block boundaries keeps the backward collectives in bf16 —
+    the standard mixed-precision training contract."""
+    return x
+
+
+def _gbb_fwd(x):
+    return x, None
+
+
+def _gbb_bwd_cast(_, g):
+    return (g.astype(jnp.bfloat16),)
+
+
+grad_bf16_barrier.defvjp(_gbb_fwd, _gbb_bwd_cast)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype) -> Tuple[Dict, Dict]:
+    return {"scale": jnp.ones((d,), dtype=dtype)}, {"scale": (None,)}
+
+
+def rmsnorm(params: Dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def init_layernorm(d: int, dtype) -> Tuple[Dict, Dict]:
+    return (
+        {"scale": jnp.ones((d,), dtype=dtype), "bias": jnp.zeros((d,), dtype=dtype)},
+        {"scale": (None,), "bias": (None,)},
+    )
+
+
+def layernorm(params: Dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    sin, cos = jnp.sin(angles)[..., None, :], jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections: Tuple[int, ...]) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.
+
+    positions: (3, B, S) — temporal / height / width position streams.
+    sections: per-stream number of (pair) frequencies, summing to D/2.
+    """
+    d = x.shape[-1]
+    assert sum(sections) == d // 2, (sections, d)
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    # select the position stream per frequency band
+    sec_id = jnp.repeat(jnp.arange(len(sections)), jnp.array(sections),
+                        total_repeat_length=d // 2)  # (D/2,)
+    # angles[b, s, f] = positions[sec_id[f], b, s] * freqs[f]
+    angles = jnp.einsum("tbs,tf->bsf", positions.astype(jnp.float32),
+                        jax.nn.one_hot(sec_id, len(sections), dtype=jnp.float32).T
+                        * freqs[None, :])
+    sin, cos = jnp.sin(angles)[..., None, :], jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (chunked online-softmax; GQA grouped; causal / window / bidir)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def chunked_attention(
+    q: jax.Array,  # (B, Sq, H, D)
+    k: jax.Array,  # (B, Sk, Kv, D)
+    v: jax.Array,  # (B, Sk, Kv, D)
+    *,
+    causal: bool,
+    q_offset: Any = 0,  # scalar or (B,) start position of q within kv timeline
+    window: int = 0,
+    kv_len: Optional[jax.Array] = None,  # (B,) valid kv length (decode)
+    chunk: int = 1024,
+) -> jax.Array:
+    """Flash-style attention: scan over KV chunks with online softmax.
+
+    Peak memory is O(Sq * chunk) per head group instead of O(Sq * Sk). The
+    Pallas kernel (repro.kernels.flash_attention) implements the same
+    contract for TPU; this is the XLA reference path used by the dry-run.
+    """
+    with jax.named_scope("chunked_attention"):
+        return _chunked_attention_impl(q, k, v, causal=causal,
+                                       q_offset=q_offset, window=window,
+                                       kv_len=kv_len, chunk=chunk)
+
+
+def _chunked_attention_impl(q, k, v, *, causal, q_offset, window, kv_len,
+                            chunk):
+    b, sq, h, d = q.shape
+    _, sk, n_kv, _ = k.shape
+    g = h // n_kv
+    qg = q.reshape(b, sq, n_kv, g, d)
+    scale = 1.0 / math.sqrt(d)
+
+    chunk = min(chunk, sk)
+    n_chunks = sk // chunk
+    assert sk % chunk == 0, (sk, chunk)
+    kc = k.reshape(b, n_chunks, chunk, n_kv, d)
+    vc = v.reshape(b, n_chunks, chunk, n_kv, d)
+
+    q_pos = jnp.asarray(q_offset)[..., None] + jnp.arange(sq)  # (B?, Sq)
+    q_pos = jnp.broadcast_to(q_pos, (b, sq))
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kb, vb, c_idx = xs
+        k_pos = c_idx * chunk + jnp.arange(chunk)  # (chunk,)
+        s = jnp.einsum("bqkgd,bckd->bkgqc", qg.astype(jnp.float32),
+                       kb.astype(jnp.float32)) * scale
+        mask = jnp.ones((b, sq, chunk), dtype=bool)
+        if causal:
+            mask &= q_pos[:, :, None] >= k_pos[None, None, :]
+        if window > 0:
+            mask &= (q_pos[:, :, None] - k_pos[None, None, :]) < window
+        if kv_len is not None:
+            mask &= k_pos[None, None, :] < kv_len[:, None, None]
+        s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgqc,bckd->bkgqd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, n_kv, g, sq), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((b, n_kv, g, sq), dtype=jnp.float32)
+    acc0 = jnp.zeros((b, n_kv, g, sq, d), dtype=jnp.float32)
+    idx = jnp.arange(n_chunks)
+    kcs = jnp.moveaxis(kc, 1, 0)  # (C, B, chunk, Kv, D)
+    vcs = jnp.moveaxis(vc, 1, 0)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, acc0), (kcs, vcs, idx))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = jnp.moveaxis(out, 3, 1).reshape(b, sq, h, d)  # (B,Sq,Kv,G,D)->(B,Sq,H,D)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention layer (projections + rope + cache handling)
+# ---------------------------------------------------------------------------
+
+def init_attention(cfg: ModelConfig, key, d_model: Optional[int] = None,
+                   cross: bool = False) -> Tuple[Dict, Dict]:
+    d = d_model or cfg.d_model
+    hd, h, kv = cfg.head_dim, cfg.n_heads, cfg.n_kv
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    std = 0.02
+    p = {
+        "wq": truncated_normal(k1, (d, h * hd), cfg.param_dtype, std),
+        "wk": truncated_normal(k2, (d, kv * hd), cfg.param_dtype, std),
+        "wv": truncated_normal(k3, (d, kv * hd), cfg.param_dtype, std),
+        "wo": truncated_normal(k4, (h * hd, d), cfg.param_dtype, std / math.sqrt(2 * cfg.n_layers)),
+    }
+    s = {
+        "wq": ("w_embed", "w_heads"),
+        "wk": ("w_embed", "w_heads"),
+        "wv": ("w_embed", "w_heads"),
+        "wo": ("w_heads", "w_embed"),
+    }
+    if cfg.qk_norm:
+        qp, qs = init_rmsnorm(hd, cfg.param_dtype)
+        kp, ks = init_rmsnorm(hd, cfg.param_dtype)
+        p["q_norm"], p["k_norm"] = qp, kp
+        s["q_norm"], s["k_norm"] = qs, ks
+    return p, s
+
+
+def attention_layer(
+    p: Dict,
+    cfg: ModelConfig,
+    x: jax.Array,  # (B, S, D)
+    *,
+    positions: Optional[jax.Array] = None,  # (B,S) or (3,B,S) for mrope
+    causal: bool = True,
+    window: int = 0,
+    cache: Optional[Tuple[jax.Array, jax.Array]] = None,  # (B, Smax, Kv, D) x2
+    cache_index: Optional[jax.Array] = None,  # scalar current length
+    kv_source: Optional[jax.Array] = None,  # cross attention source
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    b, s, d = x.shape
+    hd, h, n_kv = cfg.head_dim, cfg.n_heads, cfg.n_kv
+    src = kv_source if kv_source is not None else x
+
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(b, s, h, hd)
+    k = jnp.einsum("bsd,dh->bsh", src, p["wk"]).reshape(b, src.shape[1], n_kv, hd)
+    v = jnp.einsum("bsd,dh->bsh", src, p["wv"]).reshape(b, src.shape[1], n_kv, hd)
+    q = logical_shard(q, "batch", None, "heads", None)
+    k = logical_shard(k, "batch", None, "kv_heads", None)
+    v = logical_shard(v, "batch", None, "kv_heads", None)
+
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+
+    if kv_source is None:  # self-attention: rotary embedding
+        if positions is None:
+            base = cache_index if cache_index is not None else 0
+            positions = jnp.arange(s)[None, :] + base
+            positions = jnp.broadcast_to(positions, (b, s))
+        if cfg.mrope_sections:
+            if positions.ndim == 2:  # text-only fallback: same stream x3
+                positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+            q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+            q_offset = positions[0, :, 0]
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+            q_offset = positions[:, 0]
+    else:
+        q_offset = jnp.zeros((b,), dtype=jnp.int32)
+
+    new_cache = None
+    if cache is not None:
+        ck, cv = cache
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cache_index, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, cache_index, 0, 0))
+        ck = logical_shard(ck, "batch", "kv_seq", None, None)
+        cv = logical_shard(cv, "batch", "kv_seq", None, None)
+        new_cache = (ck, cv)
+        k, v = ck, cv
+        kv_len = jnp.full((b,), cache_index + s, dtype=jnp.int32)
+    else:
+        kv_len = None
+
+    out = chunked_attention(
+        q, k, v, causal=causal and kv_source is None, q_offset=q_offset,
+        window=window, kv_len=kv_len, chunk=cfg.attn_chunk,
+    )
+    out = jnp.einsum("bsh,hd->bsd", out.reshape(b, s, h * hd), p["wo"])
+    out = logical_shard(out, "batch", None, None)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg: ModelConfig, key, d_ff: Optional[int] = None) -> Tuple[Dict, Dict]:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_gate": truncated_normal(k1, (d, f), cfg.param_dtype, 0.02),
+        "w_up": truncated_normal(k2, (d, f), cfg.param_dtype, 0.02),
+        "w_down": truncated_normal(k3, (f, d), cfg.param_dtype,
+                                   0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+    s = {"w_gate": ("w_embed", "w_mlp"), "w_up": ("w_embed", "w_mlp"),
+         "w_down": ("w_mlp", "w_embed")}
+    return p, s
+
+
+def mlp(p: Dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["w_gate"]))
+    h = h * jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    h = logical_shard(h, "batch", None, "mlp_act")
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+    return logical_shard(out, "batch", None, None)

@@ -1,0 +1,631 @@
+"""Model assembly: init / train forward / prefill / decode for all families.
+
+Families:
+  dense   — pre-norm GQA transformer (llama3/qwen3/internlm2/starcoder2,
+            qwen2-vl backbone with M-RoPE)
+  moe     — dense skeleton with routed-expert FFN (+ shared experts /
+            arctic's parallel dense residual)
+  griffin — RecurrentGemma: repeating (RG-LRU, RG-LRU, local attention),
+            every temporal block followed by an MLP
+  xlstm   — alternating sLSTM / mLSTM blocks (no separate FFN)
+  encdec  — whisper backbone: bidirectional encoder over stub frame
+            embeddings + causal decoder with cross-attention
+
+Layer stacks are scanned (stacked weights) with jax.checkpoint around the
+block body so compiled HLO stays small and activation memory is bounded.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import logical_shard
+
+from . import layers as L
+from . import moe as MOE
+from . import recurrent as R
+from .config import ATTN, MLSTM, RGLRU, SLSTM, ModelConfig
+
+_is_spec = lambda x: isinstance(x, tuple)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _stack_init(init_fn, n: int, key) -> Tuple[Dict, Dict]:
+    """vmap the per-layer init over n keys; spec gets a leading None axis."""
+    keys = jax.random.split(key, n)
+    params = jax.vmap(lambda k: init_fn(k)[0])(keys)
+    spec = _spec_of(init_fn)  # traced, no allocation
+    spec = jax.tree.map(lambda s: (None,) + tuple(s), spec, is_leaf=_is_spec)
+    return params, spec
+
+
+def _spec_of(init_fn) -> Dict:
+    """Extract the logical-spec tree without allocating parameters."""
+    out = {}
+
+    def run(k):
+        p, s = init_fn(k)
+        out["spec"] = s
+        return p
+
+    jax.eval_shape(run, jax.random.PRNGKey(0))
+    return out["spec"]
+
+
+def _dense_layer_init(cfg: ModelConfig):
+    def init(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        p, s = {}, {}
+        p["ln_attn"], s["ln_attn"] = L.init_rmsnorm(cfg.d_model, cfg.param_dtype)
+        p["attn"], s["attn"] = L.init_attention(cfg, k1)
+        p["ln_mlp"], s["ln_mlp"] = L.init_rmsnorm(cfg.d_model, cfg.param_dtype)
+        if cfg.n_experts > 0:
+            p["moe"], s["moe"] = MOE.init_moe(cfg, k2)
+            if cfg.dense_residual:
+                p["mlp"], s["mlp"] = L.init_mlp(cfg, k3)
+            if cfg.n_shared > 0:
+                p["shared"], s["shared"] = L.init_mlp(
+                    cfg, k3, d_ff=cfg.n_shared * (cfg.moe_d_ff or cfg.d_ff))
+        else:
+            p["mlp"], s["mlp"] = L.init_mlp(cfg, k2)
+        return p, s
+    return init
+
+
+def _griffin_sub_init(cfg: ModelConfig, kind: str):
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        p, s = {}, {}
+        p["ln"], s["ln"] = L.init_rmsnorm(cfg.d_model, cfg.param_dtype)
+        if kind == RGLRU:
+            p["block"], s["block"] = R.init_rg_lru(cfg, k1)
+        else:
+            p["block"], s["block"] = L.init_attention(cfg, k1)
+        p["ln_mlp"], s["ln_mlp"] = L.init_rmsnorm(cfg.d_model, cfg.param_dtype)
+        p["mlp"], s["mlp"] = L.init_mlp(cfg, k2)
+        return p, s
+    return init
+
+
+def _griffin_group_init(cfg: ModelConfig):
+    def init(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        p, s = {}, {}
+        p["rg1"], s["rg1"] = _griffin_sub_init(cfg, RGLRU)(k1)
+        p["rg2"], s["rg2"] = _griffin_sub_init(cfg, RGLRU)(k2)
+        p["attn"], s["attn"] = _griffin_sub_init(cfg, ATTN)(k3)
+        return p, s
+    return init
+
+
+def _xlstm_pair_init(cfg: ModelConfig):
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        p, s = {}, {}
+        p["ln_s"], s["ln_s"] = L.init_rmsnorm(cfg.d_model, cfg.param_dtype)
+        p["slstm"], s["slstm"] = R.init_slstm(cfg, k1)
+        p["ln_m"], s["ln_m"] = L.init_rmsnorm(cfg.d_model, cfg.param_dtype)
+        p["mlstm"], s["mlstm"] = R.init_mlstm(cfg, k2)
+        return p, s
+    return init
+
+
+def _enc_layer_init(cfg: ModelConfig):
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        p, s = {}, {}
+        p["ln_attn"], s["ln_attn"] = L.init_layernorm(cfg.d_model, cfg.param_dtype)
+        p["attn"], s["attn"] = L.init_attention(cfg, k1)
+        p["ln_mlp"], s["ln_mlp"] = L.init_layernorm(cfg.d_model, cfg.param_dtype)
+        p["mlp"], s["mlp"] = L.init_mlp(cfg, k2)
+        return p, s
+    return init
+
+
+def _dec_layer_init(cfg: ModelConfig):
+    def init(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        p, s = {}, {}
+        p["ln_self"], s["ln_self"] = L.init_layernorm(cfg.d_model, cfg.param_dtype)
+        p["self_attn"], s["self_attn"] = L.init_attention(cfg, k1)
+        p["ln_cross"], s["ln_cross"] = L.init_layernorm(cfg.d_model, cfg.param_dtype)
+        p["cross_attn"], s["cross_attn"] = L.init_attention(cfg, k2)
+        p["ln_mlp"], s["ln_mlp"] = L.init_layernorm(cfg.d_model, cfg.param_dtype)
+        p["mlp"], s["mlp"] = L.init_mlp(cfg, k3)
+        return p, s
+    return init
+
+
+def init_model(cfg: ModelConfig, key) -> Tuple[Dict, Dict]:
+    """Returns (params, logical_specs) — same tree structure."""
+    keys = jax.random.split(key, 8)
+    p: Dict[str, Any] = {}
+    s: Dict[str, Any] = {}
+    p["embed"] = L.truncated_normal(keys[0], (cfg.vocab, cfg.d_model),
+                                    cfg.param_dtype, 0.02)
+    s["embed"] = ("w_vocab", "w_embed")
+    p["head"] = L.truncated_normal(keys[1], (cfg.d_model, cfg.vocab),
+                                   cfg.param_dtype, 0.02)
+    s["head"] = ("w_embed", "w_vocab")
+    p["ln_f"], s["ln_f"] = L.init_rmsnorm(cfg.d_model, cfg.param_dtype)
+
+    if cfg.family in ("dense", "moe"):
+        p["layers"], s["layers"] = _stack_init(
+            _dense_layer_init(cfg), cfg.n_layers, keys[2])
+    elif cfg.family == "griffin":
+        n_groups = cfg.n_layers // 3
+        n_tail = cfg.n_layers - 3 * n_groups
+        p["groups"], s["groups"] = _stack_init(
+            _griffin_group_init(cfg), n_groups, keys[2])
+        if n_tail:
+            p["tail"], s["tail"] = _stack_init(
+                _griffin_sub_init(cfg, RGLRU), n_tail, keys[3])
+    elif cfg.family == "xlstm":
+        assert cfg.n_layers % 2 == 0
+        p["pairs"], s["pairs"] = _stack_init(
+            _xlstm_pair_init(cfg), cfg.n_layers // 2, keys[2])
+    elif cfg.family == "encdec":
+        p["enc"], s["enc"] = _stack_init(
+            _enc_layer_init(cfg), cfg.n_enc_layers, keys[2])
+        p["dec"], s["dec"] = _stack_init(
+            _dec_layer_init(cfg), cfg.n_layers, keys[3])
+        p["ln_enc"], s["ln_enc"] = L.init_layernorm(cfg.d_model, cfg.param_dtype)
+    else:
+        raise ValueError(cfg.family)
+    return p, s
+
+
+def param_count(params: Dict) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Block bodies shared by training forward and prefill
+# ---------------------------------------------------------------------------
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if getattr(cfg, "remat_policy", "nothing") == "dots"
+                  else jax.checkpoint_policies.nothing_saveable)
+        return jax.checkpoint(fn, policy=policy)
+    return fn
+
+
+def _dense_block_seq(cfg: ModelConfig, x, lp, positions, cache=None,
+                     cache_index=None):
+    if cfg.bf16_grad_barrier:
+        x = L.grad_bf16_barrier(x)
+    h, new_cache = L.attention_layer(
+        lp["attn"], cfg, L.rmsnorm(lp["ln_attn"], x, cfg.norm_eps),
+        positions=positions, causal=True, cache=cache, cache_index=cache_index)
+    x = x + h
+    y_in = L.rmsnorm(lp["ln_mlp"], x, cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.n_experts > 0:
+        y, aux = MOE.moe_block(lp["moe"], cfg, y_in)
+        if cfg.dense_residual:
+            y = y + L.mlp(lp["mlp"], y_in)
+        if cfg.n_shared > 0:
+            y = y + L.mlp(lp["shared"], y_in)
+    else:
+        y = L.mlp(lp["mlp"], y_in)
+    return x + y, aux, new_cache
+
+
+def _griffin_sub_seq(cfg: ModelConfig, x, sp, kind, positions, state=None,
+                     cache=None, cache_index=None):
+    h_in = L.rmsnorm(sp["ln"], x, cfg.norm_eps)
+    new_state, new_cache = None, None
+    if kind == RGLRU:
+        h, new_state = R.griffin_recurrent_block(sp["block"], cfg, h_in, state)
+    else:
+        h, new_cache = L.attention_layer(
+            sp["block"], cfg, h_in, positions=positions, causal=True,
+            window=cfg.window, cache=cache, cache_index=cache_index)
+    x = x + h
+    x = x + L.mlp(sp["mlp"], L.rmsnorm(sp["ln_mlp"], x, cfg.norm_eps))
+    return x, new_state, new_cache
+
+
+def _encoder(params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """Whisper encoder over stub frame embeddings (bidirectional)."""
+    x = frames.astype(cfg.dtype)
+    x = logical_shard(x, "batch", None, None)
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1])[None], x.shape[:2])
+
+    def body(x, lp):
+        h, _ = L.attention_layer(
+            lp["attn"], cfg, L.layernorm(lp["ln_attn"], x, cfg.norm_eps),
+            positions=pos, causal=False)
+        x = x + h
+        x = x + L.mlp(lp["mlp"], L.layernorm(lp["ln_mlp"], x, cfg.norm_eps))
+        return x, None
+
+    x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, params["enc"])
+    return L.layernorm(params["ln_enc"], x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Training forward + loss
+# ---------------------------------------------------------------------------
+
+def forward(
+    params: Dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (B, S) int32
+    *,
+    positions: Optional[jax.Array] = None,
+    frames: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Training forward (no cache). Returns (logits, moe_aux_loss)."""
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    x = logical_shard(x, "batch", None, None)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.family in ("dense", "moe"):
+        def body(carry, lp):
+            x, aux = carry
+            x, a, _ = _dense_block_seq(cfg, x, lp, positions)
+            return (x, aux + a), None
+        (x, aux_total), _ = jax.lax.scan(
+            _maybe_remat(body, cfg), (x, aux_total), params["layers"])
+
+    elif cfg.family == "griffin":
+        def body(x, gp):
+            x, _, _ = _griffin_sub_seq(cfg, x, gp["rg1"], RGLRU, positions)
+            x, _, _ = _griffin_sub_seq(cfg, x, gp["rg2"], RGLRU, positions)
+            x, _, _ = _griffin_sub_seq(cfg, x, gp["attn"], ATTN, positions)
+            return x, None
+        x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, params["groups"])
+        if "tail" in params:
+            def tbody(x, tp):
+                x, _, _ = _griffin_sub_seq(cfg, x, tp, RGLRU, positions)
+                return x, None
+            x, _ = jax.lax.scan(_maybe_remat(tbody, cfg), x, params["tail"])
+
+    elif cfg.family == "xlstm":
+        def body(x, pp):
+            y, _ = R.slstm_scan(pp["slstm"],
+                                L.rmsnorm(pp["ln_s"], x, cfg.norm_eps))
+            x = x + y
+            x = x + R.mlstm_chunkwise(pp["mlstm"], cfg,
+                                      L.rmsnorm(pp["ln_m"], x, cfg.norm_eps))
+            return x, None
+        x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, params["pairs"])
+
+    elif cfg.family == "encdec":
+        assert frames is not None, "encdec needs stub frame embeddings"
+        enc_out = _encoder(params, cfg, frames)
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+        def body(x, lp):
+            h, _ = L.attention_layer(
+                lp["self_attn"], cfg,
+                L.layernorm(lp["ln_self"], x, cfg.norm_eps),
+                positions=pos, causal=True)
+            x = x + h
+            h, _ = L.attention_layer(
+                lp["cross_attn"], cfg,
+                L.layernorm(lp["ln_cross"], x, cfg.norm_eps),
+                kv_source=enc_out)
+            x = x + h
+            x = x + L.mlp(lp["mlp"], L.layernorm(lp["ln_mlp"], x, cfg.norm_eps))
+            return x, None
+        x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, params["dec"])
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x.astype(cfg.logit_dtype),
+                        params["head"].astype(cfg.logit_dtype))
+    logits = logical_shard(logits, "batch", None, "vocab_act")
+    return logits, aux_total
+
+
+def loss_fn(params: Dict, cfg: ModelConfig, batch: Dict,
+            aux_weight: float = 0.01) -> Tuple[jax.Array, Dict]:
+    """Next-token cross entropy (+ MoE load-balance aux)."""
+    logits, aux = forward(
+        params, cfg, batch["tokens"],
+        positions=batch.get("positions"), frames=batch.get("frames"))
+    labels = batch["labels"]
+    valid = labels >= 0
+    lab = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+    ce = (logz - gold) * valid
+    loss = ce.sum() / jnp.maximum(valid.sum(), 1)
+    total = loss + aux_weight * aux
+    return total, {"ce": loss, "aux": aux, "tokens": valid.sum()}
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init, prefill, decode step
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               prefill: bool = False) -> Dict:
+    """Decode-state pytree per family. Attention caches are bf16.
+
+    For griffin the decode cache is a *ring buffer* of the window size;
+    prefill uses a full-length buffer (sequence-sharded) instead.
+    """
+    hd, kv = cfg.head_dim, cfg.n_kv
+    if cfg.family in ("dense", "moe"):
+        shape = (cfg.n_layers, batch, max_len, kv, hd)
+        return {"k": jnp.zeros(shape, cfg.dtype), "v": jnp.zeros(shape, cfg.dtype),
+                "index": jnp.zeros((), jnp.int32)}
+    if cfg.family == "griffin":
+        n_groups = cfg.n_layers // 3
+        n_tail = cfg.n_layers - 3 * n_groups
+        win = max_len if prefill else min(cfg.window or max_len, max_len)
+        w = cfg.lru_width or cfg.d_model
+        cache = {
+            "k": jnp.zeros((n_groups, batch, win, kv, hd), cfg.dtype),
+            "v": jnp.zeros((n_groups, batch, win, kv, hd), cfg.dtype),
+            "conv": jnp.zeros((n_groups, 2, batch, cfg.conv_width - 1, w), cfg.dtype),
+            "h": jnp.zeros((n_groups, 2, batch, w), cfg.dtype),
+            "index": jnp.zeros((), jnp.int32),
+        }
+        if n_tail:
+            cache["tail_conv"] = jnp.zeros(
+                (n_tail, batch, cfg.conv_width - 1, w), cfg.dtype)
+            cache["tail_h"] = jnp.zeros((n_tail, batch, w), cfg.dtype)
+        return cache
+    if cfg.family == "xlstm":
+        n_pairs = cfg.n_layers // 2
+        nh = cfg.n_heads
+        hd2 = cfg.d_model // nh
+        d = cfg.d_model
+        return {
+            "s_c": jnp.zeros((n_pairs, batch, d), jnp.float32),
+            "s_n": jnp.zeros((n_pairs, batch, d), jnp.float32),
+            "s_m": jnp.full((n_pairs, batch, d), -1e30, jnp.float32),
+            "m_C": jnp.zeros((n_pairs, batch, nh, hd2, hd2), jnp.float32),
+            "m_n": jnp.zeros((n_pairs, batch, nh, hd2), jnp.float32),
+            "m_m": jnp.full((n_pairs, batch, nh), -30.0, jnp.float32),
+            "index": jnp.zeros((), jnp.int32),
+        }
+    if cfg.family == "encdec":
+        enc_len = max(max_len // cfg.enc_frames_ratio, 1)
+        shape = (cfg.n_layers, batch, max_len, kv, hd)
+        return {
+            "k": jnp.zeros(shape, cfg.dtype), "v": jnp.zeros(shape, cfg.dtype),
+            "enc_out": jnp.zeros((batch, enc_len, cfg.d_model), cfg.dtype),
+            "index": jnp.zeros((), jnp.int32),
+        }
+    raise ValueError(cfg.family)
+
+
+def prefill(params: Dict, cfg: ModelConfig, tokens: jax.Array,
+            *, positions: Optional[jax.Array] = None,
+            frames: Optional[jax.Array] = None,
+            max_len: Optional[int] = None) -> Tuple[jax.Array, Dict]:
+    """Process the prompt, build the decode state. Returns (last_logits, cache).
+
+    ``max_len`` reserves cache room beyond the prompt for decoding.
+    """
+    b, s = tokens.shape
+    cache = init_cache(cfg, b, max(max_len or s, s), prefill=True)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    x = logical_shard(x, "batch", None, None)
+
+    if cfg.family in ("dense", "moe"):
+        def body(x, xs):
+            lp, ck, cv = xs
+            x, _, kv = _dense_block_seq(cfg, x, lp, positions,
+                                        cache=(ck, cv), cache_index=0)
+            return x, kv
+        x, kvs = jax.lax.scan(_maybe_remat(body, cfg), x,
+                              (params["layers"], cache["k"], cache["v"]))
+        new_cache = {"k": kvs[0], "v": kvs[1], "index": jnp.asarray(s, jnp.int32)}
+
+    elif cfg.family == "griffin":
+        def body(x, xs):
+            gp, ck, cv = xs
+            x, s1, _ = _griffin_sub_seq(cfg, x, gp["rg1"], RGLRU, positions)
+            x, s2, _ = _griffin_sub_seq(cfg, x, gp["rg2"], RGLRU, positions)
+            x, _, kv = _griffin_sub_seq(cfg, x, gp["attn"], ATTN, positions,
+                                        cache=(ck, cv), cache_index=0)
+            conv = jnp.stack([s1["conv"], s2["conv"]])
+            h = jnp.stack([s1["h"], s2["h"]])
+            return x, (kv[0], kv[1], conv, h)
+        x, outs = jax.lax.scan(_maybe_remat(body, cfg), x,
+                               (params["groups"], cache["k"], cache["v"]))
+        new_cache = {"k": outs[0], "v": outs[1], "conv": outs[2], "h": outs[3],
+                     "index": jnp.asarray(s, jnp.int32)}
+        if "tail" in params:
+            def tbody(x, tp):
+                x, st, _ = _griffin_sub_seq(cfg, x, tp, RGLRU, positions)
+                return x, (st["conv"], st["h"])
+            x, touts = jax.lax.scan(_maybe_remat(tbody, cfg), x, params["tail"])
+            new_cache["tail_conv"], new_cache["tail_h"] = touts
+
+    elif cfg.family == "xlstm":
+        def body(x, pp):
+            y, s_state = R.slstm_scan(pp["slstm"],
+                                      L.rmsnorm(pp["ln_s"], x, cfg.norm_eps))
+            x = x + y
+            y, m_state = R.mlstm_chunkwise(
+                pp["mlstm"], cfg, L.rmsnorm(pp["ln_m"], x, cfg.norm_eps),
+                return_state=True)
+            x = x + y
+            return x, (s_state["c"], s_state["n"], s_state["m"],
+                       m_state["C"], m_state["n"], m_state["m"])
+        x, outs = jax.lax.scan(_maybe_remat(body, cfg), x, params["pairs"])
+        new_cache = {"s_c": outs[0], "s_n": outs[1], "s_m": outs[2],
+                     "m_C": outs[3], "m_n": outs[4], "m_m": outs[5],
+                     "index": jnp.asarray(s, jnp.int32)}
+
+    elif cfg.family == "encdec":
+        assert frames is not None
+        enc_out = _encoder(params, cfg, frames)
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+        def body(x, xs):
+            lp, ck, cv = xs
+            h, kv = L.attention_layer(
+                lp["self_attn"], cfg,
+                L.layernorm(lp["ln_self"], x, cfg.norm_eps),
+                positions=pos, causal=True, cache=(ck, cv), cache_index=0)
+            x = x + h
+            h, _ = L.attention_layer(
+                lp["cross_attn"], cfg,
+                L.layernorm(lp["ln_cross"], x, cfg.norm_eps),
+                kv_source=enc_out)
+            x = x + h
+            x = x + L.mlp(lp["mlp"], L.layernorm(lp["ln_mlp"], x, cfg.norm_eps))
+            return x, kv
+        x, kvs = jax.lax.scan(_maybe_remat(body, cfg), x,
+                              (params["dec"], cache["k"], cache["v"]))
+        new_cache = {"k": kvs[0], "v": kvs[1], "enc_out": enc_out,
+                     "index": jnp.asarray(s, jnp.int32)}
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.rmsnorm(params["ln_f"], x[:, -1:], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x.astype(cfg.logit_dtype),
+                        params["head"].astype(cfg.logit_dtype))
+    return logits, new_cache
+
+
+def _ring_positions(win: int, index: jax.Array) -> jax.Array:
+    """Absolute position stored in each ring-buffer slot at time ``index``."""
+    i = jnp.arange(win)
+    return index - ((index - i) % win)
+
+
+def decode_step(params: Dict, cfg: ModelConfig, cache: Dict,
+                tokens: jax.Array) -> Tuple[jax.Array, Dict]:
+    """One token step. tokens: (B, 1). Returns (logits (B,1,V), new cache)."""
+    b = tokens.shape[0]
+    index = cache["index"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    x = logical_shard(x, "batch", None, None)
+    pos = jnp.broadcast_to(index[None, None], (b, 1))
+
+    if cfg.family in ("dense", "moe"):
+        def body(x, xs):
+            lp, ck, cv = xs
+            x, _, kv = _dense_block_seq(cfg, x, lp, pos, cache=(ck, cv),
+                                        cache_index=index)
+            return x, kv
+        x, kvs = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+        new_cache = {"k": kvs[0], "v": kvs[1], "index": index + 1}
+
+    elif cfg.family == "griffin":
+        win = cache["k"].shape[2]
+        slot = index % win
+        kpos = _ring_positions(win, index)
+
+        def attn_ring(sp, x_in, ck, cv):
+            h_in = L.rmsnorm(sp["ln"], x_in, cfg.norm_eps)
+            hd, h_, n_kv = cfg.head_dim, cfg.n_heads, cfg.n_kv
+            ap = sp["block"]
+            q = jnp.einsum("bsd,dh->bsh", h_in, ap["wq"]).reshape(b, 1, h_, hd)
+            k = jnp.einsum("bsd,dh->bsh", h_in, ap["wk"]).reshape(b, 1, n_kv, hd)
+            v = jnp.einsum("bsd,dh->bsh", h_in, ap["wv"]).reshape(b, 1, n_kv, hd)
+            q = L.apply_rope(q, pos, cfg.rope_theta)
+            k = L.apply_rope(k, pos, cfg.rope_theta)
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                              (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                              (0, slot, 0, 0))
+            valid = (kpos <= index) & (index - kpos < win) & (kpos >= 0)
+            sc = jnp.einsum(
+                "bqkgd,bckd->bkgqc",
+                q.reshape(b, 1, n_kv, h_ // n_kv, hd).astype(jnp.float32),
+                ck.astype(jnp.float32)) / math.sqrt(hd)
+            sc = jnp.where(valid[None, None, None, None, :], sc, L.NEG_INF)
+            w = jax.nn.softmax(sc, axis=-1)
+            o = jnp.einsum("bkgqc,bckd->bkgqd", w, cv.astype(jnp.float32))
+            o = jnp.moveaxis(o, 3, 1).reshape(b, 1, h_ * hd).astype(x_in.dtype)
+            out = jnp.einsum("bsh,hd->bsd", o, ap["wo"])
+            x_new = x_in + out
+            x_new = x_new + L.mlp(sp["mlp"],
+                                  L.rmsnorm(sp["ln_mlp"], x_new, cfg.norm_eps))
+            return x_new, ck, cv
+
+        def body(x, xs):
+            gp, ck, cv, conv, hstate = xs
+            st1 = {"conv": conv[0], "h": hstate[0]}
+            x, s1, _ = _griffin_sub_seq(cfg, x, gp["rg1"], RGLRU, pos, state=st1)
+            st2 = {"conv": conv[1], "h": hstate[1]}
+            x, s2, _ = _griffin_sub_seq(cfg, x, gp["rg2"], RGLRU, pos, state=st2)
+            x, ck, cv = attn_ring(gp["attn"], x, ck, cv)
+            conv_new = jnp.stack([s1["conv"], s2["conv"]])
+            h_new = jnp.stack([s1["h"], s2["h"]])
+            return x, (ck, cv, conv_new, h_new)
+
+        x, outs = jax.lax.scan(
+            body, x, (params["groups"], cache["k"], cache["v"],
+                      cache["conv"], cache["h"]))
+        new_cache = {"k": outs[0], "v": outs[1], "conv": outs[2], "h": outs[3],
+                     "index": index + 1}
+        if "tail" in params:
+            def tbody(x, xs):
+                tp, conv, hstate = xs
+                st = {"conv": conv, "h": hstate}
+                x, s_new, _ = _griffin_sub_seq(cfg, x, tp, RGLRU, pos, state=st)
+                return x, (s_new["conv"], s_new["h"])
+            x, touts = jax.lax.scan(
+                tbody, x, (params["tail"], cache["tail_conv"], cache["tail_h"]))
+            new_cache["tail_conv"], new_cache["tail_h"] = touts
+
+    elif cfg.family == "xlstm":
+        def body(x, xs):
+            pp, sc, sn, sm, mC, mn, mm = xs
+            y, s_new = R.slstm_scan(pp["slstm"],
+                                    L.rmsnorm(pp["ln_s"], x, cfg.norm_eps),
+                                    state={"c": sc, "n": sn, "m": sm})
+            x = x + y
+            y, m_new = R.mlstm_step(pp["mlstm"], cfg,
+                                    L.rmsnorm(pp["ln_m"], x, cfg.norm_eps),
+                                    {"C": mC, "n": mn, "m": mm})
+            x = x + y
+            return x, (s_new["c"], s_new["n"], s_new["m"],
+                       m_new["C"], m_new["n"], m_new["m"])
+        x, outs = jax.lax.scan(
+            body, x, (params["pairs"], cache["s_c"], cache["s_n"], cache["s_m"],
+                      cache["m_C"], cache["m_n"], cache["m_m"]))
+        new_cache = {"s_c": outs[0], "s_n": outs[1], "s_m": outs[2],
+                     "m_C": outs[3], "m_n": outs[4], "m_m": outs[5],
+                     "index": index + 1}
+
+    elif cfg.family == "encdec":
+        enc_out = cache["enc_out"]
+
+        def body(x, xs):
+            lp, ck, cv = xs
+            h, kv = L.attention_layer(
+                lp["self_attn"], cfg,
+                L.layernorm(lp["ln_self"], x, cfg.norm_eps),
+                positions=pos, causal=True, cache=(ck, cv), cache_index=index)
+            x = x + h
+            h, _ = L.attention_layer(
+                lp["cross_attn"], cfg,
+                L.layernorm(lp["ln_cross"], x, cfg.norm_eps),
+                kv_source=enc_out)
+            x = x + h
+            x = x + L.mlp(lp["mlp"], L.layernorm(lp["ln_mlp"], x, cfg.norm_eps))
+            return x, kv
+        x, kvs = jax.lax.scan(body, x, (params["dec"], cache["k"], cache["v"]))
+        new_cache = {"k": kvs[0], "v": kvs[1], "enc_out": enc_out,
+                     "index": index + 1}
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x.astype(cfg.logit_dtype),
+                        params["head"].astype(cfg.logit_dtype))
+    logits = logical_shard(logits, "batch", None, "vocab_act")
+    return logits, new_cache

@@ -1,0 +1,120 @@
+"""Mixture-of-Experts with scatter-based capacity dispatch.
+
+Design notes (DESIGN.md section 4):
+  * tokens are grouped PER BATCH ROW so the position-in-expert cumsum never
+    crosses a data shard (no sequential cross-shard dependency);
+  * dispatch uses scatter-add into an (B, E, C, D) buffer instead of the
+    GShard one-hot einsum — the (tokens, E, C) one-hot blow-up never
+    materializes (at 32k x 32 x 128e that tensor would be ~10 TB);
+  * expert weights are sharded E->'data' (expert parallelism) with the FFN
+    dim on 'model'; XLA inserts the token all-to-all from the sharding
+    constraints;
+  * qwen2-moe style shared experts run as a parallel dense SwiGLU; arctic's
+    dense residual branch likewise.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import current_rules, logical_shard
+
+from .config import ModelConfig
+from .layers import truncated_normal
+
+
+def init_moe(cfg: ModelConfig, key) -> Tuple[Dict, Dict]:
+    d, f, e = cfg.d_model, cfg.moe_d_ff or cfg.d_ff, cfg.n_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    std = 0.02
+    p = {
+        "router": truncated_normal(k1, (d, e), jnp.float32, std),
+        "w_gate": truncated_normal(k2, (e, d, f), cfg.param_dtype, std),
+        "w_up": truncated_normal(k3, (e, d, f), cfg.param_dtype, std),
+        "w_down": truncated_normal(k4, (e, f, d), cfg.param_dtype,
+                                   std / math.sqrt(2 * cfg.n_layers)),
+    }
+    s = {
+        # The router is tiny (d_model x E ~ a few MB): REPLICATE it. FSDP-
+        # sharding its d_model dim makes the backward emit a full fp32 dx
+        # all-reduce over the data axis per layer per micro (~1.3 TB/step
+        # for arctic) — see EXPERIMENTS.md section Perf, arctic iteration 3.
+        "router": (None, None),
+        "w_gate": ("w_experts", None, "w_mlp"),
+        "w_up": ("w_experts", None, "w_mlp"),
+        "w_down": ("w_experts", "w_mlp", None),
+    }
+    return p, s
+
+
+def _buf_axes(cfg: ModelConfig):
+    """Dispatch-buffer sharding. EP mode aligns the buffer's expert axis
+    with the expert-sharded weights (token all-to-all, expert grads stay
+    local — no cross-data grad all-reduce for expert weights); fallback is
+    batch sharding when the expert count doesn't divide the data axis."""
+    rules = current_rules()
+    if cfg.moe_ep_dispatch and rules is not None and rules.mesh is not None:
+        dp = rules.mesh.shape.get("data", 1)
+        if cfg.n_experts % max(dp, 1) == 0:
+            return (None, "w_experts", None, None)
+    return ("batch", "experts_act", None, None)
+
+
+def moe_capacity(tokens_per_group: int, cfg: ModelConfig) -> int:
+    c = int(math.ceil(tokens_per_group * cfg.top_k / cfg.n_experts
+                      * cfg.capacity_factor))
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8, min 8
+
+
+def moe_block(p: Dict, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (y, aux_loss). Router in fp32.
+
+    Returns the load-balancing auxiliary loss (Switch-style) alongside the
+    output so the training loop can add it.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    c = moe_capacity(s, cfg)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)  # (B,S,E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (B,S,k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9)
+
+    # Switch aux loss: mean(prob per expert) * mean(assignment per expert) * E
+    me = probs.mean(axis=(0, 1))  # (E,)
+    ce = jnp.zeros((e,), jnp.float32).at[expert_idx.reshape(-1)].add(
+        1.0 / (b * s * k))
+    aux = jnp.sum(me * ce) * e
+
+    # position-in-expert within each batch row (group)
+    flat_e = expert_idx.reshape(b, s * k)  # (B, S*k)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)  # (B, S*k, E)
+    pos = jnp.cumsum(onehot, axis=1) - 1  # (B, S*k, E)
+    pos = jnp.take_along_axis(pos, flat_e[..., None], axis=-1)[..., 0]  # (B,S*k)
+    keep = (pos < c).astype(x.dtype)  # dropped beyond capacity
+
+    # scatter tokens into the (B, E, C, D) dispatch buffer
+    tok = jnp.repeat(x, k, axis=1)  # (B, S*k, D) token per assignment slot
+    w = keep * gate_vals.reshape(b, s * k).astype(x.dtype)
+    pos_c = jnp.minimum(pos, c - 1)
+    buf = jnp.zeros((b, e, c, d), dtype=x.dtype)
+    bidx = jnp.arange(b)[:, None]
+    buf = buf.at[bidx, flat_e, pos_c].add(tok * keep[..., None])
+    buf = logical_shard(buf, *_buf_axes(cfg))
+
+    # expert FFN (SwiGLU), E-sharded
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, p["w_gate"]))
+    h = h * jnp.einsum("becd,edf->becf", buf, p["w_up"])
+    out_buf = jnp.einsum("becf,efd->becd", h, p["w_down"])
+    out_buf = logical_shard(out_buf, *_buf_axes(cfg))
+
+    # gather back and combine with gate weights
+    y_slots = out_buf[bidx, flat_e, pos_c]  # (B, S*k, D)
+    y = (y_slots * w[..., None]).reshape(b, s, k, d).sum(axis=2)
+    y = logical_shard(y, "batch", None, None)
+    return y.astype(x.dtype), aux

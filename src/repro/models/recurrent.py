@@ -1,0 +1,341 @@
+"""Recurrent temporal-mixing blocks: RG-LRU (Griffin) and xLSTM cells.
+
+All three support two execution modes:
+  * sequence mode (training / prefill): associative-scan (RG-LRU, sLSTM) or
+    chunkwise-parallel (mLSTM) over the time axis — sub-quadratic, bounded
+    memory;
+  * step mode (decode): O(1) recurrent state update.
+
+DESIGN.md records one simplification: sLSTM gates are computed from the
+input only (no R_h recurrence), which makes the cell an input-gated linear
+recurrence and therefore associative-scannable; this matches the
+"parallelizable" xLSTM ablation.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import logical_shard
+
+from .config import ModelConfig
+from .layers import truncated_normal
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Real-Gated Linear Recurrent Unit) — Griffin / RecurrentGemma
+# ---------------------------------------------------------------------------
+
+def init_rg_lru(cfg: ModelConfig, key) -> Tuple[Dict, Dict]:
+    d, w = cfg.d_model, cfg.lru_width or cfg.d_model
+    keys = jax.random.split(key, 6)
+    std = 0.02
+    p = {
+        # input / gate projections (the Griffin recurrent block)
+        "w_x": truncated_normal(keys[0], (d, w), cfg.param_dtype, std),
+        "w_gate": truncated_normal(keys[1], (d, w), cfg.param_dtype, std),
+        "w_out": truncated_normal(keys[2], (w, d), cfg.param_dtype,
+                                  std / math.sqrt(2 * cfg.n_layers)),
+        # rg-lru gates
+        "w_a": truncated_normal(keys[3], (w, w), cfg.param_dtype, std),
+        "w_i": truncated_normal(keys[4], (w, w), cfg.param_dtype, std),
+        # Lambda parametrized so a = sigmoid(lam)^(8*sigmoid(r)) starts ~0.95
+        "lam": jnp.full((w,), 3.0, dtype=jnp.float32),
+        # short conv (Griffin conv1d width 4)
+        "conv": truncated_normal(keys[5], (cfg.conv_width, w), cfg.param_dtype, std),
+    }
+    s = {
+        "w_x": ("w_embed", "w_state"), "w_gate": ("w_embed", "w_state"),
+        "w_out": ("w_state", "w_embed"), "w_a": ("w_state", None),
+        "w_i": ("w_state", None), "lam": (None,), "conv": (None, "w_state"),
+    }
+    return p, s
+
+
+def _rg_gates(p: Dict, u: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """a_t (decay) and gated input multiplier, both fp32. u: (..., W)."""
+    r = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", u, p["w_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", u, p["w_i"]).astype(jnp.float32))
+    log_a = 8.0 * r * jax.nn.log_sigmoid(p["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    return a, i
+
+
+def rg_lru_scan(p: Dict, u: jax.Array,
+                h0: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """u: (B, S, W) gated input. Returns (y (B,S,W), h_final (B,W)).
+
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)  — associative scan.
+    """
+    b, s, w = u.shape
+    a, i = _rg_gates(p, u)
+    x = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-6)) * (i * u.astype(jnp.float32))
+    if h0 is not None:
+        # fold the carried state into the first step
+        x = x.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, x1 = c1
+        a2, x2 = c2
+        return a1 * a2, a2 * x1 + x2
+
+    aa, yy = jax.lax.associative_scan(combine, (a, x), axis=1)
+    return yy.astype(u.dtype), yy[:, -1]
+
+
+def rg_lru_step(p: Dict, u: jax.Array, h: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One decode step. u: (B, 1, W), h: (B, W)."""
+    a, i = _rg_gates(p, u[:, 0])
+    x = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-6)) * (i * u[:, 0].astype(jnp.float32))
+    h_new = a * h.astype(jnp.float32) + x
+    return h_new.astype(u.dtype)[:, None], h_new.astype(u.dtype)
+
+
+def causal_conv1d(p_conv: jax.Array, x: jax.Array,
+                  state: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. x: (B,S,W); state: (B, width-1, W)."""
+    width = p_conv.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], width - 1, x.shape[2]), dtype=x.dtype)
+    xt = jnp.concatenate([state, x], axis=1)
+    out = sum(xt[:, i:i + x.shape[1]] * p_conv[i] for i in range(width))
+    new_state = xt[:, -(width - 1):] if width > 1 else state
+    return out.astype(x.dtype), new_state
+
+
+def griffin_recurrent_block(p: Dict, cfg: ModelConfig, x: jax.Array,
+                            state: Optional[Dict] = None
+                            ) -> Tuple[jax.Array, Optional[Dict]]:
+    """The Griffin recurrent temporal block: (conv -> RG-LRU) x gelu gate."""
+    u = jnp.einsum("bsd,dw->bsw", x, p["w_x"])
+    u = logical_shard(u, "batch", None, "w_state")
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate"]))
+    if state is None or u.shape[1] > 1:  # sequence mode (train / prefill)
+        conv_in = None if state is None else state["conv"]
+        u, conv_state = causal_conv1d(p["conv"], u, conv_in)
+        y, h = rg_lru_scan(p, u, None if state is None else state["h"])
+        new_state = {"conv": conv_state, "h": h.astype(u.dtype)}
+    else:
+        u, conv_state = causal_conv1d(p["conv"], u, state["conv"])
+        y, h = rg_lru_step(p, u, state["h"])
+        new_state = {"conv": conv_state, "h": h}
+    out = jnp.einsum("bsw,wd->bsd", y * gate, p["w_out"])
+    return logical_shard(out, "batch", None, None), new_state
+
+
+def init_griffin_state(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype=dtype),
+        "h": jnp.zeros((batch, w), dtype=dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: sLSTM block (scalar memory) and mLSTM block (matrix memory)
+# ---------------------------------------------------------------------------
+
+def init_slstm(cfg: ModelConfig, key) -> Tuple[Dict, Dict]:
+    d = cfg.d_model
+    keys = jax.random.split(key, 5)
+    std = 0.02
+    p = {
+        "w_z": truncated_normal(keys[0], (d, d), cfg.param_dtype, std),
+        "w_i": truncated_normal(keys[1], (d, d), cfg.param_dtype, std),
+        "w_f": truncated_normal(keys[2], (d, d), cfg.param_dtype, std),
+        "w_o": truncated_normal(keys[3], (d, d), cfg.param_dtype, std),
+        "w_out": truncated_normal(keys[4], (d, d), cfg.param_dtype,
+                                  std / math.sqrt(2 * cfg.n_layers)),
+    }
+    s = {k: ("w_embed", "w_state") for k in p}
+    return p, s
+
+
+def slstm_scan(p: Dict, x: jax.Array, state: Optional[Dict] = None,
+               ) -> Tuple[jax.Array, Dict]:
+    """sLSTM with exponential gating (input-conditioned gates; see module
+    docstring). x: (B, S, D).
+
+    c_t = f_t c_{t-1} + i_t z_t ;  n_t = f_t n_{t-1} + i_t ;  h = o * c/n
+    with log-space stabilizer m_t = max(log f_t + m_{t-1}, log i_t).
+    """
+    b, s, d = x.shape
+    z = jnp.tanh(jnp.einsum("bsd,de->bse", x, p["w_z"]).astype(jnp.float32))
+    log_i = jnp.einsum("bsd,de->bse", x, p["w_i"]).astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(
+        jnp.einsum("bsd,de->bse", x, p["w_f"]).astype(jnp.float32))
+    o = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x, p["w_o"]).astype(jnp.float32))
+
+    # stabilized exponential gating as an associative scan over
+    # (cumulative log f, stabilized c, stabilized n, running max m)
+    def combine(c1, c2):
+        f1, m1, cc1, nn1 = c1
+        f2, m2, cc2, nn2 = c2
+        m = jnp.maximum(m1 + f2, m2)
+        scale1 = jnp.exp(m1 + f2 - m)
+        scale2 = jnp.exp(m2 - m)
+        return f1 + f2, m, cc1 * scale1 + cc2 * scale2, nn1 * scale1 + nn2 * scale2
+
+    m0 = log_i  # per-step stabilizer
+    c_elems = (log_f, m0, jnp.exp(log_i - m0) * z, jnp.exp(log_i - m0))
+    if state is not None:
+        # fold carried (c, n, m) into step 0
+        f0, mm0, cc0, nn0 = (log_f[:, 0], m0[:, 0], c_elems[2][:, 0], c_elems[3][:, 0])
+        m_in = state["m"].astype(jnp.float32)
+        mm = jnp.maximum(m_in + f0, mm0)
+        cc = state["c"].astype(jnp.float32) * jnp.exp(m_in + f0 - mm) + cc0 * jnp.exp(mm0 - mm)
+        nn = state["n"].astype(jnp.float32) * jnp.exp(m_in + f0 - mm) + nn0 * jnp.exp(mm0 - mm)
+        c_elems = (
+            c_elems[0], c_elems[1].at[:, 0].set(mm),
+            c_elems[2].at[:, 0].set(cc), c_elems[3].at[:, 0].set(nn),
+        )
+    _, m, c, n = jax.lax.associative_scan(combine, c_elems, axis=1)
+    h = o * (c / jnp.maximum(jnp.abs(n), 1.0))
+    y = jnp.einsum("bse,ed->bsd", h.astype(x.dtype), p["w_out"])
+    new_state = {"c": c[:, -1], "n": n[:, -1], "m": m[:, -1]}
+    return logical_shard(y, "batch", None, None), new_state
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> Dict:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), dtype=jnp.float32)
+    return {"c": z, "n": z, "m": jnp.full((batch, d), -1e30, dtype=jnp.float32)}
+
+
+def init_mlstm(cfg: ModelConfig, key) -> Tuple[Dict, Dict]:
+    d, h = cfg.d_model, cfg.n_heads
+    hd = d // h
+    keys = jax.random.split(key, 6)
+    std = 0.02
+    p = {
+        "w_q": truncated_normal(keys[0], (d, d), cfg.param_dtype, std),
+        "w_k": truncated_normal(keys[1], (d, d), cfg.param_dtype, std),
+        "w_v": truncated_normal(keys[2], (d, d), cfg.param_dtype, std),
+        "w_i": truncated_normal(keys[3], (d, h), cfg.param_dtype, std),
+        "w_f": truncated_normal(keys[4], (d, h), cfg.param_dtype, std),
+        "w_out": truncated_normal(keys[5], (d, d), cfg.param_dtype,
+                                  std / math.sqrt(2 * cfg.n_layers)),
+    }
+    s = {"w_q": ("w_embed", "w_heads"), "w_k": ("w_embed", "w_heads"),
+         "w_v": ("w_embed", "w_heads"), "w_i": ("w_embed", None),
+         "w_f": ("w_embed", None), "w_out": ("w_heads", "w_embed")}
+    return p, s
+
+
+def mlstm_chunkwise(p: Dict, cfg: ModelConfig, x: jax.Array,
+                    chunk: int = 256,
+                    state: Optional[Dict] = None,
+                    return_state: bool = False):
+    """Chunkwise-parallel mLSTM (matrix memory): intra-chunk quadratic with
+    decay mask + inter-chunk carried (C, n) state. x: (B, S, D).
+
+    NOTE on prefill->decode handoff: the chunkwise form carries an
+    unstabilized (C, n); the returned state therefore has m = 0 (identity
+    scale), which the step form consumes directly."""
+    b, s, d = x.shape
+    nh = cfg.n_heads
+    hd = d // nh
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+
+    def heads(w):
+        return jnp.einsum("bsd,de->bse", x, w).reshape(b, s, nh, hd)
+
+    q = heads(p["w_q"]).astype(jnp.float32) / math.sqrt(hd)
+    k = heads(p["w_k"]).astype(jnp.float32) / math.sqrt(hd)
+    v = heads(p["w_v"]).astype(jnp.float32)
+    log_i = jnp.einsum("bsd,dh->bsh", x, p["w_i"]).astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(
+        jnp.einsum("bsd,dh->bsh", x, p["w_f"]).astype(jnp.float32))
+
+    rs = lambda t: jnp.moveaxis(t.reshape(b, nc, chunk, *t.shape[2:]), 1, 0)
+    qc, kc, vc, ic, fc = map(rs, (q, k, v, log_i, log_f))
+
+    def step(carry, xs):
+        C, n = carry  # C: (B,H,hd,hd), n: (B,H,hd)
+        qb, kb, vb, ib, fb = xs  # (B, chunk, H, ...)
+        f_cum = jnp.cumsum(fb, axis=1)  # (B,chunk,H)
+        f_tot = f_cum[:, -1]
+        # intra-chunk decay matrix D[t, t'] = exp(f_cum_t - f_cum_t' + i_t')
+        logD = (f_cum[:, :, None, :] - f_cum[:, None, :, :]
+                + ib[:, None, :, :])  # (B,t,t',H)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        logD = jnp.where(mask[None, :, :, None], logD, -jnp.inf)
+        # stabilizer per query step
+        m_intra = jnp.max(logD, axis=2)  # (B,t,H)
+        m_inter = f_cum  # decay applied to carried state
+        m = jnp.maximum(m_intra, m_inter)
+        Dm = jnp.exp(logD - m[:, :, None, :])
+        s_qk = jnp.einsum("bthd,bshd->btsh", qb, kb) * Dm
+        intra = jnp.einsum("btsh,bshd->bthd", s_qk, vb)
+        inter_scale = jnp.exp(m_inter - m)  # (B,t,H)
+        inter = jnp.einsum("bthd,bhde->bthe", qb, C) * inter_scale[..., None]
+        num = intra + inter
+        den_intra = s_qk.sum(axis=2)  # (B,t,H)
+        den_inter = jnp.einsum("bthd,bhd->bth", qb, n) * inter_scale
+        den = jnp.maximum(jnp.abs(den_intra + den_inter), jnp.exp(-m))
+        h = num / den[..., None]
+        # update carried state: C' = exp(f_tot) C + sum_t exp(f_tot - f_cum_t + i_t) k_t v_t^T
+        w_t = jnp.exp(f_tot[:, None, :] - f_cum + ib)  # (B,chunk,H)
+        C_new = jnp.exp(f_tot)[:, :, None, None] * C + jnp.einsum(
+            "bthd,bthe->bhde", kb * w_t[..., None], vb)
+        n_new = jnp.exp(f_tot)[:, :, None] * n + jnp.einsum(
+            "bthd,bth->bhd", kb, w_t)
+        return (C_new, n_new), h
+
+    if state is not None:
+        # fold a stabilized decode state back to raw scale (exp(m))
+        scale = jnp.exp(state["m"].astype(jnp.float32))
+        C0 = state["C"].astype(jnp.float32) * scale[..., None, None]
+        n0 = state["n"].astype(jnp.float32) * scale[..., None]
+    else:
+        C0 = jnp.zeros((b, nh, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, nh, hd), jnp.float32)
+    (Cf, nf), hs = jax.lax.scan(step, (C0, n0), (qc, kc, vc, ic, fc))
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s, nh * hd)
+    y = jnp.einsum("bse,ed->bsd", h.astype(x.dtype), p["w_out"])
+    y = logical_shard(y, "batch", None, None)
+    if return_state:
+        final = {"C": Cf, "n": nf, "m": jnp.zeros((b, nh), jnp.float32)}
+        return y, final
+    return y
+
+
+def mlstm_step(p: Dict, cfg: ModelConfig, x: jax.Array, state: Dict
+               ) -> Tuple[jax.Array, Dict]:
+    """One decode step with matrix memory. x: (B, 1, D)."""
+    b, _, d = x.shape
+    nh = cfg.n_heads
+    hd = d // nh
+    xt = x[:, 0]
+    q = (xt @ p["w_q"]).reshape(b, nh, hd).astype(jnp.float32) / math.sqrt(hd)
+    k = (xt @ p["w_k"]).reshape(b, nh, hd).astype(jnp.float32) / math.sqrt(hd)
+    v = (xt @ p["w_v"]).reshape(b, nh, hd).astype(jnp.float32)
+    log_i = (xt @ p["w_i"]).astype(jnp.float32)  # (B,H)
+    log_f = jax.nn.log_sigmoid((xt @ p["w_f"]).astype(jnp.float32))
+    m_prev = state["m"]
+    m = jnp.maximum(log_f + m_prev, log_i)
+    f_s = jnp.exp(log_f + m_prev - m)[..., None]
+    i_s = jnp.exp(log_i - m)[..., None]
+    C = f_s[..., None] * state["C"] + i_s[..., None] * (k[..., :, None] * v[..., None, :])
+    n = f_s * state["n"] + i_s * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)), jnp.exp(-m))
+    h = (num / den[..., None]).reshape(b, 1, nh * hd)
+    y = jnp.einsum("bse,ed->bsd", h.astype(x.dtype), p["w_out"])
+    return y, {"C": C, "n": n, "m": m}
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> Dict:
+    nh = cfg.n_heads
+    hd = cfg.d_model // nh
+    return {
+        "C": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, nh, hd), jnp.float32),
+        "m": jnp.full((batch, nh), -30.0, jnp.float32),
+    }

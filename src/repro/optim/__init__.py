@@ -1,0 +1,7 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from .compression import (compress_ef_int8, decompress_ef_int8,
+                          make_ef_state, quantize_int8)
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule",
+           "compress_ef_int8", "decompress_ef_int8", "make_ef_state",
+           "quantize_int8"]

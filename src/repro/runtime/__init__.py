@@ -1,0 +1,7 @@
+from .steps import (TrainState, auto_microbatches, build_serve_step,
+                    build_train_step, make_train_state_specs)
+from .comm_gate import CommGate, IterationReporter
+
+__all__ = ["TrainState", "auto_microbatches", "build_serve_step",
+           "build_train_step", "make_train_state_specs", "CommGate",
+           "IterationReporter"]

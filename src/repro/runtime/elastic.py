@@ -1,0 +1,71 @@
+"""Elastic scaling & fault tolerance: re-mesh on device loss, resume.
+
+On real hardware, device failure surfaces as a collective timeout; here the
+manager is driven by an explicit healthy-device list (tests mask devices).
+Policy: shrink the data axis to the largest power-of-two that the surviving
+device count supports while keeping the model axis intact (tensor-parallel
+groups must stay whole), then restore state from the latest checkpoint and
+continue — the data pipeline is (seed, step)-deterministic so no data is
+replayed or skipped.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.checkpoint import CheckpointManager
+
+
+@dataclasses.dataclass
+class ElasticDecision:
+    mesh_shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    dropped_hosts: int
+    global_batch_scale: float  # <1 when the data axis shrank
+
+
+def plan_remesh(n_healthy: int, model_parallel: int,
+                axis_names: Tuple[str, ...] = ("data", "model")
+                ) -> Optional[ElasticDecision]:
+    """Largest power-of-two data axis that fits the healthy devices."""
+    if n_healthy < model_parallel:
+        return None  # cannot even form one TP group
+    data = 1
+    while data * 2 * model_parallel <= n_healthy:
+        data *= 2
+    return ElasticDecision(
+        mesh_shape=(data, model_parallel),
+        axis_names=axis_names,
+        dropped_hosts=n_healthy - data * model_parallel,
+        global_batch_scale=1.0,  # caller rescales batch/n_micro
+    )
+
+
+def build_mesh(devices: Sequence, decision: ElasticDecision) -> Mesh:
+    n = int(np.prod(decision.mesh_shape))
+    dev = np.asarray(devices[:n]).reshape(decision.mesh_shape)
+    return Mesh(dev, decision.axis_names)
+
+
+class FaultTolerantRunner:
+    """Orchestrates detect -> remesh -> restore -> resume."""
+
+    def __init__(self, ckpt: CheckpointManager, model_parallel: int):
+        self.ckpt = ckpt
+        self.model_parallel = model_parallel
+        self.events: List[str] = []
+
+    def on_failure(self, healthy_devices: Sequence, like_state):
+        decision = plan_remesh(len(healthy_devices), self.model_parallel)
+        if decision is None:
+            self.events.append("unrecoverable: not enough devices for TP")
+            raise RuntimeError("not enough healthy devices")
+        mesh = build_mesh(healthy_devices, decision)
+        state, step, extra = self.ckpt.restore_latest(like_state)
+        self.events.append(
+            f"remeshed to {decision.mesh_shape}, resumed at step {step}")
+        return mesh, state, step, decision

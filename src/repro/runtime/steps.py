@@ -1,0 +1,167 @@
+"""train_step / serve_step builders with sharding + gradient accumulation.
+
+``build_train_step`` returns a function
+    (state, batch) -> (state, metrics)
+that microbatches the global batch with a lax.scan (bounded activation
+memory), accumulates grads in ``accum_dtype``, and applies AdamW. All
+tensors carry logical-axis sharding constraints; the caller wraps the jit
+under ``sharding.use_rules(mesh)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step, init_cache, init_model, loss_fn, prefill
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         quantize_int8)
+from repro.sharding import best_spec, current_rules, logical_shard
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Dict
+    step: jax.Array
+
+
+def make_train_state_specs(cfg: ModelConfig, param_specs) -> TrainState:
+    """Logical specs for the TrainState (opt moments shard like params)."""
+    return TrainState(
+        params=param_specs,
+        opt={"m": param_specs, "v": param_specs, "step": ()},
+        step=(),
+    )
+
+
+def auto_microbatches(cfg: ModelConfig, shape: ShapeConfig,
+                      n_data_shards: int) -> int:
+    """Pick a microbatch count keeping ~<=2 sequences x 4k tokens per data
+    shard per microbatch (activation-memory heuristic; perf loop can tune)."""
+    if shape.microbatch:
+        return max(1, shape.global_batch // shape.microbatch)
+    tokens_per_seq = shape.seq_len
+    seqs_per_shard = shape.global_batch / max(n_data_shards, 1)
+    budget = max(1.0, 8192.0 / tokens_per_seq)  # seqs per shard per micro
+    n_micro = int(max(1, round(seqs_per_shard / budget)))
+    # n_micro must divide global batch
+    while shape.global_batch % n_micro:
+        n_micro += 1
+    return n_micro
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig,
+    n_micro: int = 1,
+    accum_dtype: Any = jnp.float32,
+    param_specs: Any = None,
+    compress_grads: bool = False,
+) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``param_specs`` (the logical-axis tree from init_model) re-constrains
+    per-microbatch gradients to the parameter sharding immediately after
+    autodiff, steering GSPMD to reduce-scatter instead of the
+    all-reduce+slice it otherwise emits for the FSDP weight-gather
+    transpose (see EXPERIMENTS.md section Perf)."""
+
+    def _constrain_grads(grads):
+        if param_specs is None:
+            return grads
+        leaves, treedef = jax.tree.flatten(grads)
+        spec_leaves = treedef.flatten_up_to(param_specs)
+        out = [logical_shard(g, *sp) for g, sp in zip(leaves, spec_leaves)]
+        return treedef.unflatten(out)
+
+    def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        def constrain(leaf_name, x):
+            if x.ndim >= 2:
+                return logical_shard(x, *((("batch",) + (None,) * (x.ndim - 1))))
+            return x
+        batch_c = {k: constrain(k, v) for k, v in batch.items()}
+
+        def micro_slices(i):
+            def slc(x):
+                if x.ndim == 0:
+                    return x
+                # positions for mrope have shape (3, B, S): batch on axis 1
+                axis = 1 if x.ndim == 3 and x.shape[0] == 3 else 0
+                b = x.shape[axis] // n_micro
+                return jax.lax.dynamic_slice_in_dim(x, i * b, b, axis=axis)
+            return {k: slc(v) for k, v in batch_c.items()}
+
+        grad_fn = jax.value_and_grad(
+            lambda p, mb: loss_fn(p, cfg, mb), has_aux=True)
+
+        def micro_body(carry, i):
+            grads, loss_sum, aux_sum = carry
+            (loss, metrics), g = grad_fn(state.params, micro_slices(i))
+            g = _constrain_grads(g)
+            grads = jax.tree.map(
+                lambda a, b: a + b.astype(accum_dtype), grads, g)
+            return (grads, loss_sum + loss, aux_sum + metrics["aux"]), None
+
+        zero_grads = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, accum_dtype), state.params)
+        if n_micro > 1:
+            (grads, loss_sum, aux_sum), _ = jax.lax.scan(
+                micro_body, (zero_grads, jnp.zeros((), jnp.float32),
+                             jnp.zeros((), jnp.float32)),
+                jnp.arange(n_micro))
+        else:
+            (grads, loss_sum, aux_sum), _ = micro_body(
+                (zero_grads, jnp.zeros((), jnp.float32),
+                 jnp.zeros((), jnp.float32)), 0)
+        grads = jax.tree.map(lambda g: g / n_micro, grads)
+        if compress_grads:
+            # int8 quantize-dequantize of the accumulated gradients — the
+            # numerics of sending the cross-pod (DCN) all-reduce at int8
+            # (optim/compression.py provides the error-feedback variant for
+            # stateful loops; here the stateless Q/DQ models the wire format)
+            def qdq(g):
+                q, scale = quantize_int8(g)
+                return (q.astype(jnp.float32) * scale).astype(g.dtype)
+            grads = jax.tree.map(qdq, grads)
+        loss = loss_sum / n_micro
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, state.params, grads, state.opt)
+        metrics = {"loss": loss, "aux": aux_sum / n_micro, **opt_metrics}
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step
+
+
+def build_serve_step(cfg: ModelConfig) -> Callable:
+    """Returns serve_step(params, cache, tokens) -> (logits, cache) — one
+    decode step against the KV cache / recurrent state."""
+
+    def serve_step(params, cache, tokens):
+        return decode_step(params, cfg, cache, tokens)
+
+    return serve_step
+
+
+def build_prefill_step(cfg: ModelConfig) -> Callable:
+    def prefill_step(params, batch):
+        return prefill(params, cfg, batch["tokens"],
+                       positions=batch.get("positions"),
+                       frames=batch.get("frames"))
+    return prefill_step
+
+
+def init_train_state(cfg: ModelConfig, opt_cfg: AdamWConfig, key
+                     ) -> Tuple[TrainState, Any]:
+    params, specs = init_model(cfg, key)
+    opt = adamw_init(opt_cfg, params)
+    return TrainState(params, opt, jnp.zeros((), jnp.int32)), specs
+
+
+jax.tree_util.register_dataclass(
+    TrainState, data_fields=["params", "opt", "step"], meta_fields=[])

@@ -1,0 +1,5 @@
+from .rules import (AxisRules, best_spec, current_rules, logical_shard,
+                    param_spec, use_rules)
+
+__all__ = ["AxisRules", "best_spec", "current_rules", "logical_shard",
+           "param_spec", "use_rules"]

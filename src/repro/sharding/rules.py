@@ -1,0 +1,140 @@
+"""Logical-axis sharding rules with divisibility-aware axis selection.
+
+The model code annotates tensors with *logical* axes ("batch", "heads",
+"mlp", ...). At trace time each logical axis is resolved to the first mesh
+axis (or axis tuple) from its candidate list that (a) is not already used in
+this spec and (b) divides the dimension size. This makes one model
+definition shard correctly across every assigned architecture — including
+awkward head counts (qwen3: 40 heads on tp=16 falls back to sequence
+sharding; whisper's 51865 vocab stays replicated) — without per-arch special
+cases.
+
+Mesh axes (launch/mesh.py):
+  pod   — pure data parallelism across pods (cross-pod = DCN)
+  data  — within-pod data parallel + FSDP weight sharding (ZeRO-3-like)
+  model — tensor parallelism (heads / mlp / vocab / expert-ffn)
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisChoice = Union[None, str, Tuple[str, ...]]
+Candidates = Sequence[AxisChoice]
+
+# default logical rules: logical axis -> ordered candidate mesh axes
+DEFAULT_RULES: Dict[str, Candidates] = {
+    # activations
+    "batch": [("pod", "data"), "data", None],
+    "seq": [None],
+    "seq_sharded": ["model", None],        # sequence parallelism fallback
+    "embed": [None],
+    "heads": ["model", None],
+    "kv_heads": ["model", None],
+    "kv_seq": ["model", None],             # flash-decoding style cache shard
+    "mlp_act": ["model", None],
+    "vocab_act": ["model", None],
+    "experts_act": ["data", "model", None],
+    # weights (FSDP on 'data', TP on 'model')
+    "w_embed": ["data", None],
+    "w_heads": ["model", None],
+    "w_mlp": ["model", None],
+    "w_vocab": ["model", None],
+    "w_experts": [("pod", "data"), "data", None],
+    "w_state": ["model", None],
+    "w_replicated": [None],
+    "opt_state": [("data", "model"), "data", None],
+}
+
+
+class AxisRules:
+    def __init__(self, mesh: Optional[Mesh],
+                 rules: Optional[Dict[str, Candidates]] = None):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES)
+        if rules:
+            self.rules.update(rules)
+
+    def axis_size(self, choice: AxisChoice) -> int:
+        if choice is None or self.mesh is None:
+            return 1
+        names = (choice,) if isinstance(choice, str) else choice
+        n = 1
+        for a in names:
+            if a not in self.mesh.shape:
+                return 0  # axis not present in this mesh -> unusable
+            n *= self.mesh.shape[a]
+        return n
+
+
+_ctx = threading.local()
+
+
+def current_rules() -> Optional[AxisRules]:
+    return getattr(_ctx, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Optional[Mesh], rules: Optional[Dict[str, Candidates]] = None):
+    prev = getattr(_ctx, "rules", None)
+    _ctx.rules = AxisRules(mesh, rules) if mesh is not None else None
+    try:
+        yield _ctx.rules
+    finally:
+        _ctx.rules = prev
+
+
+def best_spec(shape: Sequence[int], logical: Sequence[Optional[str]],
+              rules: Optional[AxisRules] = None) -> P:
+    """Resolve logical axes -> PartitionSpec with divisibility checks."""
+    rules = rules or current_rules()
+    if rules is None or rules.mesh is None:
+        return P()
+    used: set = set()
+    parts: List[AxisChoice] = []
+    for dim, name in zip(shape, logical):
+        chosen: AxisChoice = None
+        if name is not None:
+            for cand in rules.rules.get(name, [None]):
+                if cand is None:
+                    break
+                names = (cand,) if isinstance(cand, str) else tuple(cand)
+                size = rules.axis_size(cand)
+                if size <= 0 or any(a in used for a in names):
+                    continue
+                if dim % size == 0:
+                    chosen = cand
+                    used.update(names)
+                    break
+        parts.append(chosen)
+    return P(*parts)
+
+
+def logical_shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint via logical axes; no-op outside use_rules()."""
+    rules = current_rules()
+    if rules is None or rules.mesh is None:
+        return x
+    spec = best_spec(x.shape, logical, rules)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))
+
+
+def param_spec(shape: Sequence[int], logical: Sequence[Optional[str]],
+               rules: Optional[AxisRules] = None) -> P:
+    """Spec for a parameter (used to build in_shardings for jit)."""
+    return best_spec(shape, logical, rules)
+
+
+def named_sharding(spec: P, rules: Optional[AxisRules] = None
+                   ) -> Optional[NamedSharding]:
+    rules = rules or current_rules()
+    if rules is None or rules.mesh is None:
+        return None
+    return NamedSharding(rules.mesh, spec)

@@ -1,0 +1,13 @@
+import os
+
+# Tests must see the single real CPU device (the 512-device override is
+# strictly dryrun.py's business).
+os.environ.pop("XLA_FLAGS", None)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from hypothesis import HealthCheck, settings
+
+settings.register_profile(
+    "ci", deadline=None, max_examples=25,
+    suppress_health_check=[HealthCheck.too_slow])
+settings.load_profile("ci")

@@ -1,0 +1,156 @@
+"""Unit + property tests for the TDM circle abstraction (paper section II-B)."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import geometry as G
+
+
+class TestUnifyPeriods:
+    def test_exact_multiples(self):
+        u = G.unify_periods([100.0, 50.0, 25.0])
+        assert u.base_ms == 100.0
+        assert list(u.muls) == [1, 2, 4]
+        assert np.all(u.ok)
+        assert np.allclose(u.injected_ms, 0.0)
+
+    def test_gt_merge_small_mismatch(self):
+        # 2.5ms mismatch <= G_T=5 -> commensurate at mul 2 with injection
+        # into the low-priority task (drift compensation)
+        u = G.unify_periods([245.0, 120.0], priorities=[1, 0])
+        assert list(u.muls) == [1, 2]
+        assert u.ok.all()
+        assert u.injected_ms[1] == pytest.approx(2.5)
+
+    def test_et_injection(self):
+        # paper S2: 96 vs 90 -> 6ms > G_T, <= 10% of 90 -> inject 6ms
+        u = G.unify_periods([96.0, 90.0], priorities=[1, 0])
+        assert list(u.muls) == [1, 1]
+        assert u.ok.all()
+        assert u.injected_ms[1] == pytest.approx(6.0)
+
+    def test_never_injects_into_high_priority(self):
+        u = G.unify_periods([96.0, 90.0], priorities=[0, 1])
+        # the high-priority second task cannot be slowed down
+        assert u.injected_ms[1] == 0.0
+
+    def test_incompatible_periods_flagged(self):
+        u = G.unify_periods([100.0, 73.0], priorities=[1, 0], max_mul=1)
+        assert not u.ok.all()
+
+    def test_reference_period_unchanged(self):
+        u = G.unify_periods([100.0, 52.0], priorities=[1, 0])
+        # reference (high priority) keeps an exact divisor of the base
+        assert u.base_ms % 100.0 == 0.0
+
+
+class TestPatterns:
+    def test_pattern_total_equals_duty(self):
+        for mul in (1, 2, 3, 4):
+            for duty in (0.1, 0.3, 0.5):
+                pat = G.pattern_vector(mul, duty, 72)
+                assert pat.sum() == pytest.approx(duty * 72, abs=1e-6)
+
+    def test_pattern_bursts(self):
+        pat = G.pattern_vector(2, 0.25, 72)
+        # two bursts of 9 slots at offsets 0 and 36
+        assert pat[:9].sum() == pytest.approx(9.0)
+        assert pat[36:45].sum() == pytest.approx(9.0)
+        assert pat[10:35].sum() == pytest.approx(0.0)
+
+    def test_roll_is_rotation(self):
+        pats = G.pattern_matrix([1], [0.3], 72)
+        rolled = G.roll_patterns(pats, np.array([10]))
+        assert np.allclose(np.roll(pats[0], 10), rolled[0])
+
+
+class TestDemandAndScore:
+    def test_demand_eq4(self):
+        pats = G.pattern_matrix([1, 1], [0.5, 0.5], 72)
+        d = G.demand(pats, np.array([10.0, 20.0]), np.array([0, 36]))
+        assert d.max() == pytest.approx(20.0)
+        assert d.min() == pytest.approx(10.0)
+
+    def test_score_perfect_iff_no_excess(self):
+        pats = G.pattern_matrix([1, 1], [0.4, 0.4], 72)
+        # disjoint comm phases -> perfect
+        s = G.score(pats, np.array([20.0, 20.0]), np.array([0, 36]), 25.0)
+        assert s == pytest.approx(100.0)
+        # fully overlapping -> not perfect
+        s = G.score(pats, np.array([20.0, 20.0]), np.array([0, 0]), 25.0)
+        assert s < 100.0
+
+    def test_utilization_bounds(self):
+        pats = G.pattern_matrix([1, 2], [0.5, 0.4], 72)
+        u = G.link_utilization(pats, np.array([30.0, 20.0]),
+                               np.array([0, 5]), 25.0)
+        assert 0.0 <= u <= 1.0
+
+    def test_psi_distance(self):
+        # two contending single-burst tasks 36 slots apart -> Psi = 36
+        psi = G.min_comm_interval([1, 1], [0.1, 0.1], [20.0, 20.0],
+                                  [0, 36], 25.0, 72)
+        assert psi == pytest.approx(36.0, abs=1.0)
+
+    def test_non_contending_pairs_ignored(self):
+        psi = G.min_comm_interval([1, 1], [0.1, 0.1], [5.0, 5.0],
+                                  [0, 1], 25.0, 72)
+        assert psi == 72.0  # no contending pair -> sentinel
+
+
+class TestConversions:
+    def test_shift_delay_roundtrip(self):
+        delays = G.shifts_to_delay_ms(np.array([0, 18, 36]), 1000.0, 72)
+        assert np.allclose(delays, [0.0, 250.0, 500.0])
+        assert G.delay_to_shift_slots(250.0, 1000.0, 72) == 18
+
+
+# ---------------------------------------------------------------------------
+# property tests
+# ---------------------------------------------------------------------------
+
+@given(
+    duties=st.lists(st.floats(0.05, 0.45), min_size=2, max_size=4),
+    shift=st.integers(0, 71),
+)
+def test_property_common_rotation_invariance(duties, shift):
+    """Rotating ALL tasks by the same angle preserves demand profile stats
+    (rotation is relative — paper Eq. 16 rationale)."""
+    n = len(duties)
+    pats = G.pattern_matrix([1] * n, duties, 72)
+    bw = np.full(n, 10.0)
+    base = np.arange(n) * 7
+    d1 = G.demand(pats, bw, base)
+    d2 = G.demand(pats, bw, (base + shift) % 72)
+    assert np.allclose(sorted(d1), sorted(d2), atol=1e-9)
+    assert G.excess(pats, bw, base, 15.0) == pytest.approx(
+        G.excess(pats, bw, (base + shift) % 72, 15.0), abs=1e-9)
+
+
+@given(
+    duty=st.floats(0.01, 0.99),
+    mul=st.integers(1, 6),
+    bw=st.floats(1.0, 30.0),
+    cap=st.floats(5.0, 30.0),
+    shift=st.integers(0, 71),
+)
+def test_property_score_bounds(duty, mul, bw, cap, shift):
+    pats = G.pattern_matrix([mul], [duty], 72)
+    s = G.score(pats, np.array([bw]), np.array([shift]), cap)
+    assert 0.0 <= s <= 100.0
+    if bw <= cap:
+        assert s == pytest.approx(100.0)
+
+
+@given(
+    duties=st.lists(st.floats(0.05, 0.3), min_size=1, max_size=4),
+)
+def test_property_utilization_le_demand_fraction(duties):
+    """Utilization can never exceed sum of duty cycles x bw/cap."""
+    n = len(duties)
+    pats = G.pattern_matrix([1] * n, duties, 72)
+    bw = np.full(n, 10.0)
+    cap = 25.0
+    u = G.link_utilization(pats, bw, np.zeros(n, int), cap)
+    ub = min(1.0, sum(d * 10.0 for d in duties) / cap)
+    assert u <= ub + 1e-9

@@ -1,0 +1,113 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _qkv(b, h, hkv, s, d, dtype):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = jax.random.normal(k1, (b, h, s, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(k2, (b, hkv, s, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(k3, (b, hkv, s, d), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("s", [128, 256, 1024])
+    @pytest.mark.parametrize("d", [64, 128])
+    @pytest.mark.parametrize("g", [1, 4])
+    def test_causal_shapes(self, s, d, g):
+        q, k, v = _qkv(2, 4, 4 // g, s, d, jnp.float32)
+        out = ops.flash_attention(q, k, v, True, 0, True)
+        want = ref.attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+    @pytest.mark.parametrize("window", [64, 256])
+    def test_sliding_window(self, window):
+        q, k, v = _qkv(1, 2, 1, 512, 64, jnp.float32)
+        out = ops.flash_attention(q, k, v, True, window, True)
+        want = ref.attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+    def test_bidirectional(self):
+        q, k, v = _qkv(1, 2, 2, 256, 64, jnp.float32)
+        out = ops.flash_attention(q, k, v, False, 0, True)
+        want = ref.attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+    def test_bf16(self):
+        q, k, v = _qkv(1, 2, 2, 256, 64, jnp.bfloat16)
+        out = ops.flash_attention(q, k, v, True, 0, True)
+        want = ref.attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(
+            out.astype(jnp.float32), want.astype(jnp.float32),
+            atol=2e-2, rtol=2e-2)
+
+    def test_gradients_match_reference(self):
+        q, k, v = _qkv(1, 2, 1, 128, 64, jnp.float32)
+
+        def f_kernel(q_, k_, v_):
+            return (ops.flash_attention(q_, k_, v_, True, 0, True) ** 2).sum()
+
+        def f_ref(q_, k_, v_):
+            return (ref.attention_ref(q_, k_, v_, causal=True) ** 2).sum()
+
+        gk = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+        gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(gk, gr):
+            np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-4)
+
+
+class TestMetronomeScoreKernel:
+    @pytest.mark.parametrize("ra,rb,s", [(36, 72, 72), (9, 24, 72), (5, 7, 64)])
+    def test_sweep(self, ra, rb, s):
+        rng = np.random.default_rng(1)
+        base = rng.uniform(0, 12, s)
+        a = rng.uniform(0, 15, (ra, s))
+        b = rng.uniform(0, 15, (rb, s))
+        got = ops.score_pairwise(base, a, b, 25.0, interpret=True)
+        want = ref.metronome_score_ref(base, a, b, 25.0)
+        np.testing.assert_allclose(got, want, atol=1e-4)
+
+    @given(cap=st.floats(5.0, 40.0))
+    @settings(max_examples=10)
+    def test_property_bounds(self, cap):
+        rng = np.random.default_rng(2)
+        base = rng.uniform(0, 10, 72)
+        a = rng.uniform(0, 10, (12, 72))
+        b = rng.uniform(0, 10, (12, 72))
+        got = ops.score_pairwise(base, a, b, cap, interpret=True)
+        assert np.all(got >= 0.0) and np.all(got <= 100.0)
+
+
+class TestRgLruKernel:
+    @pytest.mark.parametrize("s,w", [(256, 512), (512, 1024), (128, 2560)])
+    def test_sweep(self, s, w):
+        k1, k2 = jax.random.split(KEY)
+        a = jax.nn.sigmoid(jax.random.normal(k1, (2, s, w))) * 0.3 + 0.65
+        x = jax.random.normal(k2, (2, s, w), jnp.float32)
+        got = ops.rg_lru(a, x, interpret=True)
+        want = ref.rg_lru_ref(a, x)
+        np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+    def test_matches_model_assoc_scan(self):
+        """Kernel == the model's associative-scan path (same recurrence)."""
+        import jax.lax as lax
+        k1, k2 = jax.random.split(KEY)
+        a = jax.nn.sigmoid(jax.random.normal(k1, (1, 256, 256))) * 0.3 + 0.6
+        x = jax.random.normal(k2, (1, 256, 256), jnp.float32)
+
+        def combine(c1, c2):
+            a1, x1 = c1
+            a2, x2 = c2
+            return a1 * a2, a2 * x1 + x2
+
+        _, want = lax.associative_scan(combine, (a, x), axis=1)
+        got = ops.rg_lru(a, x, interpret=True)
+        np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)

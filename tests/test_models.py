@@ -1,0 +1,173 @@
+"""Per-arch smoke tests (reduced configs) + decode/teacher-forcing parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.models import (decode_step, forward, init_cache, init_model,
+                          loss_fn, param_count, prefill)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, s=32):
+    tokens = jax.random.randint(KEY, (b, s), 0, cfg.vocab)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            KEY, (b, max(s // cfg.enc_frames_ratio, 1), cfg.d_model),
+            jnp.float32)
+    if cfg.mrope_sections:
+        batch["positions"] = jnp.broadcast_to(
+            jnp.arange(s)[None, None], (3, b, s)).astype(jnp.int32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_train_step(arch):
+    """One forward/train step on CPU: output shapes + no NaNs (assignment)."""
+    cfg = get_smoke_config(arch)
+    params, spec = init_model(cfg, KEY)
+    batch = _batch(cfg)
+    logits, aux = forward(params, cfg, batch["tokens"],
+                          positions=batch.get("positions"),
+                          frames=batch.get("frames"))
+    assert logits.shape == (2, 32, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    loss, metrics = loss_fn(params, cfg, batch)
+    assert bool(jnp.isfinite(loss))
+    # one gradient step must stay finite
+    g = jax.grad(lambda p: loss_fn(p, cfg, batch)[0])(params)
+    gn = sum(float(jnp.sum(jnp.abs(x))) for x in jax.tree.leaves(g))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_step(arch):
+    cfg = get_smoke_config(arch)
+    params, _ = init_model(cfg, KEY)
+    b = 2
+    cache = init_cache(cfg, b, 48)
+    if cfg.family == "encdec":
+        cache["enc_out"] = jax.random.normal(
+            KEY, cache["enc_out"].shape, jnp.float32).astype(cfg.dtype)
+    tok = jax.random.randint(KEY, (b, 1), 0, cfg.vocab)
+    logits, cache2 = decode_step(params, cfg, cache, tok)
+    assert logits.shape == (b, 1, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert int(cache2["index"]) == 1
+
+
+@pytest.mark.parametrize("arch", ["llama3_8b", "qwen2_moe_a2_7b",
+                                  "recurrentgemma_2b", "xlstm_125m",
+                                  "whisper_small"])
+def test_prefill_then_decode_matches_forward(arch):
+    """Teacher-forcing parity: logits from (prefill prompt -> decode token)
+    must match the training forward at the same position."""
+    cfg = get_smoke_config(arch)
+    params, _ = init_model(cfg, KEY)
+    b, s = 2, 16
+    batch = _batch(cfg, b, s + 1)
+    tokens = batch["tokens"]
+    full_logits, _ = forward(params, cfg, tokens,
+                             frames=batch.get("frames"),
+                             positions=batch.get("positions"))
+    last_logits, cache = prefill(params, cfg, tokens[:, :s],
+                                 frames=batch.get("frames"),
+                                 positions=(batch["positions"][:, :, :s]
+                                            if "positions" in batch else None),
+                                 max_len=s + 4)
+    # prefill's last-position logits == forward logits at position s-1
+    np.testing.assert_allclose(
+        np.asarray(last_logits[:, 0]), np.asarray(full_logits[:, s - 1]),
+        atol=2e-2, rtol=2e-2)
+    if cfg.family in ("dense", "moe", "encdec"):
+        # decode one more token and compare against forward position s.
+        # (dense-family caches are directly decodable after prefill; the
+        # recurrent families are covered by the prefill check above.)
+        logits, _ = decode_step(params, cfg, cache, tokens[:, s:s + 1])
+        np.testing.assert_allclose(
+            np.asarray(logits[:, 0]), np.asarray(full_logits[:, s]),
+            atol=2e-2, rtol=2e-2)
+
+
+def test_recurrent_decode_continues_prefill():
+    """griffin/xlstm: decode after prefill equals forward's next position."""
+    for arch in ("recurrentgemma_2b", "xlstm_125m"):
+        cfg = get_smoke_config(arch)
+        params, _ = init_model(cfg, KEY)
+        b, s = 1, 12
+        tokens = jax.random.randint(KEY, (b, s + 1), 0, cfg.vocab)
+        full_logits, _ = forward(params, cfg, tokens)
+        _, cache = prefill(params, cfg, tokens[:, :s], max_len=s + 4)
+        logits, _ = decode_step(params, cfg, cache, tokens[:, s:s + 1])
+        np.testing.assert_allclose(
+            np.asarray(logits[:, 0]), np.asarray(full_logits[:, s]),
+            atol=5e-2, rtol=5e-2, err_msg=arch)
+
+
+def test_moe_aux_loss_nonzero():
+    cfg = get_smoke_config("arctic_480b")
+    params, _ = init_model(cfg, KEY)
+    batch = _batch(cfg)
+    _, metrics = loss_fn(params, cfg, batch)
+    assert float(metrics["aux"]) > 0.0
+
+
+def test_mrope_differs_from_text_positions():
+    cfg = get_smoke_config("qwen2_vl_72b")
+    params, _ = init_model(cfg, KEY)
+    b, s = 1, 16
+    tokens = jax.random.randint(KEY, (b, s), 0, cfg.vocab)
+    text_pos = jnp.broadcast_to(jnp.arange(s)[None, None], (3, b, s))
+    # image-like positions: h/w streams differ from t
+    img_pos = text_pos.at[1].set(text_pos[1] // 4).at[2].set(text_pos[2] % 4)
+    l1, _ = forward(params, cfg, tokens, positions=text_pos)
+    l2, _ = forward(params, cfg, tokens, positions=img_pos)
+    assert float(jnp.abs(l1 - l2).max()) > 1e-4
+
+
+def test_full_configs_match_assignment():
+    """The full configs carry the exact assigned hyperparameters."""
+    expect = {
+        "arctic_480b": (35, 7168, 56, 8, 4864, 32000),
+        "qwen2_moe_a2_7b": (24, 2048, 16, 16, 1408, 151936),
+        "internlm2_20b": (48, 6144, 48, 8, 16384, 92544),
+        "qwen3_14b": (40, 5120, 40, 8, 17408, 151936),
+        "llama3_8b": (32, 4096, 32, 8, 14336, 128256),
+        "starcoder2_15b": (40, 6144, 48, 4, 24576, 49152),
+        "qwen2_vl_72b": (80, 8192, 64, 8, 29568, 152064),
+        "whisper_small": (12, 768, 12, 12, 3072, 51865),
+        "recurrentgemma_2b": (26, 2560, 10, 1, 7680, 256000),
+        "xlstm_125m": (12, 768, 4, 4, 0, 50304),
+    }
+    for arch, (nl, dm, nh, nkv, dff, vocab) in expect.items():
+        cfg = get_config(arch)
+        got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.d_ff,
+               cfg.vocab)
+        assert got == (nl, dm, nh, nkv, dff, vocab), (arch, got)
+    assert get_config("arctic_480b").n_experts == 128
+    assert get_config("arctic_480b").top_k == 2
+    assert get_config("arctic_480b").dense_residual
+    assert get_config("qwen2_moe_a2_7b").n_shared == 4
+    assert get_config("qwen2_moe_a2_7b").top_k == 4
+    assert get_config("qwen3_14b").qk_norm
+    assert get_config("qwen2_vl_72b").mrope_sections == (16, 24, 24)
+    assert get_config("recurrentgemma_2b").window == 2048
+
+
+def test_chunked_attention_vs_naive():
+    """The model's chunked online-softmax attention equals the oracle."""
+    from repro.models.layers import chunked_attention
+    from repro.kernels.ref import attention_ref
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    b, s, h, kv, d = 2, 128, 4, 2, 32
+    q = jax.random.normal(k1, (b, s, h, d), jnp.float32)
+    k = jax.random.normal(k2, (b, s, kv, d), jnp.float32)
+    v = jax.random.normal(k3, (b, s, kv, d), jnp.float32)
+    got = chunked_attention(q, k, v, causal=True, chunk=32)
+    want = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                         v.transpose(0, 2, 1, 3), causal=True
+                         ).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)

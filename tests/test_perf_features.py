@@ -1,0 +1,180 @@
+"""Perf-loop features: EP dispatch, rules presets, phase monitor, flash
+byte model, grad-spec constraint."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.launch.dryrun import (RULES_PRESETS, flash_attention_bytes,
+                                 model_flops)
+from repro.launch.mesh import make_host_mesh
+from repro.models import forward, init_model, loss_fn
+from repro.models.config import SHAPES
+from repro.optim import AdamWConfig
+from repro.runtime.steps import build_train_step, init_train_state
+from repro.sharding import AxisRules, best_spec, use_rules
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestEpDispatch:
+    def test_same_outputs_as_baseline(self):
+        """EP-consistent dispatch is a sharding annotation — numerics equal."""
+        cfg0 = get_smoke_config("arctic_480b")
+        cfg1 = dataclasses.replace(cfg0, moe_ep_dispatch=True)
+        params, _ = init_model(cfg0, KEY)
+        tok = jax.random.randint(KEY, (2, 16), 0, cfg0.vocab)
+        l0, _ = forward(params, cfg0, tok)
+        l1, _ = forward(params, cfg1, tok)
+        np.testing.assert_allclose(np.asarray(l0, np.float32),
+                                   np.asarray(l1, np.float32), atol=1e-5)
+
+
+class TestRulesPresets:
+    def test_pure_fsdp_shards_weights_over_all_axes(self):
+        mesh = make_host_mesh(1, 1)  # axis sizes 1: spec still resolves
+        rules = AxisRules(mesh, RULES_PRESETS["pure_fsdp"])
+        spec = best_spec((4096, 128), ("w_embed", "w_heads"), rules)
+        assert spec[0] == ("data", "model")
+        assert spec[1] is None  # no tensor parallelism
+
+    def test_pure_fsdp_train_step_compiles(self):
+        mesh = make_host_mesh(1, 1)
+        cfg = get_smoke_config("llama3_8b")
+        opt_cfg = AdamWConfig(warmup_steps=0)
+        with use_rules(mesh, RULES_PRESETS["pure_fsdp"]):
+            state, specs = init_train_state(cfg, opt_cfg, KEY)
+            step = jax.jit(build_train_step(cfg, opt_cfg, n_micro=1,
+                                            param_specs=specs))
+            tokens = jnp.zeros((2, 16), jnp.int32)
+            state, metrics = step(state, {"tokens": tokens, "labels": tokens})
+        assert np.isfinite(float(metrics["loss"]))
+
+
+class TestFlashByteModel:
+    def test_train_bytes_scale_with_layers(self):
+        cfg = get_smoke_config("llama3_8b")
+        big = dataclasses.replace(cfg, n_layers=cfg.n_layers * 2)
+        mesh = {"data": 16, "model": 16}
+        a = flash_attention_bytes(cfg, SHAPES["train_4k"], 8, mesh)
+        b = flash_attention_bytes(big, SHAPES["train_4k"], 8, mesh)
+        assert b == pytest.approx(2 * a)
+
+    def test_xlstm_has_no_attention(self):
+        cfg = get_smoke_config("xlstm_125m")
+        assert flash_attention_bytes(cfg, SHAPES["train_4k"], 1,
+                                     {"data": 16, "model": 16}) == 0.0
+
+    def test_model_flops_moe_counts_active_only(self):
+        from repro.configs import get_config
+        arctic = get_config("arctic_480b")
+        dense_equiv = dataclasses.replace(
+            arctic, n_experts=0, top_k=0, dense_residual=False)
+        f_moe = model_flops(arctic, SHAPES["train_4k"])
+        f_dense = model_flops(dense_equiv, SHAPES["train_4k"])
+        # top-2 of 128 experts + dense residual is far below 128 experts
+        # dense-equivalent would be; sanity: active ~ 3x the dense-only net
+        assert f_moe < 10 * f_dense
+
+
+class TestPhaseMonitor:
+    def _controller(self, phase_monitor):
+        from repro.core.controller import LinkState, StopAndWaitController
+        from repro.core.scheduler import LinkScheme
+        c = StopAndWaitController(phase_monitor=phase_monitor)
+        c.links["n0"] = LinkState(
+            scheme=LinkScheme(jobs=["hi", "lo"],
+                              shifts_slots=np.array([0, 36]), base_ms=418.0,
+                              muls=np.array([1, 1]), score=100.0,
+                              early_return=False, injected_ms={},
+                              ref_job="hi"), optimal=True)
+        c._priorities = {"hi": 1, "lo": 0}
+        c._recompute_global_offsets()
+        return c
+
+    def test_default_off(self):
+        from repro.core.controller import StopAndWaitController
+        assert not StopAndWaitController().phase_monitor
+
+    def test_relative_error_triggers_after_debounce(self):
+        c = self._controller(True)
+        c.report_phase_error("hi", 0.0, 418.0)  # ref on time
+        acts = []
+        for _ in range(3):
+            acts = c.report_phase_error("lo", 60.0, 418.0)
+        assert acts and acts[0].job == "lo"
+        assert c.readjust_count == 1
+
+    def test_common_mode_drift_ignored(self):
+        """Both jobs drifting together must not trigger (the thrash case)."""
+        c = self._controller(True)
+        for _ in range(10):
+            c.report_phase_error("hi", 80.0, 418.0)
+            assert not c.report_phase_error("lo", 80.0, 418.0)
+        assert c.readjust_count == 0
+
+    def test_off_only_records(self):
+        c = self._controller(False)
+        for _ in range(10):
+            assert not c.report_phase_error("lo", 100.0, 418.0)
+        assert c.readjust_count == 0
+
+
+class TestRealignGuard:
+    def test_no_realign_on_imperfect_link(self):
+        from repro.core.controller import LinkState, StopAndWaitController
+        from repro.core.scheduler import LinkScheme
+        c = StopAndWaitController()
+        c.links["n0"] = LinkState(
+            scheme=LinkScheme(jobs=["hi", "lo"],
+                              shifts_slots=np.array([0, 0]), base_ms=100.0,
+                              muls=np.array([1, 1]), score=92.0,  # imperfect
+                              early_return=False, injected_ms={},
+                              ref_job="hi"), optimal=True)
+        c._priorities = {"hi": 1, "lo": 0}
+        c.set_baseline("lo", 100.0, 0)
+        acts = []
+        for _ in range(10):
+            acts = c.report_iteration("lo", 130.0)
+        assert not acts  # pausing cannot fix structural contention
+
+
+class TestStragglerMonitor:
+    def test_trips_on_sustained_slowdown(self):
+        from repro.runtime.straggler import StragglerMonitor
+        events = []
+        mon = StragglerMonitor(a_t=1.3, o_t=5,
+                               on_straggler=lambda e: events.append(e))
+        for _ in range(20):
+            mon.report(0.10)  # healthy baseline
+        tripped = False
+        for _ in range(10):
+            tripped = mon.report(0.20) or tripped  # 2x slowdown
+        assert tripped and events
+
+    def test_ignores_transients(self):
+        from repro.runtime.straggler import StragglerMonitor
+        mon = StragglerMonitor(a_t=1.3, o_t=5)
+        for i in range(40):
+            t = 0.2 if i % 10 == 0 else 0.1  # occasional spike
+            assert not mon.report(t)
+
+
+class TestCompressedGrads:
+    def test_training_still_converges(self):
+        from repro.data import SyntheticLM
+        cfg = get_smoke_config("llama3_8b")
+        opt_cfg = AdamWConfig(lr=3e-3, warmup_steps=0, total_steps=30)
+        state, _ = init_train_state(cfg, opt_cfg, KEY)
+        step = jax.jit(build_train_step(cfg, opt_cfg, n_micro=1,
+                                        compress_grads=True))
+        ds = SyntheticLM(cfg.vocab, 16, 8, seed=0)
+        losses = []
+        for i in range(10):
+            batch = {k: jnp.asarray(v) for k, v in ds.batch_at(0).items()}
+            state, metrics = step(state, batch)
+            losses.append(float(metrics["loss"]))
+        assert losses[-1] < losses[0] - 0.15  # int8 grads still learn

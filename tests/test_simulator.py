@@ -1,0 +1,125 @@
+"""Fluid-flow simulator tests + end-to-end paper-claim checks."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.configs.metronome_testbed import make_snapshot
+from repro.core.harness import priority_split, run_experiment
+from repro.core.simulator import SimConfig, _max_min_fair
+
+
+class TestMaxMinFair:
+    def test_under_capacity_gives_demand(self):
+        r = _max_min_fair(np.array([5.0, 10.0]), 25.0)
+        assert np.allclose(r, [5.0, 10.0])
+
+    def test_equal_split_when_saturated(self):
+        r = _max_min_fair(np.array([20.0, 20.0]), 25.0)
+        assert np.allclose(r, [12.5, 12.5])
+
+    def test_water_filling(self):
+        r = _max_min_fair(np.array([2.0, 20.0, 20.0]), 25.0)
+        assert np.allclose(r, [2.0, 11.5, 11.5])
+
+    @given(st.lists(st.floats(0.1, 40.0), min_size=1, max_size=6),
+           st.floats(1.0, 50.0))
+    def test_properties(self, demands, cap):
+        d = np.array(demands)
+        r = _max_min_fair(d, cap)
+        assert np.all(r <= d + 1e-9)          # never exceed demand
+        assert r.sum() <= cap + 1e-9          # never exceed capacity
+        # work conserving: either all demands met or capacity exhausted
+        assert (np.allclose(r, d) or r.sum() == pytest.approx(cap))
+
+
+class TestSimulatorBasics:
+    def test_single_job_matches_ideal(self):
+        cluster, wls, bg = make_snapshot("S2", n_iterations=200)
+        res = run_experiment("ideal", cluster, wls,
+                             SimConfig(duration_ms=60_000, jitter_std=0.0))
+        # contention-free: iteration == period
+        assert res.sim.mean_iter_ms("vgg19-ft") == pytest.approx(96.0, rel=0.01)
+        assert res.sim.mean_iter_ms("vgg16-ft") == pytest.approx(90.0, rel=0.01)
+
+    def test_contention_stretches_iterations(self):
+        cluster, wls, bg = make_snapshot("S2", n_iterations=200)
+        cfg = SimConfig(duration_ms=60_000, jitter_std=0.0)
+        de = run_experiment("default", cluster, wls, cfg)
+        assert de.sim.mean_iter_ms("vgg19-ft") > 96.0 * 1.05
+
+    def test_utilization_in_bounds(self):
+        cluster, wls, bg = make_snapshot("S1", n_iterations=200)
+        res = run_experiment("default", cluster, wls,
+                             SimConfig(duration_ms=60_000))
+        assert 0.0 <= res.sim.avg_bw_utilization <= 1.0
+        for u in res.sim.link_utilization.values():
+            assert 0.0 <= u <= 1.0
+
+    def test_deterministic_given_seed(self):
+        cfg = SimConfig(duration_ms=30_000, seed=7)
+        outs = []
+        for _ in range(2):
+            cluster, wls, bg = make_snapshot("S2", n_iterations=100)
+            outs.append(run_experiment("metronome", cluster, wls, cfg,
+                                       background=bg))
+        a, b = outs
+        assert a.sim.time_per_1000_iters_s == b.sim.time_per_1000_iters_s
+
+
+class TestPaperClaims:
+    """The paper's headline behaviors, asserted loosely."""
+
+    CFG = SimConfig(duration_ms=120_000, seed=3, jitter_std=0.01)
+
+    def _run(self, sid, sched):
+        cluster, wls, bg = make_snapshot(sid, n_iterations=300)
+        return run_experiment(sched, cluster, wls, self.CFG, background=bg), wls
+
+    @pytest.mark.parametrize("sid", ["S1", "S2", "S3", "S4", "S5"])
+    def test_metronome_beats_default(self, sid):
+        me, wls = self._run(sid, "metronome")
+        de, _ = self._run(sid, "default")
+        hi, lo = priority_split(wls)
+        for j in hi + lo:
+            assert (me.sim.time_per_1000_iters_s[j]
+                    <= de.sim.time_per_1000_iters_s[j] * 1.02), (sid, j)
+
+    @pytest.mark.parametrize("sid", ["S2", "S4"])
+    def test_high_priority_within_2pct_of_ideal(self, sid):
+        """Paper section I: 'completion time of high priority jobs deviates
+        by no more than 2% from the contention-free ideal'."""
+        me, wls = self._run(sid, "metronome")
+        id_, _ = self._run(sid, "ideal")
+        hi, _ = priority_split(wls)
+        for j in hi:
+            ratio = (me.sim.time_per_1000_iters_s[j]
+                     / id_.sim.time_per_1000_iters_s[j])
+            assert ratio < 1.03, (sid, j, ratio)
+
+    def test_s0_incompatible_jobs_isolated(self):
+        """Snapshot 0: Metronome places incompatible jobs on disjoint links;
+        Default fails to isolate them."""
+        me, _ = self._run("S0", "metronome")
+        shared_me = set(me.placements["gpt2-0"]) & set(
+            me.placements["googlenet-0"])
+        assert not shared_me
+        de, _ = self._run("S0", "default")
+        shared_de = set(de.placements["gpt2-0"]) & set(
+            de.placements["googlenet-0"])
+        assert shared_de  # default shares a link -> contention
+
+    def test_s4_congestion_avoided(self):
+        me, _ = self._run("S4", "metronome")
+        assert "worker-a30-2" not in (
+            set(me.placements["bert-0"]) | set(me.placements["bert-1"]))
+
+    def test_metronome_improves_bandwidth_utilization(self):
+        me, _ = self._run("S2", "metronome")
+        de, _ = self._run("S2", "default")
+        assert me.sim.avg_bw_utilization > de.sim.avg_bw_utilization
+
+    def test_exclusive_rejects_jobs(self):
+        cluster, wls, bg = make_snapshot("S2", n_iterations=100)
+        ex = run_experiment("exclusive", cluster, wls, self.CFG, background=bg)
+        # per-pod demand == link capacity -> second job rejected somewhere
+        assert ex.rejected, "exclusive scheduling should reject jobs"
