@@ -1,0 +1,72 @@
+"""Beyond-paper: schedulers across leaf–spine oversubscription ratios.
+
+Sweeps the fabric from the paper's 1:1 assumption (uplinks never the
+bottleneck — Eq. 14's simplification) to 4:1 oversubscription, on the F2
+workload shape (two 4-task jobs spanning two leaves). Host links never
+contend (24G of 25G); every slowdown is uplink contention that the seed's
+host-link-only model could not see.
+
+Emits, per (ratio, scheduler): avg JCT, mean time/1000 iters, max uplink
+utilization, and Metronome's JCT gain over Default per ratio.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.metronome_testbed import FABRIC_SNAPSHOTS, make_snapshot
+from repro.core.cluster import make_fabric_cluster
+from repro.core.harness import run_experiment
+from repro.core.simulator import SimConfig
+
+from .common import Timer, emit
+
+RATIOS = (1.0, 2.0, 4.0)
+SCHEDULERS = ("metronome", "default", "diktyo", "ideal")
+CFG = SimConfig(duration_ms=120_000.0, seed=3, jitter_std=0.01)
+
+
+def _f2_workloads(n_iterations: int = 300):
+    """The F2 snapshot's workload pair (single source of truth for the
+    spec lives in configs.metronome_testbed); only the cluster varies
+    across the oversubscription sweep."""
+    _, wls, _ = make_snapshot("F2", n_iterations=n_iterations)
+    return wls
+
+
+def _avg_jct_ms(res) -> float:
+    fin = [v for v in res.sim.finish_times_ms.values() if not np.isnan(v)]
+    return float(np.mean(fin)) if fin else float("nan")
+
+
+def run() -> None:
+    for ratio in RATIOS:
+        results = {}
+        for sched in SCHEDULERS:
+            cluster = make_fabric_cluster(n_leaves=2, hosts_per_leaf=2,
+                                          bw_gbps=25.0,
+                                          oversubscription=ratio)
+            wls = _f2_workloads()
+            with Timer() as t:
+                results[sched] = run_experiment(sched, cluster, wls, CFG)
+            r = results[sched]
+            uplink = max(r.sim.uplink_utilization.values(), default=0.0)
+            iters = [v for v in r.sim.time_per_1000_iters_s.values()
+                     if not np.isnan(v)]
+            emit(f"fabric_{ratio:g}to1_{sched}", t.us,
+                 f"avg_jct_s={_avg_jct_ms(r) / 1e3:.2f};"
+                 f"s_per_1000={np.mean(iters):.2f};"
+                 f"uplink_util={uplink:.3f}")
+        me, de = _avg_jct_ms(results["metronome"]), _avg_jct_ms(results["default"])
+        gain = 100.0 * (1.0 - me / de) if de else float("nan")
+        emit(f"fabric_{ratio:g}to1_metronome_gain", 0.0,
+             f"jct_gain_vs_default_pct={gain:.2f}")
+    # the shipped fabric snapshots end-to-end (F2: 2:1, F4: 4:1, 3 jobs)
+    for sid in FABRIC_SNAPSHOTS:
+        for sched in ("metronome", "default"):
+            cluster, wls, bg = make_snapshot(sid, n_iterations=300)
+            with Timer() as t:
+                r = run_experiment(sched, cluster, wls, CFG, background=bg)
+            uplink = max(r.sim.uplink_utilization.values(), default=0.0)
+            emit(f"fabric_{sid}_{sched}", t.us,
+                 f"avg_jct_s={_avg_jct_ms(r) / 1e3:.2f};"
+                 f"uplink_util={uplink:.3f};readj={r.sim.readjustments}")

@@ -16,12 +16,22 @@ BENCH_CFG = SimConfig(duration_ms=150_000.0, seed=3, jitter_std=0.01)
 def run_snapshot_all(sid: str, n_iterations: int = 400,
                      cfg: SimConfig = BENCH_CFG,
                      schedulers=SCHEDULERS, **kw) -> Dict[str, RunResult]:
-    out = {}
+    """Run one snapshot under every scheduler.
+
+    Scheduler names key the :class:`RunResult`s; the single non-result key
+    ``"_workloads"`` holds the workload list of the FIRST scheduler's run
+    (every run regenerates structurally identical workloads from the same
+    snapshot, so one representative list is unambiguous — job names and
+    priorities are what callers consume)."""
+    out: Dict[str, RunResult] = {}
+    wls_rep = None
     for sched in schedulers:
         cluster, wls, bg = make_snapshot(sid, n_iterations=n_iterations)
         out[sched] = run_experiment(sched, cluster, wls, cfg, background=bg,
                                     **kw)
-        out["_workloads"] = wls
+        if wls_rep is None:
+            wls_rep = wls
+    out["_workloads"] = wls_rep
     return out
 
 

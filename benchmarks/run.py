@@ -9,12 +9,14 @@ import argparse
 import sys
 import traceback
 
-from . import (bench_ablation, bench_kernels, bench_param_variation,
-               bench_persistence, bench_roofline, bench_sched_time,
-               bench_snapshots, bench_tct, bench_thresholds)
+from . import (bench_ablation, bench_fabric, bench_kernels,
+               bench_param_variation, bench_persistence, bench_roofline,
+               bench_sched_time, bench_snapshots, bench_tct,
+               bench_thresholds)
 
 ALL = {
     "snapshots": bench_snapshots,     # Fig. 7/8 + Table V
+    "fabric": bench_fabric,           # beyond-paper: oversubscribed fabrics
     "tct": bench_tct,                 # Fig. 10
     "param_variation": bench_param_variation,  # Fig. 11/12
     "persistence": bench_persistence,  # Table VI

@@ -12,6 +12,7 @@ import argparse
 import numpy as np
 
 from repro.configs.metronome_testbed import MODEL_FLEET, make_snapshot
+from repro.core.cluster import make_fabric_cluster
 from repro.core.harness import run_trace_experiment
 from repro.core.simulator import SimConfig
 from repro.core.trace import cluster_load, generate_trace, trace_to_jobs
@@ -23,6 +24,9 @@ def main():
     ap.add_argument("--jobs", type=int, default=10)
     ap.add_argument("--seed", type=int, default=1)
     ap.add_argument("--duration-s", type=float, default=1800.0)
+    ap.add_argument("--fabric", type=float, default=None, metavar="RATIO",
+                    help="run on a 2-leaf fabric with this oversubscription "
+                         "ratio instead of the paper's star testbed")
     args = ap.parse_args()
 
     trace = generate_trace(MODEL_FLEET, duration_s=args.duration_s,
@@ -34,7 +38,11 @@ def main():
 
     rows = []
     for sched in ("metronome", "default", "diktyo", "ideal"):
-        cluster, _, _ = make_snapshot("S1")
+        if args.fabric is not None:
+            cluster = make_fabric_cluster(n_leaves=2, hosts_per_leaf=2,
+                                          oversubscription=args.fabric)
+        else:
+            cluster, _, _ = make_snapshot("S1")
         jobs = trace_to_jobs(trace, MODEL_FLEET, time_scale=1.0)
         wls = [Workload(name=j.name, jobs=[j]) for j in jobs]
         for w in wls:

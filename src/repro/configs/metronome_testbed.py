@@ -18,7 +18,7 @@ from __future__ import annotations
 
 from typing import Dict, List, Tuple
 
-from repro.core.cluster import Cluster, make_testbed_cluster
+from repro.core.cluster import Cluster, make_fabric_cluster, make_testbed_cluster
 from repro.core.simulator import BackgroundFlow
 from repro.core.workload import HIGH, LOW, Job, Workload, make_job
 
@@ -109,8 +109,55 @@ def make_snapshot(sid: str, n_iterations: int = 400
             _wl("wl-rn152", [job("rn152-ft", "FT-ResNet152", LOW, 0.001)]),
         ]
         _congest(cluster, bg, "worker-a30-2", iperf_gbps=16.0, tau_ms=40.0)
+    elif sid in ("F2", "F4"):
+        return make_fabric_snapshot(sid, n_iterations=n_iterations)
     else:
         raise ValueError(f"unknown snapshot {sid!r}")
+    return cluster, wls, bg
+
+
+def make_fabric_snapshot(sid: str, n_iterations: int = 400
+                         ) -> Tuple[Cluster, List[Workload], List[BackgroundFlow]]:
+    """Beyond-paper fabric snapshots on an oversubscribed leaf–spine fabric.
+
+    These scenarios are invisible to the seed's host-link-only model: host
+    links stay under capacity while the spine uplinks contend, so the only
+    scheduler that separates the jobs in time is the one that models the
+    uplink (Metronome post-fabric-refactor).
+
+      F2: 2 leaves x 2 hosts @25G, 2:1 oversubscription (25G uplinks).
+          Two 4-task jobs span both leaves; per-host demand 12+12 = 24G
+          < 25G (no host contention) but each job pushes 24G through each
+          uplink -> 48G >> 25G when overlapped.
+      F4: 2 leaves x 4 hosts @25G, 4:1 oversubscription (25G uplinks).
+          Three 8-task jobs (1 HIGH + 2 LOW) span both leaves; per-host
+          demand 3x6 = 18G < 25G, per-uplink 3x24G vs 25G.
+    """
+    def job(name, prio, submit, *, n_tasks, period_ms, duty, bw_gbps):
+        return make_job(name, n_tasks=n_tasks, period_ms=period_ms, duty=duty,
+                        bw_gbps=bw_gbps, priority=prio,
+                        n_iterations=n_iterations, submit_time_s=submit)
+
+    bg: List[BackgroundFlow] = []
+    if sid == "F2":
+        cluster = make_fabric_cluster(n_leaves=2, hosts_per_leaf=2,
+                                      bw_gbps=25.0, oversubscription=2.0)
+        spec = dict(n_tasks=4, period_ms=100.0, duty=0.35, bw_gbps=12.0)
+        wls = [
+            _wl("wl-f2-hi", [job("f2-hi", HIGH, 0.0, **spec)]),
+            _wl("wl-f2-lo", [job("f2-lo", LOW, 0.001, **spec)]),
+        ]
+    elif sid == "F4":
+        cluster = make_fabric_cluster(n_leaves=2, hosts_per_leaf=4,
+                                      bw_gbps=25.0, oversubscription=4.0)
+        spec = dict(n_tasks=8, period_ms=120.0, duty=0.30, bw_gbps=6.0)
+        wls = [
+            _wl("wl-f4-hi", [job("f4-hi", HIGH, 0.0, **spec)]),
+            _wl("wl-f4-lo0", [job("f4-lo0", LOW, 0.001, **spec)]),
+            _wl("wl-f4-lo1", [job("f4-lo1", LOW, 0.002, **spec)]),
+        ]
+    else:
+        raise ValueError(f"unknown fabric snapshot {sid!r}")
     return cluster, wls, bg
 
 
@@ -129,3 +176,5 @@ def _congest(cluster: Cluster, bg: List[BackgroundFlow], node: str,
 
 
 SNAPSHOTS = ("S1", "S2", "S3", "S4", "S5")
+# beyond-paper leaf–spine snapshots (oversubscribed fabric; bench_fabric.py)
+FABRIC_SNAPSHOTS = ("F2", "F4")

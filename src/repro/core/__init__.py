@@ -6,12 +6,13 @@
 #   controller— stop-and-wait controller (global offset, recalc, regulation)
 #   baselines — Default / Diktyo / Exclusive
 #   simulator — event-driven fluid-flow cluster simulator
+#   topology  — leaf–spine fabric model (star = paper's Eq. 14 default)
 #   trace     — Gavel-style workload generator
 #   harness   — scheduler -> controller -> simulator glue
 from . import (baselines, cluster, controller, framework, geometry, harness,
-               scheduler, scoring, simulator, trace, workload)
+               scheduler, scoring, simulator, topology, trace, workload)
 
 __all__ = [
     "baselines", "cluster", "controller", "framework", "geometry", "harness",
-    "scheduler", "scoring", "simulator", "trace", "workload",
+    "scheduler", "scoring", "simulator", "topology", "trace", "workload",
 ]

@@ -1,12 +1,14 @@
-"""Cluster model: nodes, host links, latency topology.
+"""Cluster model: nodes, host links, fabric topology, latency.
 
 Mirrors the paper's CRDs:
   - NodeBandwidth  -> :class:`Node` (capacity + deployed pods)
   - NetworkTopology-> :class:`Cluster.latency` (tau_{x,y} matrix)
 
-Per the paper's Eq. (14) simplification (1:1 oversubscription), contention
-is modeled on *host links* only: every node owns one host link of capacity
-``bw_gbps``; inter-switch links are never the bottleneck.
+The default :class:`~repro.core.topology.Topology` is the paper's Eq. (14)
+simplification (1:1 oversubscription): contention on *host links* only,
+every node owning one host link of capacity ``bw_gbps``. Passing a
+leaf–spine topology additionally models leaf->spine uplinks, which CAN be
+the bottleneck on oversubscribed fabrics (see ``topology.py``).
 """
 from __future__ import annotations
 
@@ -14,6 +16,8 @@ import dataclasses
 from typing import Dict, List, Optional
 
 import numpy as np
+
+from .topology import Link, Topology
 
 
 @dataclasses.dataclass
@@ -68,9 +72,10 @@ class Node:
 
 
 class Cluster:
-    """A set of nodes plus the latency matrix tau (NetworkTopology CR)."""
+    """A set of nodes plus fabric topology and the latency matrix tau."""
 
-    def __init__(self, nodes: List[Node], latency_ms: Optional[np.ndarray] = None):
+    def __init__(self, nodes: List[Node], latency_ms: Optional[np.ndarray] = None,
+                 topology: Optional[Topology] = None):
         self.nodes: Dict[str, Node] = {n.name: n for n in nodes}
         self.node_names: List[str] = [n.name for n in nodes]
         self._index = {name: i for i, name in enumerate(self.node_names)}
@@ -81,10 +86,39 @@ class Cluster:
             latency_ms = np.ones((n, n), dtype=np.float64)
         self.latency = np.asarray(latency_ms, dtype=np.float64)
         assert self.latency.shape == (n, n)
+        self.topology = topology or Topology.star(self.node_names)
+        missing = set(self.node_names) - set(self.topology.leaf_of)
+        if missing:
+            raise ValueError(f"topology missing nodes {sorted(missing)}")
 
     # -- helpers -----------------------------------------------------------
     def node(self, name: str) -> Node:
         return self.nodes[name]
+
+    # -- unified link view --------------------------------------------------
+    # Host-link ids equal node names; uplinks use ``uplink:<leaf>``. Node
+    # objects stay authoritative for host-link capacities (the NodeBandwidth
+    # CR path), the topology for uplinks.
+    @property
+    def link_ids(self) -> List[str]:
+        return list(self.node_names) + self.topology.uplink_ids
+
+    def link_capacity(self, link_id: str) -> float:
+        if link_id in self.nodes:
+            return self.nodes[link_id].bw_gbps
+        link = self.topology.link(link_id)
+        if link is None:
+            raise KeyError(f"unknown link {link_id!r}")
+        return link.capacity_gbps
+
+    def link_alloc(self, link_id: str) -> float:
+        """Allocatable bandwidth of a link (schedulers' Eq. 13-14 view)."""
+        if link_id in self.nodes:
+            return self.nodes[link_id].alloc_bw
+        link = self.topology.link(link_id)
+        if link is None:
+            raise KeyError(f"unknown link {link_id!r}")
+        return link.alloc_bw
 
     def index(self, name: str) -> int:
         return self._index[name]
@@ -114,7 +148,7 @@ class Cluster:
             )
             for n in self.nodes.values()
         ]
-        return Cluster(nodes, self.latency.copy())
+        return Cluster(nodes, self.latency.copy(), self.topology.copy())
 
 
 def make_testbed_cluster() -> Cluster:
@@ -146,3 +180,35 @@ def make_tpu_host_cluster(n_hosts: int = 8, bw_gbps: float = 25.0,
         for i in range(n_hosts)
     ]
     return Cluster(nodes)
+
+
+def make_fabric_cluster(
+    n_leaves: int = 2,
+    hosts_per_leaf: int = 2,
+    bw_gbps: float = 25.0,
+    oversubscription: float = 2.0,
+    chips_per_host: int = 4,
+) -> Cluster:
+    """Leaf–spine cluster: ``n_leaves`` racks of identical hosts, each rack's
+    uplink carrying ``hosts_per_leaf * bw_gbps / oversubscription``.
+
+    ``oversubscription=1.0`` makes uplinks as fat as their racks (they can
+    still be shared by concurrent cross-rack jobs); the paper's star model is
+    recovered with ``n_leaves=1``.
+    """
+    nodes = []
+    leaves: Dict[str, List[str]] = {}
+    for l in range(n_leaves):
+        leaf = f"leaf{l}"
+        leaves[leaf] = []
+        for h in range(hosts_per_leaf):
+            name = f"{leaf}-host{h}"
+            nodes.append(Node(name, Resources(cpu=32, mem=256, gpu=chips_per_host),
+                              bw_gbps=bw_gbps))
+            leaves[leaf].append(name)
+    topo = Topology.leaf_spine(
+        leaves,
+        host_bw_gbps={n.name: n.bw_gbps for n in nodes},
+        oversubscription=oversubscription,
+    )
+    return Cluster(nodes, topology=topo)

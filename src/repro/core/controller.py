@@ -27,6 +27,7 @@ from .cluster import Cluster
 from .framework import TaskRegistry
 from .geometry import DI_PRE
 from .scheduler import LinkScheme, ReserveMessage
+from .topology import is_uplink
 from .workload import HIGH, Task, TrafficSpec
 
 MONITOR_WINDOW = 10  # fixed time window (iterations) — paper section III-C
@@ -42,7 +43,10 @@ class RealignAction:
 
 @dataclasses.dataclass
 class LinkState:
-    """Current scheme on one host link (node)."""
+    """Current scheme on one fabric link.
+
+    Keyed in :attr:`StopAndWaitController.links` by link id: host links use
+    the node name (seed-compatible), spine uplinks ``uplink:<leaf>``."""
 
     scheme: LinkScheme
     optimal: bool  # False until offline recalculation has run
@@ -61,7 +65,7 @@ class StopAndWaitController:
         self.a_t = a_t
         self.o_t = o_t
         self.di_pre = di_pre
-        self.links: Dict[str, LinkState] = {}  # node name -> state
+        self.links: Dict[str, LinkState] = {}  # link id -> state (see LinkState)
         self.global_offsets_ms: Dict[str, float] = {}
         self.injected_ms: Dict[str, float] = {}  # per-job E_T idle injection
         self._history: Dict[str, collections.deque] = {}
@@ -79,14 +83,14 @@ class StopAndWaitController:
     def on_schedule(self, cluster: Cluster, registry: TaskRegistry,
                     msg: ReserveMessage) -> None:
         """Receive SEND(Shifts, SkipPhaseThree, P_l(n*)) from the scheduler."""
-        if msg.scheme is not None:
-            self.links[msg.node] = LinkState(scheme=msg.scheme,
-                                             optimal=msg.skip_phase_three)
-            for j, inj in msg.scheme.injected_ms.items():
+        for link_id, scheme in msg.schemes.items():
+            skip = msg.skips.get(link_id, msg.skip_phase_three)
+            self.links[link_id] = LinkState(scheme=scheme, optimal=skip)
+            for j, inj in scheme.injected_ms.items():
                 if inj > 0:
                     self.injected_ms[j] = inj
-            if not msg.skip_phase_three:
-                self.pending_recalc.append(msg.node)
+            if not skip:
+                self.pending_recalc.append(link_id)
         for jname, job in registry.jobs.items():
             self._priorities[jname] = job.priority
         self._recompute_global_offsets()
@@ -97,15 +101,31 @@ class StopAndWaitController:
             while self.pending_recalc:
                 self.recalc_hook(self.pending_recalc.pop())
 
+    @staticmethod
+    def _drop_job(state: LinkState, job: str) -> bool:
+        """Remove ``job`` from a link scheme; True when the scheme empties."""
+        sch = state.scheme
+        if job in sch.jobs:
+            idx = sch.jobs.index(job)
+            sch.jobs.pop(idx)
+            sch.shifts_slots = np.delete(sch.shifts_slots, idx)
+            sch.muls = np.delete(sch.muls, idx)
+        return not sch.jobs
+
     def on_evict(self, node: str, pod: Task) -> None:
+        """Pod eviction: retire the job from the node's host-link scheme and
+        from every uplink scheme it appears in (evictions are all-or-nothing
+        at the job level, so the job's cross-leaf flows disappear too)."""
+        dead: List[str] = []
         state = self.links.get(node)
-        if state is not None and pod.job in state.scheme.jobs:
-            idx = state.scheme.jobs.index(pod.job)
-            state.scheme.jobs.pop(idx)
-            state.scheme.shifts_slots = np.delete(state.scheme.shifts_slots, idx)
-            state.scheme.muls = np.delete(state.scheme.muls, idx)
-            if not state.scheme.jobs:
-                del self.links[node]
+        if state is not None and self._drop_job(state, pod.job):
+            dead.append(node)
+        for link_id, st in self.links.items():
+            if is_uplink(link_id) and pod.job in st.scheme.jobs:
+                if self._drop_job(st, pod.job):
+                    dead.append(link_id)
+        for link_id in dead:
+            del self.links[link_id]
         self._recompute_global_offsets()
 
     # ---------------------------------------------------------- global offset
@@ -119,7 +139,14 @@ class StopAndWaitController:
         """
         g = nx.Graph()
         link_shift_ms: Dict[Tuple[str, str], float] = {}
-        for node, state in self.links.items():
+        # A pair contending on links with different capacities can receive
+        # different relative shifts from the per-link solver; add_edge
+        # overwrites attrs, so iterate in a fixed order with uplinks LAST:
+        # the most oversubscribed tier wins the tie deterministically (a
+        # joint multi-link rotation solve is an open roadmap item).
+        ordered = sorted(self.links.items(),
+                         key=lambda kv: (is_uplink(kv[0]), kv[0]))
+        for node, state in ordered:
             sch = state.scheme
             delays = geometry.shifts_to_delay_ms(sch.shifts_slots, sch.base_ms,
                                                  self.di_pre)
@@ -188,16 +215,16 @@ class StopAndWaitController:
         """Process pending SkipPhaseThree==0 links: exhaustive 3rd stage."""
         done = 0
         while self.pending_recalc:
-            node = self.pending_recalc.pop()
-            state = self.links.get(node)
+            link_id = self.pending_recalc.pop()
+            state = self.links.get(link_id)
             if state is None:
                 continue
             sch = state.scheme
-            duties, bws = self._link_traffic(registry, sch)
+            duties, bws = self._link_traffic(registry, sch, cluster, link_id)
             patterns = geometry.pattern_matrix(sch.muls, duties, self.di_pre)
             ref_index = sch.jobs.index(sch.ref_job) if sch.ref_job in sch.jobs else 0
             result = scoring.find_optimal_rotation(
-                patterns, bws, cluster.node(node).alloc_bw, sch.muls,
+                patterns, bws, cluster.link_alloc(link_id), sch.muls,
                 ref_index, self.di_pre,
             )
             sch.shifts_slots = result.shifts
@@ -208,8 +235,16 @@ class StopAndWaitController:
         self._recompute_global_offsets()
         return done
 
-    def _link_traffic(self, registry: TaskRegistry, sch: LinkScheme
+    def _link_traffic(self, registry: TaskRegistry, sch: LinkScheme,
+                      cluster: Cluster, link_id: str
                       ) -> Tuple[List[float], List[float]]:
+        topo = cluster.topology
+        leaf = None
+        if is_uplink(link_id):
+            for lf, up in topo.uplinks.items():
+                if up.id == link_id:
+                    leaf = lf
+                    break
         duties: List[float] = []
         bws: List[float] = []
         for idx, j in enumerate(sch.jobs):
@@ -217,7 +252,16 @@ class StopAndWaitController:
             spec = tasks[0].traffic if tasks else TrafficSpec(100.0, 0.3, 1.0)
             eff_period = sch.base_ms / max(int(sch.muls[idx]), 1)
             duties.append(min(1.0, spec.comm_ms / eff_period))
-            bws.append(sum(t.traffic.bw_gbps for t in tasks if t.node is not None))
+            if leaf is None:
+                bws.append(sum(t.traffic.bw_gbps for t in tasks
+                               if t.node is not None))
+            else:
+                # uplink demand: only the job's in-leaf pods source traffic
+                # toward the spine (low_comm pods excluded, matching the
+                # Score phase's _uplink_jobs grouping)
+                bws.append(sum(t.traffic.bw_gbps for t in tasks
+                               if t.node is not None and not t.low_comm
+                               and topo.leaf_of[t.node] == leaf))
         return duties, bws
 
     # ------------------------------------------------------ continuous monitor

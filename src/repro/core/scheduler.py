@@ -42,12 +42,19 @@ class LinkScheme:
 
 @dataclasses.dataclass
 class ReserveMessage:
-    """What Reserve SENDs to the stop-and-wait controller (Alg. 1 line 40)."""
+    """What Reserve SENDs to the stop-and-wait controller (Alg. 1 line 40).
+
+    ``schemes`` maps every link the placement traverses and contends on
+    (host link id == node name; uplinks ``uplink:<leaf>``) to its rotation
+    scheme. ``skips`` carries the per-link SkipPhaseThree flag;
+    ``skip_phase_three`` aggregates it (True when no link needs the offline
+    3rd-stage recalculation)."""
 
     node: str
-    scheme: Optional[LinkScheme]
+    schemes: Dict[str, LinkScheme]
     shifts_ms: Dict[str, float]
     skip_phase_three: bool
+    skips: Dict[str, bool] = dataclasses.field(default_factory=dict)
 
 
 class MetronomePlugin(SchedulerPlugin):
@@ -87,6 +94,42 @@ class MetronomePlugin(SchedulerPlugin):
         """Aggregate host-link demand of one job's pods on this node."""
         return sum(t.traffic.bw_gbps for t in tasks)
 
+    def _uplink_jobs(self, cluster: Cluster, leaf: str, registry: TaskRegistry,
+                     extra: Optional[Task] = None,
+                     extra_node: Optional[str] = None
+                     ) -> Dict[str, List[Task]]:
+        """Jobs traversing ``leaf``'s uplink -> their in-leaf tasks.
+
+        A job crosses the uplink when it has pods both inside and outside
+        the leaf; its uplink demand is the aggregate bandwidth its IN-leaf
+        pods source toward the spine (the simulator's flow model)."""
+        topo = cluster.topology
+        nodes_by_job: Dict[str, set] = {}
+        for t in registry.tasks.values():
+            if t.node is not None:
+                nodes_by_job.setdefault(t.job, set()).add(t.node)
+        if extra is not None and extra_node is not None:
+            nodes_by_job.setdefault(extra.job, set()).add(extra_node)
+        groups: Dict[str, List[Task]] = {}
+        for job, nodes in nodes_by_job.items():
+            if not topo.spans_leaves(nodes):
+                continue
+            if not any(topo.leaf_of[n] == leaf for n in nodes):
+                continue
+            in_leaf = [
+                t for t in registry.job_tasks(job)
+                if t.node is not None and topo.leaf_of[t.node] == leaf
+                and not t.low_comm
+            ]
+            if (extra is not None and extra_node is not None
+                    and extra.job == job and not extra.low_comm
+                    and topo.leaf_of[extra_node] == leaf
+                    and all(t.uid != extra.uid for t in in_leaf)):
+                in_leaf = in_leaf + [extra]
+            if in_leaf:
+                groups[job] = in_leaf
+        return groups
+
     def _priority_order(self, registry: TaskRegistry, jobs: Sequence[str]) -> List[str]:
         """Sort jobs by (priority desc, deployment order asc)."""
         def key(j: str):
@@ -120,9 +163,19 @@ class MetronomePlugin(SchedulerPlugin):
         # resources (Eq. 13)
         if not pod.resources.fits_in(node.free):
             return False
-        # bandwidth capacity (Eq. 14)
+        # bandwidth capacity (Eq. 14), on EVERY link the pod's flows would
+        # traverse: the host link, plus the candidate leaf's uplink when the
+        # placement makes the pod's job span leaves
         if pod.traffic.bw_gbps > node.alloc_bw:
             return False
+        topo = cluster.topology
+        if not topo.is_star and not pod.low_comm:
+            peers = {t.node for t in registry.job_tasks(pod.job)
+                     if t.node is not None and t.uid != pod.uid}
+            if peers and topo.spans_leaves(peers | {node_name}):
+                up = topo.uplink_of(node_name)
+                if up is not None and pod.traffic.bw_gbps > up.alloc_bw:
+                    return False
         # Dependency loops (Cassini) are handled at the Score phase: on a
         # loaded cluster a hard filter would leave pods unschedulable, and
         # the paper's own section V prescribes scoring toward less-contended
@@ -142,11 +195,10 @@ class MetronomePlugin(SchedulerPlugin):
         cycle through the pod's own job.
         """
         g = nx.Graph()
-        for n in cluster.node_names:
-            groups = self._node_jobs(cluster, n, registry,
-                                     extra=pod if n == node_name else None)
+
+        def add_link(link_id: str, groups: Dict[str, List[Task]],
+                     cap: float) -> None:
             jobs = list(groups.keys())
-            cap = cluster.node(n).alloc_bw
             bws = {j: self._job_bw(ts) for j, ts in groups.items()}
             for i in range(len(jobs)):
                 for j in range(i + 1, len(jobs)):
@@ -154,12 +206,23 @@ class MetronomePlugin(SchedulerPlugin):
                     if bws[a] + bws[b] <= cap:
                         continue  # not contending: no rotation constraint
                     if g.has_edge(a, b):
-                        g[a][b]["links"].add(n)
+                        g[a][b]["links"].add(link_id)
                     else:
-                        g.add_edge(a, b, links={n})
-        # a 2-job multi-link relation is consistent (one relative shift);
-        # cross-link cycles of length >= 3 THROUGH THIS JOB prevent a
-        # consistent global offset.
+                        g.add_edge(a, b, links={link_id})
+
+        for n in cluster.node_names:
+            add_link(n, self._node_jobs(cluster, n, registry,
+                                        extra=pod if n == node_name else None),
+                     cluster.node(n).alloc_bw)
+        for leaf, up in cluster.topology.uplinks.items():
+            add_link(up.id,
+                     self._uplink_jobs(cluster, leaf, registry,
+                                       extra=pod, extra_node=node_name),
+                     up.alloc_bw)
+        # a 2-job multi-link relation needs only one relative shift, which
+        # the controller resolves deterministically (uplink schemes take
+        # precedence when per-link solutions differ); cross-link cycles of
+        # length >= 3 THROUGH THIS JOB prevent a consistent global offset.
         if pod.job not in g:
             return False
         try:
@@ -177,31 +240,17 @@ class MetronomePlugin(SchedulerPlugin):
         return False
 
     # ------------------------------------------------------------------ Score
-    def score(self, ctx: ScheduleContext, cluster: Cluster, pod: Task,
-              node_name: str, registry: TaskRegistry) -> float:
-        node = cluster.node(node_name)
-        schemes: Dict[str, LinkScheme] = ctx.cache.setdefault("schemes", {})
-
-        # early return 1: LowComm pod — communication need not be guaranteed
-        if pod.low_comm:
-            ctx.cache.setdefault("early", {})[node_name] = True
-            return PERFECT
-
-        groups = self._node_jobs(cluster, node_name, registry, extra=pod)
-        deployed_groups = {j: ts for j, ts in groups.items() if j != pod.job or
-                           any(t.uid != pod.uid for t in ts)}
+    def _score_link(self, registry: TaskRegistry, groups: Dict[str, List[Task]],
+                    cap: float, self_job: str
+                    ) -> Tuple[float, Optional[LinkScheme]]:
+        """Rotation-feasibility score of one link under ``groups`` (job ->
+        its tasks sourcing traffic onto the link). Returns (score, scheme);
+        scheme is None on the early-return paths (no contention to solve)."""
         total_bw = sum(self._job_bw(ts) for ts in groups.values())
-
-        # early return 2: empty node or aggregate demand within capacity
-        only_self = list(groups.keys()) == [pod.job]
-        if only_self or total_bw <= node.alloc_bw:
-            ctx.cache.setdefault("early", {})[node_name] = True
-            return PERFECT
-
-        # cross-link dependency loop: the computed rotation cannot be made
-        # globally consistent -> cap below perfect (loop-free nodes win)
-        loop_cap = (99.0 if self._creates_dependency_loop(
-            cluster, pod, node_name, registry) else PERFECT)
+        only_self = list(groups.keys()) == [self_job]
+        # early return: empty link or aggregate demand within capacity
+        if not groups or only_self or total_bw <= cap:
+            return PERFECT, None
 
         # --- two-dimensional bandwidth scheduling: interleave phases -------
         jobs = self._priority_order(registry, groups.keys())
@@ -228,25 +277,83 @@ class MetronomePlugin(SchedulerPlugin):
             bws.append(self._job_bw(ts))
         patterns = geometry.pattern_matrix(unified.muls, duties, self.di_pre)
         result = scoring.find_feasible_rotation(
-            patterns, bws, node.alloc_bw, unified.muls, ref_index,
+            patterns, bws, cap, unified.muls, ref_index,
             self.di_pre, mode=self.rotation_mode,
         )
-        score = float(min(result.score, loop_cap))
-        schemes[node_name] = LinkScheme(
+        scheme = LinkScheme(
             jobs=jobs,
             shifts_slots=result.shifts,
             base_ms=unified.base_ms,
             muls=unified.muls,
-            # the scheme keeps the RAW rotation score: the loop cap only
-            # demotes the NODE choice; the controller's realign guard needs
-            # to know whether an interleave actually exists on this link
             score=float(result.score),
             early_return=False,
             injected_ms={j: float(unified.injected_ms[i]) for i, j in enumerate(jobs)},
             ref_job=jobs[ref_index],
         )
+        return float(result.score), scheme
+
+    def _traversed_uplinks(self, cluster: Cluster, pod: Task,
+                           node_name: str, registry: TaskRegistry
+                           ) -> List[str]:
+        """Leaves whose uplinks the pod's job would traverse if the pod
+        landed on ``node_name`` (empty on star topologies or intra-leaf
+        placements)."""
+        topo = cluster.topology
+        if topo.is_star:
+            return []
+        job_nodes = {t.node for t in registry.job_tasks(pod.job)
+                     if t.node is not None}
+        job_nodes.add(node_name)
+        if not topo.spans_leaves(job_nodes):
+            return []
+        return sorted({topo.leaf_of[n] for n in job_nodes}
+                      & set(topo.uplinks.keys()))
+
+    def score(self, ctx: ScheduleContext, cluster: Cluster, pod: Task,
+              node_name: str, registry: TaskRegistry) -> float:
+        node = cluster.node(node_name)
+        schemes: Dict[str, Dict[str, LinkScheme]] = ctx.cache.setdefault(
+            "schemes", {})
+
+        # early return 1: LowComm pod — communication need not be guaranteed
+        if pod.low_comm:
+            ctx.cache.setdefault("early", {})[node_name] = True
+            return PERFECT
+
+        # every link the placement would traverse gets its own rotation
+        # problem; the node's bandwidth score is the worst of them
+        link_schemes: Dict[str, LinkScheme] = {}
+        host_groups = self._node_jobs(cluster, node_name, registry, extra=pod)
+        worst, host_scheme = self._score_link(
+            registry, host_groups, node.alloc_bw, pod.job)
+        if host_scheme is not None:
+            link_schemes[node_name] = host_scheme
+        for leaf in self._traversed_uplinks(cluster, pod, node_name, registry):
+            up = cluster.topology.uplinks[leaf]
+            ugroups = self._uplink_jobs(cluster, leaf, registry,
+                                        extra=pod, extra_node=node_name)
+            uscore, uscheme = self._score_link(
+                registry, ugroups, up.alloc_bw, pod.job)
+            worst = min(worst, uscore)
+            if uscheme is not None:
+                link_schemes[up.id] = uscheme
+
+        if not link_schemes:
+            # no contention on any traversed link
+            ctx.cache.setdefault("early", {})[node_name] = True
+            return PERFECT
+
+        # cross-link dependency loop: the computed rotation cannot be made
+        # globally consistent -> cap below perfect (loop-free nodes win).
+        # The schemes keep the RAW rotation scores: the loop cap only
+        # demotes the NODE choice; the controller's realign guard needs to
+        # know whether an interleave actually exists on each link.
+        if self._creates_dependency_loop(cluster, pod, node_name, registry):
+            worst = min(worst, 99.0)
+
+        schemes[node_name] = link_schemes
         ctx.cache.setdefault("early", {})[node_name] = False
-        return score
+        return float(worst)
 
     # -------------------------------------------------------- NormalizeScore
     def normalize_scores(self, ctx: ScheduleContext, cluster: Cluster, pod: Task,
@@ -278,27 +385,33 @@ class MetronomePlugin(SchedulerPlugin):
     # ---------------------------------------------------------------- Reserve
     def reserve(self, ctx: ScheduleContext, cluster: Cluster, pod: Task,
                 node_name: str, registry: TaskRegistry) -> None:
-        schemes: Dict[str, LinkScheme] = ctx.cache.get("schemes", {})
+        all_schemes: Dict[str, Dict[str, LinkScheme]] = ctx.cache.get(
+            "schemes", {})
         early = ctx.cache.get("early", {}).get(node_name, True)
         max_score = ctx.cache.get("max_score", PERFECT)
-        scheme = schemes.get(node_name)
+        link_schemes = {} if early else all_schemes.get(node_name, {})
 
-        n_jobs_on_link = len(self._node_jobs(cluster, node_name, registry))
-        skip = bool(
-            early
-            or max_score < PERFECT - 1e-9
-            or n_jobs_on_link == 2
-        )
+        # per-link SkipPhaseThree (Alg. 1): skip when the best node is
+        # imperfect (unavoidable contention) or the link carries only 2 jobs
+        # (the intermediate rotation is already optimal)
+        skips: Dict[str, bool] = {}
+        for link_id, scheme in link_schemes.items():
+            skips[link_id] = bool(
+                max_score < PERFECT - 1e-9 or len(scheme.jobs) == 2
+            )
+        skip = bool(early or all(skips.values()))
 
         shifts_ms: Dict[str, float] = {}
-        if scheme is not None and not early:
+        host_scheme = link_schemes.get(node_name)
+        if host_scheme is not None:
             delays = geometry.shifts_to_delay_ms(
-                scheme.shifts_slots, scheme.base_ms, self.di_pre
+                host_scheme.shifts_slots, host_scheme.base_ms, self.di_pre
             )
-            shifts_ms = {j: float(d) for j, d in zip(scheme.jobs, delays)}
+            shifts_ms = {j: float(d) for j, d in zip(host_scheme.jobs, delays)}
 
-        msg = ReserveMessage(node=node_name, scheme=scheme,
-                             shifts_ms=shifts_ms, skip_phase_three=skip)
+        msg = ReserveMessage(node=node_name, schemes=link_schemes,
+                             shifts_ms=shifts_ms, skip_phase_three=skip,
+                             skips=skips)
         self.messages.append(msg)
         if self.controller is not None:
             self.controller.on_schedule(cluster, registry, msg)

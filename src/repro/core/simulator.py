@@ -1,20 +1,25 @@
 """Event-driven fluid-flow cluster simulator.
 
-Executes placed training jobs with periodic on-off traffic over shared host
-links (the paper's contention model):
+Executes placed training jobs with periodic on-off traffic over the shared
+fabric (the paper's contention model, generalized to multi-tier links):
 
   * each job iterates: compute phase -> synchronized communication phase;
   * during communication, each multi-node job places one flow per used host
-    link with demand ``r^BW`` and volume ``r^BW * m_p``;
-  * concurrent flows on a link share bandwidth max-min fairly, so contention
-    stretches the communication phase and stalls the next compute phase
-    ("delayed flows stall the subsequent computations", section I);
+    link with demand ``r^BW`` and volume ``r^BW * m_p``; when the job spans
+    leaves, the flow also traverses its source leaf's spine uplink;
+  * concurrent flows share bandwidth max-min fairly across their full link
+    paths (progressive filling); on the default star topology every path is
+    one host link and the allocation matches the seed's per-link
+    water-filling bit-for-bit. Contention stretches the communication phase
+    and stalls the next compute phase ("delayed flows stall the subsequent
+    computations", section I);
   * compute-phase jitter models the paper's communication drift; the
     Metronome stop-and-wait controller pauses LOW priority jobs to realign.
 
 Measured outputs per run: per-job iteration durations, average time per
-1,000 iterations, per-link utilization, Gamma (Eq. 5), readjustment count,
-and total completion time.
+1,000 iterations, per-link utilization (host links keyed by node name,
+uplinks by ``uplink:<leaf>``), Gamma (Eq. 5), readjustment count, and total
+completion time.
 """
 from __future__ import annotations
 
@@ -24,6 +29,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from . import topology
 from .cluster import Cluster
 from .controller import StopAndWaitController
 from .framework import SchedulingFramework
@@ -36,10 +42,19 @@ COMPUTE, COMM, PAUSED, WAITING, DONE = "compute", "comm", "paused", "waiting", "
 
 @dataclasses.dataclass
 class BackgroundFlow:
-    """iPerf3-style unregulated traffic occupying a host link permanently."""
+    """iPerf3-style unregulated traffic permanently occupying one link.
+
+    ``node`` names a host link (the seed behavior); pass ``link`` to pin the
+    traffic to any fabric link instead (e.g. ``uplink:leaf0`` for cross-rack
+    background load)."""
 
     node: str
     rate_gbps: float
+    link: Optional[str] = None
+
+    @property
+    def link_id(self) -> str:
+        return self.link if self.link is not None else self.node
 
 
 @dataclasses.dataclass
@@ -56,10 +71,17 @@ class SimConfig:
 @dataclasses.dataclass
 class FlowState:
     job: str
-    node: str  # host link
+    node: str  # source host link
     demand_gbps: float
     remaining_gb: float
     rate_gbps: float = 0.0
+    # full link path (source host link first, then fabric links); defaults
+    # to the host link only — the seed's star model
+    links: Tuple[str, ...] = ()
+
+    def __post_init__(self) -> None:
+        if not self.links:
+            self.links = (self.node,)
 
 
 @dataclasses.dataclass
@@ -98,6 +120,12 @@ class SimResult:
         d = self.durations_ms.get(job, [])
         return float(np.mean(d)) if d else math.nan
 
+    @property
+    def uplink_utilization(self) -> Dict[str, float]:
+        """Utilization of spine uplinks only (empty on star topologies)."""
+        return {k: v for k, v in self.link_utilization.items()
+                if topology.is_uplink(k)}
+
 
 class ClusterSimulator:
     def __init__(
@@ -128,7 +156,7 @@ class ClusterSimulator:
         self.framework = framework
         self.background = list(background)
         self.traffic_changes = sorted(traffic_changes)
-        self.delivered_gb: Dict[str, float] = {n: 0.0 for n in cluster.node_names}
+        self.delivered_gb: Dict[str, float] = {l: 0.0 for l in cluster.link_ids}
         self.now = 0.0
         self.rejected: List[str] = []
         # (arrival_ms, workload) queue for online scheduling
@@ -213,6 +241,17 @@ class ClusterSimulator:
             out[t.node] = out.get(t.node, 0.0) + t.traffic.bw_gbps
         return out
 
+    def _make_flows(self, job: Job, spec) -> List[FlowState]:
+        """One flow per used host link; the path extends over the source
+        leaf's uplink when the job spans leaves."""
+        nodes = job.nodes_used()
+        topo = self.cluster.topology
+        return [
+            FlowState(job.name, n, bw, bw * spec.comm_ms / 1e3,
+                      links=topo.flow_links(n, nodes))
+            for n, bw in self._job_links(job).items()
+        ]
+
     def _latency_penalty(self, job: Job) -> float:
         nodes = job.nodes_used()
         if len(nodes) <= 1:
@@ -224,22 +263,39 @@ class ClusterSimulator:
 
     # ----------------------------------------------------------- rate sharing
     def _assign_rates(self) -> None:
-        """Max-min fair share per host link, demands capped at r^BW."""
-        by_link: Dict[str, List[FlowState]] = {}
-        for st in self.jobs.values():
-            for f in st.flows:
-                if f.remaining_gb > EPS:
-                    by_link.setdefault(f.node, []).append(f)
+        """Max-min fair share over each flow's link path, capped at r^BW.
+
+        Star topology (every path a single host link): per-link water
+        filling, numerically identical to the seed. Multi-link paths
+        (fabric uplinks): progressive filling with per-link bottlenecks.
+        """
+        active = [f for st in self.jobs.values() for f in st.flows
+                  if f.remaining_gb > EPS]
+        if not active:
+            return
         bg_by_link: Dict[str, float] = {}
         for bg in self.background:
-            bg_by_link[bg.node] = bg_by_link.get(bg.node, 0.0) + bg.rate_gbps
-        for node_name, flows in by_link.items():
-            cap = self.cluster.node(node_name).bw_gbps
-            cap = max(0.0, cap - bg_by_link.get(node_name, 0.0))
-            demands = np.array([f.demand_gbps for f in flows])
-            rates = _max_min_fair(demands, cap)
-            for f, r in zip(flows, rates):
-                f.rate_gbps = float(r)
+            bg_by_link[bg.link_id] = bg_by_link.get(bg.link_id, 0.0) + bg.rate_gbps
+
+        def cap_of(link_id: str) -> float:
+            return max(0.0, self.cluster.link_capacity(link_id)
+                       - bg_by_link.get(link_id, 0.0))
+
+        if all(len(f.links) == 1 for f in active):
+            by_link: Dict[str, List[FlowState]] = {}
+            for f in active:
+                by_link.setdefault(f.node, []).append(f)
+            for node_name, flows in by_link.items():
+                demands = np.array([f.demand_gbps for f in flows])
+                rates = _max_min_fair(demands, cap_of(node_name))
+                for f, r in zip(flows, rates):
+                    f.rate_gbps = float(r)
+            return
+        caps = {l: cap_of(l) for f in active for l in f.links}
+        demands = np.array([f.demand_gbps for f in active])
+        rates = _progressive_fill(demands, [f.links for f in active], caps)
+        for f, r in zip(active, rates):
+            f.rate_gbps = float(r)
 
     # ------------------------------------------------------------- main loop
     def run(self) -> SimResult:
@@ -273,9 +329,10 @@ class ClusterSimulator:
                         if f.remaining_gb > EPS:
                             moved = min(f.remaining_gb, f.rate_gbps * dt / 1e3)
                             f.remaining_gb -= moved
-                            self.delivered_gb[f.node] += moved
+                            for l in f.links:
+                                self.delivered_gb[l] += moved
                 for bg in self.background:
-                    self.delivered_gb[bg.node] += bg.rate_gbps * dt / 1e3
+                    self.delivered_gb[bg.link_id] += bg.rate_gbps * dt / 1e3
             self.now = nxt
             if self.now >= cfg.duration_ms:
                 break
@@ -337,11 +394,7 @@ class ClusterSimulator:
                             job.name, err, period_eff):
                         self._apply_realign(act.job)
             # start synchronized communication
-            links = self._job_links(job)
-            st.flows = [
-                FlowState(job.name, n, bw, bw * spec.comm_ms / 1e3)
-                for n, bw in links.items()
-            ]
+            st.flows = self._make_flows(job, spec)
             st.comm_extra_ms = self._latency_penalty(job)
             st.phase = COMM
             if not st.flows:
@@ -427,17 +480,20 @@ class ClusterSimulator:
     # ---------------------------------------------------------------- metrics
     def _result(self) -> SimResult:
         elapsed = max(self.now, 1.0)
+        link_ids = self.cluster.link_ids
         link_util = {}
-        for n in self.cluster.node_names:
-            cap = self.cluster.node(n).bw_gbps
-            link_util[n] = min(1.0, self.delivered_gb[n] / (cap * elapsed / 1e3))
+        for l in link_ids:
+            cap = self.cluster.link_capacity(l)
+            link_util[l] = min(1.0, self.delivered_gb[l] / (cap * elapsed / 1e3))
         b_max = self.cluster.b_max
-        caps = np.array([self.cluster.node(n).bw_gbps for n in self.cluster.node_names])
-        utils = np.array([link_util[n] for n in self.cluster.node_names])
-        # Eq. 5: capacity-weighted mean over links, normalized by B^max.
-        # Only links that carried (or could carry) job traffic are counted.
-        active = [i for i, n in enumerate(self.cluster.node_names)
-                  if self.delivered_gb[n] > 0]
+        caps = np.array([self.cluster.link_capacity(l) for l in link_ids])
+        utils = np.array([link_util[l] for l in link_ids])
+        # Eq. 5: capacity-weighted mean over links, normalized by B^max
+        # (B^max stays the max HOST-link capacity; on the star topology this
+        # is exactly the seed computation). Only links that carried (or
+        # could carry) job traffic are counted.
+        active = [i for i, l in enumerate(link_ids)
+                  if self.delivered_gb[l] > 0]
         if active:
             gamma = float(np.mean(caps[active] * utils[active] / b_max))
         else:
@@ -463,6 +519,51 @@ class ClusterSimulator:
             total_completion_ms=tct,
             iterations_done=iters,
         )
+
+
+def _progressive_fill(
+    demands: np.ndarray,
+    paths: Sequence[Sequence[str]],
+    caps: Dict[str, float],
+) -> np.ndarray:
+    """Progressive-filling max-min fairness over multi-link flow paths.
+
+    All unfrozen flows grow at the same rate; a flow freezes when it reaches
+    its demand or when any link on its path saturates (that link becomes its
+    bottleneck). Reduces to per-link water filling when every path is a
+    single link. Runs in O((flows + links) * flows).
+    """
+    n = len(demands)
+    rates = np.zeros(n)
+    if n == 0:
+        return rates
+    remaining = dict(caps)
+    active = [i for i in range(n) if demands[i] > EPS]
+    # flows on a zero-capacity link can never send
+    while active:
+        counts: Dict[str, int] = {}
+        for i in active:
+            for l in paths[i]:
+                counts[l] = counts.get(l, 0) + 1
+        inc = min(demands[i] - rates[i] for i in active)
+        for l, c in counts.items():
+            inc = min(inc, remaining[l] / c)
+        inc = max(0.0, inc)
+        for i in active:
+            rates[i] += inc
+        for l, c in counts.items():
+            remaining[l] -= inc * c
+        nxt = []
+        for i in active:
+            if rates[i] >= demands[i] - EPS:
+                continue  # demand met
+            if any(remaining[l] <= EPS for l in paths[i]):
+                continue  # bottleneck link saturated
+            nxt.append(i)
+        if len(nxt) == len(active):  # pragma: no cover — defensive
+            break
+        active = nxt
+    return rates
 
 
 def _max_min_fair(demands: np.ndarray, capacity: float) -> np.ndarray:

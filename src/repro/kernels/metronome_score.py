@@ -22,6 +22,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax<0.6 compat: CompilerParams was named TPUCompilerParams (same kwargs)
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 LANE = 128
 
 
@@ -74,7 +77,7 @@ def metronome_score_pairwise(
         ],
         out_specs=pl.BlockSpec((block_a, rb), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((ra_pad, rb), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(base, a, b)

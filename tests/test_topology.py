@@ -1,0 +1,240 @@
+"""Fabric-topology layer: routing, progressive-filling fairness, the
+star-topology seed regression, and the oversubscribed-fabric scenarios."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.metronome_testbed import make_snapshot
+from repro.core.cluster import (Cluster, Node, Resources, make_fabric_cluster,
+                                make_testbed_cluster)
+from repro.core.harness import run_experiment
+from repro.core.simulator import (BackgroundFlow, SimConfig, _max_min_fair,
+                                  _progressive_fill)
+from repro.core.topology import Topology, is_uplink, uplink_id
+from repro.core.workload import HIGH, LOW, Workload, make_job
+
+
+def fabric2x2(oversub=2.0):
+    return make_fabric_cluster(n_leaves=2, hosts_per_leaf=2, bw_gbps=25.0,
+                               oversubscription=oversub)
+
+
+class TestRouting:
+    def test_star_paths_are_host_links_only(self):
+        topo = Topology.star(["a", "b", "c"])
+        assert topo.is_star
+        assert topo.flow_links("a", ["b", "c"]) == ("a",)
+        assert topo.placement_links(["a", "b"]) == ["a", "b"]
+        assert topo.uplink_ids == []
+
+    def test_cross_leaf_flow_traverses_uplink(self):
+        cl = fabric2x2()
+        topo = cl.topology
+        assert topo.flow_links("leaf0-host0", ["leaf1-host0"]) == (
+            "leaf0-host0", uplink_id("leaf0"))
+        # intra-leaf stays off the spine
+        assert topo.flow_links("leaf0-host0", ["leaf0-host1"]) == (
+            "leaf0-host0",)
+
+    def test_placement_links_union(self):
+        cl = fabric2x2()
+        links = cl.topology.placement_links(
+            ["leaf0-host0", "leaf0-host1", "leaf1-host0"])
+        assert links == ["leaf0-host0", "leaf0-host1", "leaf1-host0",
+                         uplink_id("leaf0"), uplink_id("leaf1")]
+
+    def test_oversubscription_sets_uplink_capacity(self):
+        cl = fabric2x2(oversub=2.0)
+        assert cl.link_capacity(uplink_id("leaf0")) == pytest.approx(25.0)
+        cl4 = make_fabric_cluster(n_leaves=2, hosts_per_leaf=4,
+                                  oversubscription=4.0)
+        assert cl4.link_capacity(uplink_id("leaf1")) == pytest.approx(25.0)
+        assert is_uplink(uplink_id("leaf0"))
+        assert not is_uplink("leaf0-host0")
+
+    def test_cluster_copy_preserves_topology(self):
+        cl = fabric2x2()
+        cp = cl.copy()
+        assert cp.topology.uplink_ids == cl.topology.uplink_ids
+        cp.topology.uplinks["leaf0"].allocatable_gbps = 1.0
+        assert cl.topology.uplinks["leaf0"].allocatable_gbps is None
+
+    def test_topology_must_cover_all_nodes(self):
+        nodes = [Node("n0", Resources(1, 1, 1), bw_gbps=10.0)]
+        with pytest.raises(ValueError):
+            Cluster(nodes, topology=Topology.star(["other"]))
+
+
+class TestProgressiveFill:
+    def test_single_link_matches_water_filling(self):
+        demands = np.array([2.0, 20.0, 20.0])
+        paths = [("l",), ("l",), ("l",)]
+        got = _progressive_fill(demands, paths, {"l": 25.0})
+        want = _max_min_fair(demands, 25.0)
+        assert np.allclose(sorted(got), sorted(want))
+
+    def test_shared_uplink_bottleneck(self):
+        # two flows from different hosts share one uplink of 10G
+        demands = np.array([20.0, 20.0])
+        paths = [("h0", "up"), ("h1", "up")]
+        caps = {"h0": 25.0, "h1": 25.0, "up": 10.0}
+        got = _progressive_fill(demands, paths, caps)
+        assert np.allclose(got, [5.0, 5.0])
+
+    def test_mixed_bottlenecks(self):
+        # flow 0 limited by its host link, flow 1 takes the uplink rest
+        demands = np.array([4.0, 30.0])
+        paths = [("h0", "up"), ("h1", "up")]
+        caps = {"h0": 4.0, "h1": 25.0, "up": 20.0}
+        got = _progressive_fill(demands, paths, caps)
+        assert got[0] == pytest.approx(4.0)
+        assert got[1] == pytest.approx(16.0)
+
+    def test_demand_capped(self):
+        got = _progressive_fill(np.array([3.0, 6.0]),
+                                [("h0",), ("h0",)], {"h0": 25.0})
+        assert np.allclose(got, [3.0, 6.0])
+
+    def test_zero_capacity_link(self):
+        got = _progressive_fill(np.array([5.0]), [("h0", "up")],
+                                {"h0": 25.0, "up": 0.0})
+        assert got[0] == pytest.approx(0.0)
+
+
+class TestStarRegression:
+    """The default star topology must reproduce the seed simulator exactly."""
+
+    # golden values recorded from the pre-topology (seed) simulator:
+    # S2, metronome, SimConfig(duration_ms=60_000, seed=7, jitter_std=0.02),
+    # n_iterations=150
+    GOLD_SUM = {"vgg16-ft": 14594.402578030573, "vgg19-ft": 14591.186839507718}
+    GOLD_PER1000 = {"vgg16-ft": 97.29601718687049, "vgg19-ft": 97.27457893005145}
+    GOLD_GAMMA = 0.2231999999999988
+    GOLD_TCT = 14686.935911363906
+
+    def _run(self, cluster=None):
+        cfg = SimConfig(duration_ms=60_000, seed=7, jitter_std=0.02)
+        cl, wls, bg = make_snapshot("S2", n_iterations=150)
+        if cluster is not None:
+            cl = cluster
+        return run_experiment("metronome", cl, wls, cfg, background=bg)
+
+    def test_bit_for_bit_vs_seed_golden(self):
+        res = self._run()
+        for j, want in self.GOLD_SUM.items():
+            assert sum(res.sim.durations_ms[j]) == want
+        for j, want in self.GOLD_PER1000.items():
+            assert res.sim.time_per_1000_iters_s[j] == want
+        assert res.sim.avg_bw_utilization == self.GOLD_GAMMA
+        assert res.sim.total_completion_ms == self.GOLD_TCT
+        # host links keep their node-name keys; a star fabric has no uplinks
+        assert set(res.sim.link_utilization) == {
+            "worker-a30-0", "worker-a30-1", "worker-a30-2", "worker-t4-0"}
+        assert res.sim.uplink_utilization == {}
+
+    def test_explicit_star_identical_to_default(self):
+        base = self._run()
+        explicit = make_testbed_cluster()
+        explicit.topology = Topology.star(explicit.node_names)
+        res = self._run(cluster=explicit)
+        assert res.sim.durations_ms == base.sim.durations_ms
+        assert res.sim.link_utilization == base.sim.link_utilization
+        assert res.sim.total_completion_ms == base.sim.total_completion_ms
+
+
+class TestFabricScenarios:
+    CFG = SimConfig(duration_ms=120_000, seed=3, jitter_std=0.01)
+
+    def _avg_jct(self, res):
+        fin = [v for v in res.sim.finish_times_ms.values()
+               if not np.isnan(v)]
+        return float(np.mean(fin))
+
+    def test_f2_uplink_contention_and_metronome_wins(self):
+        """Acceptance: on the 2:1 fabric the simulator reports uplink
+        contention and Metronome beats Default on avg JCT."""
+        out = {}
+        for sched in ("metronome", "default"):
+            cluster, wls, bg = make_snapshot("F2", n_iterations=300)
+            out[sched] = run_experiment(sched, cluster, wls, self.CFG,
+                                        background=bg)
+        for res in out.values():
+            assert res.sim.uplink_utilization
+            assert all(u > 0.0 for u in res.sim.uplink_utilization.values())
+        assert self._avg_jct(out["metronome"]) < self._avg_jct(out["default"])
+
+    def test_f2_host_links_never_saturate(self):
+        """F2's contention is INVISIBLE to the host-link-only model: summed
+        host demand stays below capacity, so only the uplink contends."""
+        cluster, wls, bg = make_snapshot("F2", n_iterations=300)
+        per_host = sum(j.traffic.bw_gbps for wl in wls for j in wl.jobs)
+        assert per_host < cluster.node("leaf0-host0").bw_gbps
+
+    def test_f4_metronome_beats_default(self):
+        out = {}
+        for sched in ("metronome", "default"):
+            cluster, wls, bg = make_snapshot("F4", n_iterations=300)
+            out[sched] = run_experiment(sched, cluster, wls, self.CFG,
+                                        background=bg)
+        assert self._avg_jct(out["metronome"]) < self._avg_jct(out["default"])
+
+    def test_background_flow_on_uplink(self):
+        """Cross-rack unregulated traffic eats uplink headroom."""
+        cluster = fabric2x2()
+        job = make_job("x", n_tasks=4, period_ms=100.0, duty=0.4,
+                       bw_gbps=12.0, priority=HIGH, n_iterations=100)
+        wl = Workload(name="wl-x", jobs=[job])
+        for t in job.tasks:
+            t.workload = wl.name
+        job.workload = wl.name
+        cfg = SimConfig(duration_ms=60_000, seed=0, jitter_std=0.0)
+        free = run_experiment("default", cluster.copy(), [wl], cfg)
+        bg = [BackgroundFlow(node="leaf0-host0", rate_gbps=15.0,
+                             link=uplink_id("leaf0"))]
+        cluster2 = fabric2x2()
+        congested = run_experiment("default", cluster2, [wl], cfg,
+                                   background=bg)
+        # 24G of job demand vs 25G free uplink -> fine; vs 10G left -> slow
+        assert (congested.sim.mean_iter_ms("x")
+                > free.sim.mean_iter_ms("x") * 1.2)
+
+    def test_uplink_filter_rejects_oversized_pod(self):
+        """Eq. 14 on the uplink: a pod whose demand exceeds the uplink's
+        allocatable bandwidth cannot be placed across leaves."""
+        cluster = fabric2x2()
+        for up in cluster.topology.uplinks.values():
+            up.allocatable_gbps = 5.0
+        # 4 tasks @ 12G, spread=1 -> needs all 4 hosts -> must cross leaves,
+        # but 12G > 5G allocatable on every uplink -> unschedulable
+        job = make_job("big", n_tasks=4, period_ms=100.0, duty=0.4,
+                       bw_gbps=12.0, n_iterations=10)
+        res = run_experiment("metronome", cluster, [Workload("w", [job])],
+                             SimConfig(duration_ms=1_000))
+        assert "big" in res.rejected
+
+
+class TestControllerLinkKeys:
+    def test_uplink_scheme_registered_and_cleared(self):
+        from repro.core.controller import StopAndWaitController
+        from repro.core.framework import SchedulingFramework
+        from repro.core.scheduler import MetronomePlugin
+
+        cluster, wls, bg = make_snapshot("F2", n_iterations=10)
+        ctrl = StopAndWaitController()
+        fw = SchedulingFramework(cluster, MetronomePlugin(controller=ctrl))
+        for wl in wls:
+            assert fw.schedule_workload(wl)
+        up_keys = [k for k in ctrl.links if is_uplink(k)]
+        assert up_keys, "uplink contention must produce uplink schemes"
+        # both jobs participate in each uplink scheme
+        for k in up_keys:
+            assert len(ctrl.links[k].scheme.jobs) == 2
+        # alignment is available for the low-priority job
+        lo = wls[1].jobs[0].name
+        assert ctrl.job_alignment(lo) is not None
+        # eviction drains the job from uplink schemes too
+        for wl in wls:
+            for j in wl.jobs:
+                fw.evict_job(j)
+        assert not any(is_uplink(k) for k in ctrl.links)
