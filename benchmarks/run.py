@@ -9,7 +9,7 @@ import argparse
 import sys
 import traceback
 
-from . import (bench_ablation, bench_fabric, bench_kernels,
+from . import (bench_ablation, bench_dynamic, bench_fabric, bench_kernels,
                bench_param_variation, bench_persistence, bench_roofline,
                bench_sched_time, bench_snapshots, bench_tct,
                bench_thresholds)
@@ -17,6 +17,7 @@ from . import (bench_ablation, bench_fabric, bench_kernels,
 ALL = {
     "snapshots": bench_snapshots,     # Fig. 7/8 + Table V
     "fabric": bench_fabric,           # beyond-paper: oversubscribed fabrics
+    "dynamic": bench_dynamic,         # beyond-paper: mid-run fluctuation
     "tct": bench_tct,                 # Fig. 10
     "param_variation": bench_param_variation,  # Fig. 11/12
     "persistence": bench_persistence,  # Table VI

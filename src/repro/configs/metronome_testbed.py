@@ -19,7 +19,9 @@ from __future__ import annotations
 from typing import Dict, List, Tuple
 
 from repro.core.cluster import Cluster, make_fabric_cluster, make_testbed_cluster
+from repro.core.events import BackgroundFlowChange, Event, LinkCapacityChange
 from repro.core.simulator import BackgroundFlow
+from repro.core.topology import uplink_id
 from repro.core.workload import HIGH, LOW, Job, Workload, make_job
 
 # model -> traffic; period_ms = ideal iteration time (contention free)
@@ -175,6 +177,55 @@ def _congest(cluster: Cluster, bg: List[BackgroundFlow], node: str,
             cluster.set_latency(node, other, tau_ms)
 
 
+def make_dynamic_snapshot(
+    sid: str, n_iterations: int = 400, amplitude: float = 0.3,
+    t_on_ms: float = 15_000.0, t_off_ms: float = 45_000.0,
+) -> Tuple[Cluster, List[Workload], List[BackgroundFlow], List[Event]]:
+    """Beyond-paper dynamic snapshots: a static snapshot plus a mid-run
+    environment fluctuation (returns an extra event list for the
+    simulator's ``events=`` stream — see ``core/events.py``).
+
+      D1 (bandwidth fluctuation): the S2 pair (FT-VGG19* + FT-VGG16) with an
+         iPerf3-style background flow ramping on ``worker-a30-0`` — a host
+         link every scheduler co-locates both jobs on — between ``t_on`` and
+         ``t_off``.  Rate = ``amplitude`` x the 25G link.  The NodeBandwidth
+         CR lowers the allocatable share while the flow runs, so the
+         controller's reconfiguration loop re-derives the rotation and
+         re-baselines the monitor.
+
+      D2 (fabric): the F4 trio (1 HIGH + 2 LOW spanning two leaves at 4:1
+         oversubscription) with both spine uplinks dropping to
+         ``(1 - amplitude)`` of their capacity (allocatable AND physical —
+         a degraded/partitioned spine) between ``t_on`` and ``t_off``,
+         forcing uplink-scheme reconfiguration.
+    """
+    if sid == "D1":
+        cluster, wls, bg = make_snapshot("S2", n_iterations=n_iterations)
+        link = "worker-a30-0"
+        rate = amplitude * cluster.node(link).bw_gbps
+        events: List[Event] = [
+            BackgroundFlowChange(t_on_ms, link=link, rate_gbps=rate),
+            BackgroundFlowChange(t_off_ms, link=link, rate_gbps=0.0),
+        ]
+    elif sid == "D2":
+        cluster, wls, bg = make_snapshot("F4", n_iterations=n_iterations)
+        events = []
+        for leaf in cluster.topology.uplinks:
+            cap = cluster.topology.uplinks[leaf].capacity_gbps
+            low = (1.0 - amplitude) * cap
+            events.append(LinkCapacityChange(
+                t_on_ms, link=uplink_id(leaf),
+                allocatable_gbps=low, capacity_gbps=low))
+            events.append(LinkCapacityChange(
+                t_off_ms, link=uplink_id(leaf),
+                allocatable_gbps=cap, capacity_gbps=cap))
+    else:
+        raise ValueError(f"unknown dynamic snapshot {sid!r}")
+    return cluster, wls, bg, events
+
+
 SNAPSHOTS = ("S1", "S2", "S3", "S4", "S5")
 # beyond-paper leaf–spine snapshots (oversubscribed fabric; bench_fabric.py)
 FABRIC_SNAPSHOTS = ("F2", "F4")
+# beyond-paper dynamic snapshots (mid-run fluctuation; bench_dynamic.py)
+DYNAMIC_SNAPSHOTS = ("D1", "D2")

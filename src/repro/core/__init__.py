@@ -4,15 +4,19 @@
 #   framework — K8s-scheduling-framework analogue (extension points)
 #   scheduler — Algorithm 1 (MetronomePlugin)
 #   controller— stop-and-wait controller (global offset, recalc, regulation)
+#   contention— unified job→link demand view (LinkView; Eq. 9 predicate)
+#   events    — typed dynamic-environment events (reconfiguration inputs)
 #   baselines — Default / Diktyo / Exclusive
 #   simulator — event-driven fluid-flow cluster simulator
 #   topology  — leaf–spine fabric model (star = paper's Eq. 14 default)
 #   trace     — Gavel-style workload generator
 #   harness   — scheduler -> controller -> simulator glue
-from . import (baselines, cluster, controller, framework, geometry, harness,
-               scheduler, scoring, simulator, topology, trace, workload)
+from . import (baselines, cluster, contention, controller, events, framework,
+               geometry, harness, scheduler, scoring, simulator, topology,
+               trace, workload)
 
 __all__ = [
-    "baselines", "cluster", "controller", "framework", "geometry", "harness",
-    "scheduler", "scoring", "simulator", "topology", "trace", "workload",
+    "baselines", "cluster", "contention", "controller", "events", "framework",
+    "geometry", "harness", "scheduler", "scoring", "simulator", "topology",
+    "trace", "workload",
 ]

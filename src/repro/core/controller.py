@@ -24,6 +24,7 @@ import numpy as np
 
 from . import geometry, scoring
 from .cluster import Cluster
+from .contention import LinkView
 from .framework import TaskRegistry
 from .geometry import DI_PRE
 from .scheduler import LinkScheme, ReserveMessage
@@ -61,10 +62,15 @@ class StopAndWaitController:
         di_pre: int = DI_PRE,
         recalc_hook: Optional[Callable[[str], None]] = None,
         phase_monitor: bool = False,
+        reconfigure: bool = True,
     ) -> None:
         self.a_t = a_t
         self.o_t = o_t
         self.di_pre = di_pre
+        # dynamic reconfiguration (paper section III-C): react to capacity /
+        # background changes by re-deriving schemes; False = ablation
+        self.reconfigure = reconfigure
+        self.reconf_count = 0
         self.links: Dict[str, LinkState] = {}  # link id -> state (see LinkState)
         self.global_offsets_ms: Dict[str, float] = {}
         self.injected_ms: Dict[str, float] = {}  # per-job E_T idle injection
@@ -214,13 +220,15 @@ class StopAndWaitController:
     ) -> int:
         """Process pending SkipPhaseThree==0 links: exhaustive 3rd stage."""
         done = 0
+        view = LinkView.from_registry(cluster, registry)
         while self.pending_recalc:
             link_id = self.pending_recalc.pop()
             state = self.links.get(link_id)
             if state is None:
                 continue
             sch = state.scheme
-            duties, bws = self._link_traffic(registry, sch, cluster, link_id)
+            duties, bws = view.recalc_traffic(link_id, sch.jobs, sch.muls,
+                                              sch.base_ms)
             patterns = geometry.pattern_matrix(sch.muls, duties, self.di_pre)
             ref_index = sch.jobs.index(sch.ref_job) if sch.ref_job in sch.jobs else 0
             result = scoring.find_optimal_rotation(
@@ -235,34 +243,35 @@ class StopAndWaitController:
         self._recompute_global_offsets()
         return done
 
-    def _link_traffic(self, registry: TaskRegistry, sch: LinkScheme,
-                      cluster: Cluster, link_id: str
-                      ) -> Tuple[List[float], List[float]]:
-        topo = cluster.topology
-        leaf = None
-        if is_uplink(link_id):
-            for lf, up in topo.uplinks.items():
-                if up.id == link_id:
-                    leaf = lf
-                    break
-        duties: List[float] = []
-        bws: List[float] = []
-        for idx, j in enumerate(sch.jobs):
-            tasks = registry.job_tasks(j)
-            spec = tasks[0].traffic if tasks else TrafficSpec(100.0, 0.3, 1.0)
-            eff_period = sch.base_ms / max(int(sch.muls[idx]), 1)
-            duties.append(min(1.0, spec.comm_ms / eff_period))
-            if leaf is None:
-                bws.append(sum(t.traffic.bw_gbps for t in tasks
-                               if t.node is not None))
-            else:
-                # uplink demand: only the job's in-leaf pods source traffic
-                # toward the spine (low_comm pods excluded, matching the
-                # Score phase's _uplink_jobs grouping)
-                bws.append(sum(t.traffic.bw_gbps for t in tasks
-                               if t.node is not None and not t.low_comm
-                               and topo.leaf_of[t.node] == leaf))
-        return duties, bws
+    # -------------------------------------------------------- reconfiguration
+    def on_link_change(self, registry: TaskRegistry, cluster: Cluster,
+                       link_id: str) -> int:
+        """Dynamic reconfiguration (paper section III-C): the monitor reports
+        that ``link_id``'s capacity/background conditions changed.
+
+        Re-derives the link's rotation scheme from the live
+        :class:`~repro.core.contention.LinkView` (the new allocatable
+        bandwidth feeds the 3rd-stage search) and re-baselines every job on
+        the re-derived links to the *expected* iteration time under the new
+        allocatable share — when a link can no longer carry a job's full
+        demand, even a perfectly rotated comm phase stretches, and the
+        A_T/O_T drift rule must not fight that unavoidable slowdown with
+        realign pauses.  Returns the number of schemes re-derived (0 when
+        reconfiguration is disabled or no scheme lives on the link)."""
+        state = self.links.get(link_id)
+        if not self.reconfigure or state is None:
+            return 0
+        if link_id not in self.pending_recalc:
+            self.pending_recalc.append(link_id)
+        affected = list(state.scheme.jobs)
+        done = self.run_offline_recalculation(registry, cluster)
+        view = LinkView.from_registry(cluster, registry)
+        for j in affected:
+            expected = view.expected_iteration_ms(j)
+            if expected is not None and j in self._baseline_ms:
+                self.set_baseline(j, expected, self._priorities.get(j, 0))
+        self.reconf_count += 1
+        return done
 
     # ------------------------------------------------------ continuous monitor
     def set_baseline(self, job: str, baseline_ms: float, priority: int) -> None:
@@ -380,7 +389,8 @@ class StopAndWaitController:
                               job: str, new_spec: TrafficSpec) -> None:
         """Duty-cycle / period change (batch-size change, congestion onset):
         update CRs and recalculate rotation angles (paper section III-C)."""
-        for t in registry.job_tasks(job):
+        view = LinkView.from_registry(cluster, registry)
+        for t in view.job_tasks(job):
             t.traffic = dataclasses.replace(new_spec)
         for node, state in self.links.items():
             if job in state.scheme.jobs:
@@ -388,7 +398,7 @@ class StopAndWaitController:
                 jobs = state.scheme.jobs
                 periods, prios = [], []
                 for j in jobs:
-                    tasks = registry.job_tasks(j)
+                    tasks = view.job_tasks(j)
                     periods.append(tasks[0].traffic.period_ms if tasks else 100.0)
                     prios.append(self._priorities.get(j, 0))
                 unified = geometry.unify_periods(periods, prios)
@@ -402,7 +412,7 @@ class StopAndWaitController:
         if job in self._history:
             self._history[job].clear()
         # baseline must track the new traffic
-        tasks = registry.job_tasks(job)
+        tasks = view.job_tasks(job)
         if tasks:
             self.set_baseline(job, tasks[0].traffic.period_ms,
                               self._priorities.get(job, 0))

@@ -1,0 +1,101 @@
+"""Typed dynamic-environment events for the cluster simulator.
+
+Metronome's third pillar — "adapts to the dynamic environment by monitoring
+the cluster and performing reconfiguration operations" (paper section
+III-C) — needs a first-class event stream instead of ad-hoc
+``(time, job, duty_mult)`` tuples threaded through the harness.  Each event
+carries a timestamp (ms on the simulator clock); ``ClusterSimulator.run()``
+consumes the merged stream in timestamp order and the stop-and-wait
+controller reacts to capacity/background changes by re-deriving rotation
+schemes from the live LinkView (DESIGN.md section 10).
+
+Event types:
+
+  * :class:`TrafficChange` — duty-cycle change of one job (batch-size
+    change, congestion onset); the path that already existed in the seed.
+  * :class:`BackgroundFlowChange` — iPerf3-style unregulated traffic on one
+    link starts / ramps up / ramps down / stops.  The cluster manager's
+    NodeBandwidth-CR reaction (lower the allocatable share by the observed
+    unregulated rate, section III-A) is modeled by ``adjust_allocatable``.
+  * :class:`LinkCapacityChange` — the NodeBandwidth-CR update path for any
+    link: the manager changes a link's allocatable share (and optionally
+    the physical capacity, e.g. a degraded uplink).
+  * :class:`JobDeparture` — a job leaves the cluster early (user abort /
+    preemption); its flows vanish and its rotation schemes are retired.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """Base: anything with a firing time on the simulator clock."""
+
+    time_ms: float
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficChange(Event):
+    """Job ``job`` multiplies its communication duty by ``duty_mult``
+    (clipped so the comm phase never exceeds the period)."""
+
+    job: str
+    duty_mult: float
+
+
+@dataclasses.dataclass(frozen=True)
+class BackgroundFlowChange(Event):
+    """Set the unregulated background rate on ``link`` to ``rate_gbps``.
+
+    ``rate_gbps <= 0`` stops the background traffic on the link; a positive
+    rate starts it or re-rates the existing flow.  With
+    ``adjust_allocatable`` (default) the cluster manager mirrors the change
+    into the link's allocatable bandwidth (capacity - background rate, the
+    NodeBandwidth-CR path) so schedulers and the reconfiguration loop see
+    the reduced share."""
+
+    link: str
+    rate_gbps: float
+    adjust_allocatable: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkCapacityChange(Event):
+    """NodeBandwidth-CR update for ``link`` (host link id == node name,
+    uplinks ``uplink:<leaf>``): set the allocatable share and/or the
+    physical capacity.  ``None`` leaves the respective value untouched."""
+
+    link: str
+    allocatable_gbps: Optional[float] = None
+    capacity_gbps: Optional[float] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class JobDeparture(Event):
+    """Job ``job`` leaves the cluster at ``time_ms`` regardless of its
+    remaining iterations (user abort / preemption)."""
+
+    job: str
+
+
+LegacyTrafficChange = Tuple[float, str, float]
+
+
+def normalize_events(
+    events: Sequence[Event] = (),
+    traffic_changes: Sequence[LegacyTrafficChange] = (),
+) -> List[Event]:
+    """Merge typed events with legacy ``(time, job, duty_mult)`` tuples into
+    one timestamp-ordered stream.
+
+    Legacy tuples keep their historical full-tuple sort (time, job name,
+    multiplier) before conversion; the merged stream is then stably sorted
+    by timestamp, so same-time events preserve their relative order."""
+    stream: List[Event] = [
+        TrafficChange(time_ms=float(t), job=j, duty_mult=float(m))
+        for t, j, m in sorted(traffic_changes)
+    ]
+    stream.extend(events)
+    return sorted(stream, key=lambda e: e.time_ms)

@@ -55,11 +55,20 @@ def run_experiment(
     traffic_changes: Sequence[Tuple[float, str, float]] = (),
     skip_third_stage: bool = False,
     rotation_mode: str = "intermediate",
+    events: Sequence = (),
+    reconfigure: bool = True,
 ) -> RunResult:
     """Schedule all workloads with the named mechanism, then simulate.
 
     ``scheduler == 'ideal'`` runs every job alone on a pristine copy of the
-    cluster (dedicated-cluster reference of the paper).
+    cluster (dedicated-cluster reference of the paper).  ``events`` feeds
+    the simulator's dynamic-environment stream (``core/events.py``);
+    ``reconfigure=False`` ablates the controller's reconfiguration loop
+    (capacity/background changes are then handled only by the drift
+    monitor).  The ``'ideal'`` reference deliberately ignores ``events``
+    (and ``background``/``traffic_changes``): it is the STATIC
+    contention-free bound, so dynamic-snapshot comparisons against it
+    measure fluctuation cost plus contention cost together.
     """
     config = config or SimConfig()
     if scheduler == "ideal":
@@ -68,7 +77,7 @@ def run_experiment(
     cl = cluster.copy()
     controller = None
     if scheduler == "metronome":
-        controller = StopAndWaitController()
+        controller = StopAndWaitController(reconfigure=reconfigure)
     plugin = make_plugin(scheduler, controller, rotation_mode=rotation_mode)
     fw = SchedulingFramework(cl, plugin)
 
@@ -85,7 +94,7 @@ def run_experiment(
 
     sim = ClusterSimulator(
         cl, jobs, config, controller=controller, background=background,
-        traffic_changes=traffic_changes, registry=fw.registry,
+        traffic_changes=traffic_changes, registry=fw.registry, events=events,
     )
     res = sim.run()
     placements = {j.name: j.nodes_used() for j in jobs}
@@ -139,6 +148,7 @@ def run_trace_experiment(
     cluster: Cluster,
     workloads: Sequence[Workload],
     config: Optional[SimConfig] = None,
+    events: Sequence = (),
 ) -> RunResult:
     """Online (trace) mode: workloads arrive at their submit times, queue
     when the cluster is full, and release capacity on completion — the K8s
@@ -152,13 +162,12 @@ def run_trace_experiment(
     fw = SchedulingFramework(cl, plugin)
     sim = ClusterSimulator(
         cl, [], config, controller=controller, registry=fw.registry,
-        framework=fw, arrivals=list(workloads),
+        framework=fw, arrivals=list(workloads), events=events,
     )
     res = sim.run()
     accepted = [n for n, st in sim.jobs.items()]
     placements = {n: st.job.nodes_used() for n, st in sim.jobs.items()}
-    rejected = [j.name for wl in sim._pending for j in wl.jobs]
-    return RunResult(res, accepted, rejected, scheduler, placements)
+    return RunResult(res, accepted, sim.pending_jobs, scheduler, placements)
 
 
 def priority_split(workloads: Sequence[Workload]) -> Tuple[List[str], List[str]]:

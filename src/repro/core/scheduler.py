@@ -19,6 +19,7 @@ import numpy as np
 
 from . import geometry, scoring
 from .cluster import Cluster
+from .contention import LinkView, group_demand_gbps
 from .framework import ScheduleContext, SchedulerPlugin, TaskRegistry
 from .geometry import DI_PRE
 from .workload import Task
@@ -77,58 +78,12 @@ class MetronomePlugin(SchedulerPlugin):
         self.messages: List[ReserveMessage] = []
 
     # ------------------------------------------------------------------ utils
-    def _node_jobs(self, cluster: Cluster, node_name: str,
-                   registry: TaskRegistry, extra: Optional[Task] = None
-                   ) -> Dict[str, List[Task]]:
-        """Group the node's bandwidth-consuming pods by job (Eq. 17 ties tasks
-        of one job to a single rotation)."""
-        groups: Dict[str, List[Task]] = {}
-        for t in registry.deployed_on(node_name):
-            if not t.low_comm:
-                groups.setdefault(t.job, []).append(t)
-        if extra is not None and not extra.low_comm:
-            groups.setdefault(extra.job, []).append(extra)
-        return groups
-
-    def _job_bw(self, tasks: List[Task]) -> float:
-        """Aggregate host-link demand of one job's pods on this node."""
-        return sum(t.traffic.bw_gbps for t in tasks)
-
-    def _uplink_jobs(self, cluster: Cluster, leaf: str, registry: TaskRegistry,
-                     extra: Optional[Task] = None,
-                     extra_node: Optional[str] = None
-                     ) -> Dict[str, List[Task]]:
-        """Jobs traversing ``leaf``'s uplink -> their in-leaf tasks.
-
-        A job crosses the uplink when it has pods both inside and outside
-        the leaf; its uplink demand is the aggregate bandwidth its IN-leaf
-        pods source toward the spine (the simulator's flow model)."""
-        topo = cluster.topology
-        nodes_by_job: Dict[str, set] = {}
-        for t in registry.tasks.values():
-            if t.node is not None:
-                nodes_by_job.setdefault(t.job, set()).add(t.node)
-        if extra is not None and extra_node is not None:
-            nodes_by_job.setdefault(extra.job, set()).add(extra_node)
-        groups: Dict[str, List[Task]] = {}
-        for job, nodes in nodes_by_job.items():
-            if not topo.spans_leaves(nodes):
-                continue
-            if not any(topo.leaf_of[n] == leaf for n in nodes):
-                continue
-            in_leaf = [
-                t for t in registry.job_tasks(job)
-                if t.node is not None and topo.leaf_of[t.node] == leaf
-                and not t.low_comm
-            ]
-            if (extra is not None and extra_node is not None
-                    and extra.job == job and not extra.low_comm
-                    and topo.leaf_of[extra_node] == leaf
-                    and all(t.uid != extra.uid for t in in_leaf)):
-                in_leaf = in_leaf + [extra]
-            if in_leaf:
-                groups[job] = in_leaf
-        return groups
+    def _candidate_view(self, cluster: Cluster, pod: Task, node_name: str,
+                        registry: TaskRegistry) -> LinkView:
+        """The unified demand view with ``pod`` provisionally on ``node_name``
+        (the single source of truth for groupings/demand — contention.py)."""
+        return LinkView.from_registry(cluster, registry, extra=pod,
+                                      extra_node=node_name)
 
     def _priority_order(self, registry: TaskRegistry, jobs: Sequence[str]) -> List[str]:
         """Sort jobs by (priority desc, deployment order asc)."""
@@ -170,9 +125,8 @@ class MetronomePlugin(SchedulerPlugin):
             return False
         topo = cluster.topology
         if not topo.is_star and not pod.low_comm:
-            peers = {t.node for t in registry.job_tasks(pod.job)
-                     if t.node is not None and t.uid != pod.uid}
-            if peers and topo.spans_leaves(peers | {node_name}):
+            view = self._candidate_view(cluster, pod, node_name, registry)
+            if topo.leaf_of[node_name] in view.traversed_uplinks(pod.job):
                 up = topo.uplink_of(node_name)
                 if up is not None and pod.traffic.bw_gbps > up.alloc_bw:
                     return False
@@ -183,42 +137,23 @@ class MetronomePlugin(SchedulerPlugin):
         # so loop-free placements always win ties (see score()).
         return True
 
-    def _creates_dependency_loop(self, cluster: Cluster, pod: Task,
-                                 node_name: str, registry: TaskRegistry) -> bool:
+    def _creates_dependency_loop(self, view: LinkView, pod: Task) -> bool:
         """Cassini's affinity-loop filter, restricted to edges that matter.
 
-        Only *contending* pairs (combined demand exceeding the link's
-        allocatable capacity — the same criterion as Eq. 9) constrain
+        Only *contending* pairs (the LinkView's Eq. 9 predicate: combined
+        demand exceeding the link's allocatable capacity) constrain
         relative rotations; sub-capacity co-location imposes nothing. And a
         pre-existing loop between other jobs is not this pod's problem: we
         reject the node only when the NEW placement closes a cross-link
         cycle through the pod's own job.
         """
         g = nx.Graph()
-
-        def add_link(link_id: str, groups: Dict[str, List[Task]],
-                     cap: float) -> None:
-            jobs = list(groups.keys())
-            bws = {j: self._job_bw(ts) for j, ts in groups.items()}
-            for i in range(len(jobs)):
-                for j in range(i + 1, len(jobs)):
-                    a, b = jobs[i], jobs[j]
-                    if bws[a] + bws[b] <= cap:
-                        continue  # not contending: no rotation constraint
-                    if g.has_edge(a, b):
-                        g[a][b]["links"].add(link_id)
-                    else:
-                        g.add_edge(a, b, links={link_id})
-
-        for n in cluster.node_names:
-            add_link(n, self._node_jobs(cluster, n, registry,
-                                        extra=pod if n == node_name else None),
-                     cluster.node(n).alloc_bw)
-        for leaf, up in cluster.topology.uplinks.items():
-            add_link(up.id,
-                     self._uplink_jobs(cluster, leaf, registry,
-                                       extra=pod, extra_node=node_name),
-                     up.alloc_bw)
+        for link_id in view.planning_links():
+            for a, b in view.contending_pairs(link_id):
+                if g.has_edge(a, b):
+                    g[a][b]["links"].add(link_id)
+                else:
+                    g.add_edge(a, b, links={link_id})
         # a 2-job multi-link relation needs only one relative shift, which
         # the controller resolves deterministically (uplink schemes take
         # precedence when per-link solutions differ); cross-link cycles of
@@ -246,7 +181,7 @@ class MetronomePlugin(SchedulerPlugin):
         """Rotation-feasibility score of one link under ``groups`` (job ->
         its tasks sourcing traffic onto the link). Returns (score, scheme);
         scheme is None on the early-return paths (no contention to solve)."""
-        total_bw = sum(self._job_bw(ts) for ts in groups.values())
+        total_bw = sum(group_demand_gbps(ts) for ts in groups.values())
         only_self = list(groups.keys()) == [self_job]
         # early return: empty link or aggregate demand within capacity
         if not groups or only_self or total_bw <= cap:
@@ -274,7 +209,7 @@ class MetronomePlugin(SchedulerPlugin):
             # m_p is unchanged); this is the E_T mechanism's second insight.
             eff_period = unified.periods_ms[idx]
             duties.append(min(1.0, spec.comm_ms / eff_period))
-            bws.append(self._job_bw(ts))
+            bws.append(group_demand_gbps(ts))
         patterns = geometry.pattern_matrix(unified.muls, duties, self.di_pre)
         result = scoring.find_feasible_rotation(
             patterns, bws, cap, unified.muls, ref_index,
@@ -292,23 +227,6 @@ class MetronomePlugin(SchedulerPlugin):
         )
         return float(result.score), scheme
 
-    def _traversed_uplinks(self, cluster: Cluster, pod: Task,
-                           node_name: str, registry: TaskRegistry
-                           ) -> List[str]:
-        """Leaves whose uplinks the pod's job would traverse if the pod
-        landed on ``node_name`` (empty on star topologies or intra-leaf
-        placements)."""
-        topo = cluster.topology
-        if topo.is_star:
-            return []
-        job_nodes = {t.node for t in registry.job_tasks(pod.job)
-                     if t.node is not None}
-        job_nodes.add(node_name)
-        if not topo.spans_leaves(job_nodes):
-            return []
-        return sorted({topo.leaf_of[n] for n in job_nodes}
-                      & set(topo.uplinks.keys()))
-
     def score(self, ctx: ScheduleContext, cluster: Cluster, pod: Task,
               node_name: str, registry: TaskRegistry) -> float:
         node = cluster.node(node_name)
@@ -322,18 +240,16 @@ class MetronomePlugin(SchedulerPlugin):
 
         # every link the placement would traverse gets its own rotation
         # problem; the node's bandwidth score is the worst of them
+        view = self._candidate_view(cluster, pod, node_name, registry)
         link_schemes: Dict[str, LinkScheme] = {}
-        host_groups = self._node_jobs(cluster, node_name, registry, extra=pod)
         worst, host_scheme = self._score_link(
-            registry, host_groups, node.alloc_bw, pod.job)
+            registry, view.host_groups(node_name), node.alloc_bw, pod.job)
         if host_scheme is not None:
             link_schemes[node_name] = host_scheme
-        for leaf in self._traversed_uplinks(cluster, pod, node_name, registry):
+        for leaf in view.traversed_uplinks(pod.job):
             up = cluster.topology.uplinks[leaf]
-            ugroups = self._uplink_jobs(cluster, leaf, registry,
-                                        extra=pod, extra_node=node_name)
             uscore, uscheme = self._score_link(
-                registry, ugroups, up.alloc_bw, pod.job)
+                registry, view.uplink_groups(leaf), up.alloc_bw, pod.job)
             worst = min(worst, uscore)
             if uscheme is not None:
                 link_schemes[up.id] = uscheme
@@ -348,7 +264,7 @@ class MetronomePlugin(SchedulerPlugin):
         # The schemes keep the RAW rotation scores: the loop cap only
         # demotes the NODE choice; the controller's realign guard needs to
         # know whether an interleave actually exists on each link.
-        if self._creates_dependency_loop(cluster, pod, node_name, registry):
+        if self._creates_dependency_loop(view, pod):
             worst = min(worst, 99.0)
 
         schemes[node_name] = link_schemes

@@ -23,14 +23,17 @@ completion time.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import math
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from . import events as events_mod
 from . import topology
 from .cluster import Cluster
+from .contention import LinkView
 from .controller import StopAndWaitController
 from .framework import SchedulingFramework
 from .workload import HIGH, Job, Task
@@ -115,6 +118,7 @@ class SimResult:
     finish_times_ms: Dict[str, float]
     total_completion_ms: float
     iterations_done: Dict[str, int]
+    reconfigurations: int = 0  # controller reconfiguration ops (section III-C)
 
     def mean_iter_ms(self, job: str) -> float:
         d = self.durations_ms.get(job, [])
@@ -139,8 +143,11 @@ class ClusterSimulator:
         registry=None,
         framework=None,
         arrivals: Sequence = (),
+        events: Sequence[events_mod.Event] = (),
     ) -> None:
-        """``traffic_changes``: (time_ms, job, duty_multiplier) events.
+        """``events``: typed dynamic-environment events (see ``events.py``);
+        ``traffic_changes`` — legacy (time_ms, job, duty_multiplier) tuples —
+        are folded into the same timestamp-ordered stream.
 
         Online mode: pass ``framework`` + ``arrivals`` (workloads whose jobs
         carry submit_time_s). Workloads are scheduled when they arrive,
@@ -155,18 +162,28 @@ class ClusterSimulator:
         self.registry = registry
         self.framework = framework
         self.background = list(background)
-        self.traffic_changes = sorted(traffic_changes)
+        # unified demand/flow view (contention layer); flows_for reads the
+        # live Job objects, so one instance serves the whole run
+        self._link_view = LinkView(cluster)
+        self._events = collections.deque(
+            events_mod.normalize_events(events, traffic_changes))
         self.delivered_gb: Dict[str, float] = {l: 0.0 for l in cluster.link_ids}
         self.now = 0.0
         self.rejected: List[str] = []
         # (arrival_ms, workload) queue for online scheduling
-        self._arrivals = sorted(
+        self._arrivals = collections.deque(sorted(
             ((min(j.submit_time_s for j in wl.jobs) * 1e3, i, wl)
              for i, wl in enumerate(arrivals)),
-            key=lambda t: (t[0], t[1]))
+            key=lambda t: (t[0], t[1])))
         self._pending = []  # workloads waiting for capacity
         for job in jobs:
             self._admit_job(job)
+
+    @property
+    def pending_jobs(self) -> List[str]:
+        """Names of jobs whose workloads are queued waiting for capacity
+        (online mode's rejected-so-far list)."""
+        return [j.name for wl in self._pending for j in wl.jobs]
 
     def _admit_job(self, job: Job) -> None:
         config = self.config
@@ -210,7 +227,7 @@ class ClusterSimulator:
 
     def _process_arrivals(self) -> None:
         while self._arrivals and self._arrivals[0][0] <= self.now + EPS:
-            _, _, wl = self._arrivals.pop(0)
+            _, _, wl = self._arrivals.popleft()
             if not self._try_schedule(wl):
                 self._pending.append(wl)
 
@@ -227,29 +244,15 @@ class ClusterSimulator:
             self._pending = still
 
     # --------------------------------------------------------------- traffic
-    def _job_links(self, job: Job) -> Dict[str, float]:
-        """host link -> aggregate bandwidth demand of the job's pods there.
-
-        Single-node jobs produce no host-link traffic (localhost sync)."""
-        nodes = job.nodes_used()
-        if len(nodes) <= 1:
-            return {}
-        out: Dict[str, float] = {}
-        for t in job.tasks:
-            if t.node is None or t.traffic.bw_gbps <= 0:
-                continue
-            out[t.node] = out.get(t.node, 0.0) + t.traffic.bw_gbps
-        return out
-
     def _make_flows(self, job: Job, spec) -> List[FlowState]:
         """One flow per used host link; the path extends over the source
-        leaf's uplink when the job spans leaves."""
-        nodes = job.nodes_used()
-        topo = self.cluster.topology
+        leaf's uplink when the job spans leaves.  The flow specification
+        (which links, how much demand) comes from the unified contention
+        layer — the simulator only adds volume (demand x comm time)."""
         return [
-            FlowState(job.name, n, bw, bw * spec.comm_ms / 1e3,
-                      links=topo.flow_links(n, nodes))
-            for n, bw in self._job_links(job).items()
+            FlowState(job.name, fs.node, fs.demand_gbps,
+                      fs.demand_gbps * spec.comm_ms / 1e3, links=fs.links)
+            for fs in self._link_view.flows_for(job)
         ]
 
     def _latency_penalty(self, job: Job) -> float:
@@ -300,7 +303,6 @@ class ClusterSimulator:
     # ------------------------------------------------------------- main loop
     def run(self) -> SimResult:
         cfg = self.config
-        changes = list(self.traffic_changes)
         while self.now < cfg.duration_ms:
             self._assign_rates()
             # next event time
@@ -315,8 +317,8 @@ class ClusterSimulator:
                                 nxt = min(nxt, self.now + f.remaining_gb / f.rate_gbps * 1e3)
                     else:
                         nxt = min(nxt, st.phase_end)
-            if changes:
-                nxt = min(nxt, changes[0][0])
+            if self._events:
+                nxt = min(nxt, self._events[0].time_ms)
             if self._arrivals:
                 nxt = min(nxt, self._arrivals[0][0])
             nxt = max(nxt, self.now)  # no time travel
@@ -337,10 +339,10 @@ class ClusterSimulator:
             if self.now >= cfg.duration_ms:
                 break
 
-            # traffic-change events (batch-size change etc.)
-            while changes and changes[0][0] <= self.now + EPS:
-                _, jname, duty_mult = changes.pop(0)
-                self._apply_traffic_change(jname, duty_mult)
+            # dynamic-environment events (traffic / background / capacity /
+            # departures), in timestamp order
+            while self._events and self._events[0].time_ms <= self.now + EPS:
+                self._apply_event(self._events.popleft())
 
             # online arrivals (may add jobs)
             self._process_arrivals()
@@ -353,6 +355,107 @@ class ClusterSimulator:
                 if st.phase == DONE and name not in done_before:
                     self._on_job_done(st)
         return self._result()
+
+    # -------------------------------------------------------- dynamic events
+    def _apply_event(self, ev: events_mod.Event) -> None:
+        if isinstance(ev, events_mod.TrafficChange):
+            self._apply_traffic_change(ev.job, ev.duty_mult)
+        elif isinstance(ev, events_mod.BackgroundFlowChange):
+            self._apply_bg_change(ev)
+        elif isinstance(ev, events_mod.LinkCapacityChange):
+            self._apply_capacity_change(ev)
+        elif isinstance(ev, events_mod.JobDeparture):
+            self._apply_departure(ev)
+        else:  # pragma: no cover — defensive
+            raise TypeError(f"unknown event {ev!r}")
+
+    def _apply_bg_change(self, ev: events_mod.BackgroundFlowChange) -> None:
+        """Unregulated traffic on one link starts / ramps / stops."""
+        if ev.link not in self.delivered_gb:
+            return  # unknown link: ignore (mirrors unknown-job traffic change)
+        kept = [bg for bg in self.background if bg.link_id != ev.link]
+        if ev.rate_gbps > EPS:
+            node = ev.link if ev.link in self.cluster.nodes else ""
+            kept.append(BackgroundFlow(node=node, rate_gbps=ev.rate_gbps,
+                                       link=ev.link))
+        self.background = kept
+        if ev.adjust_allocatable:
+            # NodeBandwidth-CR path (section III-A): the manager lowers the
+            # allocatable share by the observed unregulated rate
+            cap = self.cluster.link_capacity(ev.link)
+            alloc = max(0.0, cap - max(0.0, ev.rate_gbps))
+            self._set_allocatable(ev.link, alloc)
+        self._reconfigure_links([ev.link])
+
+    def _apply_capacity_change(self, ev: events_mod.LinkCapacityChange) -> None:
+        """NodeBandwidth-CR update: allocatable and/or physical capacity.
+
+        An explicit allocatable share from an earlier event never survives
+        above the new physical capacity — the scheduler must not be told a
+        link can allocate more than it can carry."""
+        if ev.link in self.cluster.nodes:
+            target = self.cluster.node(ev.link)
+            cap_field = "bw_gbps"
+        else:
+            target = self.cluster.topology.link(ev.link)
+            if target is None:
+                return
+            cap_field = "capacity_gbps"
+        if ev.capacity_gbps is not None:
+            setattr(target, cap_field, float(ev.capacity_gbps))
+        if ev.allocatable_gbps is not None:
+            target.allocatable_gbps = float(ev.allocatable_gbps)
+        if (target.allocatable_gbps is not None
+                and target.allocatable_gbps > getattr(target, cap_field)):
+            target.allocatable_gbps = float(getattr(target, cap_field))
+        self._reconfigure_links([ev.link])
+
+    def _apply_departure(self, ev: events_mod.JobDeparture) -> None:
+        st = self.jobs.get(ev.job)
+        if st is None or st.phase == DONE:
+            return
+        st.flows = []
+        st.phase = DONE
+        st.finish_time = self.now
+        if self.framework is not None:
+            self._on_job_done(st)
+            return
+        # no framework: release placements and retire the job's schemes so
+        # the live LinkView stops seeing the departed job (tasks keep their
+        # node fields as a historical record for placement reporting)
+        for t in st.job.tasks:
+            if t.node is None:
+                continue
+            if t.node in self.cluster.nodes:
+                self.cluster.node(t.node).release(t.uid, t.resources)
+            if self.controller is not None:
+                self.controller.on_evict(t.node, t)
+            if self.registry is not None:
+                self.registry.tasks.pop(t.uid, None)
+        if self.registry is not None:
+            self.registry.jobs.pop(ev.job, None)
+
+    def _set_allocatable(self, link_id: str, alloc: float) -> None:
+        if link_id in self.cluster.nodes:
+            self.cluster.node(link_id).allocatable_gbps = alloc
+        else:
+            link = self.cluster.topology.link(link_id)
+            if link is not None:
+                link.allocatable_gbps = alloc
+
+    def _reconfigure_links(self, link_ids: Sequence[str]) -> None:
+        """The reconfiguration loop (paper section III-C): tell the
+        controller which links changed; when it re-derives schemes, snap
+        low-priority jobs to the new offsets (high priority never pays)."""
+        if self.controller is None or self.registry is None:
+            return
+        n = 0
+        for l in link_ids:
+            n += self.controller.on_link_change(self.registry, self.cluster, l)
+        if n:
+            for name, st in self.jobs.items():
+                if st.phase != DONE and st.job.priority != HIGH:
+                    self._apply_realign(name)
 
     def _apply_traffic_change(self, jname: str, duty_mult: float) -> None:
         st = self.jobs.get(jname)
@@ -518,6 +621,8 @@ class ClusterSimulator:
             finish_times_ms=finish,
             total_completion_ms=tct,
             iterations_done=iters,
+            reconfigurations=(self.controller.reconf_count
+                              if self.controller else 0),
         )
 
 

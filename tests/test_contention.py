@@ -1,0 +1,292 @@
+"""LinkView regression: the unified contention layer must reproduce the
+three legacy per-layer link-demand implementations bit-for-bit.
+
+The legacy rules (scheduler ``_node_jobs``/``_uplink_jobs``/
+``_traversed_uplinks``, simulator ``_job_links``, controller
+``_link_traffic``) were deleted in favor of ``core/contention.LinkView``;
+they are re-implemented HERE, verbatim, as the reference oracle, and
+compared on the star (S2) and fabric (1:1 "F1" variant, F2, F4) snapshots —
+including candidate-pod (extra) placements on every node."""
+import numpy as np
+import pytest
+
+from repro.configs.metronome_testbed import make_fabric_snapshot, make_snapshot
+from repro.core.cluster import make_fabric_cluster
+from repro.core.contention import LinkView, group_demand_gbps
+from repro.core.controller import StopAndWaitController
+from repro.core.framework import SchedulingFramework
+from repro.core.scheduler import MetronomePlugin
+from repro.core.workload import TrafficSpec, make_job
+
+
+# ---------------------------------------------------------------------------
+# Legacy reference implementations (verbatim copies of the pre-refactor code)
+# ---------------------------------------------------------------------------
+
+def legacy_node_jobs(cluster, node_name, registry, extra=None):
+    groups = {}
+    for t in registry.deployed_on(node_name):
+        if not t.low_comm:
+            groups.setdefault(t.job, []).append(t)
+    if extra is not None and not extra.low_comm:
+        groups.setdefault(extra.job, []).append(extra)
+    return groups
+
+
+def legacy_uplink_jobs(cluster, leaf, registry, extra=None, extra_node=None):
+    topo = cluster.topology
+    nodes_by_job = {}
+    for t in registry.tasks.values():
+        if t.node is not None:
+            nodes_by_job.setdefault(t.job, set()).add(t.node)
+    if extra is not None and extra_node is not None:
+        nodes_by_job.setdefault(extra.job, set()).add(extra_node)
+    groups = {}
+    for job, nodes in nodes_by_job.items():
+        if not topo.spans_leaves(nodes):
+            continue
+        if not any(topo.leaf_of[n] == leaf for n in nodes):
+            continue
+        in_leaf = [
+            t for t in registry.job_tasks(job)
+            if t.node is not None and topo.leaf_of[t.node] == leaf
+            and not t.low_comm
+        ]
+        if (extra is not None and extra_node is not None
+                and extra.job == job and not extra.low_comm
+                and topo.leaf_of[extra_node] == leaf
+                and all(t.uid != extra.uid for t in in_leaf)):
+            in_leaf = in_leaf + [extra]
+        if in_leaf:
+            groups[job] = in_leaf
+    return groups
+
+
+def legacy_traversed_uplinks(cluster, pod, node_name, registry):
+    topo = cluster.topology
+    if topo.is_star:
+        return []
+    job_nodes = {t.node for t in registry.job_tasks(pod.job)
+                 if t.node is not None}
+    job_nodes.add(node_name)
+    if not topo.spans_leaves(job_nodes):
+        return []
+    return sorted({topo.leaf_of[n] for n in job_nodes}
+                  & set(topo.uplinks.keys()))
+
+
+def legacy_job_links(cluster, job):
+    nodes = job.nodes_used()
+    if len(nodes) <= 1:
+        return {}
+    out = {}
+    for t in job.tasks:
+        if t.node is None or t.traffic.bw_gbps <= 0:
+            continue
+        out[t.node] = out.get(t.node, 0.0) + t.traffic.bw_gbps
+    return out
+
+
+def legacy_link_traffic(registry, sch, cluster, link_id):
+    from repro.core.topology import is_uplink
+    topo = cluster.topology
+    leaf = None
+    if is_uplink(link_id):
+        for lf, up in topo.uplinks.items():
+            if up.id == link_id:
+                leaf = lf
+                break
+    duties, bws = [], []
+    for idx, j in enumerate(sch.jobs):
+        tasks = registry.job_tasks(j)
+        spec = tasks[0].traffic if tasks else TrafficSpec(100.0, 0.3, 1.0)
+        eff_period = sch.base_ms / max(int(sch.muls[idx]), 1)
+        duties.append(min(1.0, spec.comm_ms / eff_period))
+        if leaf is None:
+            bws.append(sum(t.traffic.bw_gbps for t in tasks
+                           if t.node is not None))
+        else:
+            bws.append(sum(t.traffic.bw_gbps for t in tasks
+                           if t.node is not None and not t.low_comm
+                           and topo.leaf_of[t.node] == leaf))
+    return duties, bws
+
+
+# ---------------------------------------------------------------------------
+# Scheduled snapshot fixtures
+# ---------------------------------------------------------------------------
+
+def scheduled(sid):
+    """Schedule a snapshot under Metronome; return (cluster, fw, ctrl, wls)."""
+    if sid == "F1":
+        # the 1:1-oversubscription fabric variant of F2 (uplinks exist but
+        # are as fat as their racks)
+        cluster = make_fabric_cluster(n_leaves=2, hosts_per_leaf=2,
+                                      bw_gbps=25.0, oversubscription=1.0)
+        _, wls, _ = make_fabric_snapshot("F2", n_iterations=50)
+    else:
+        cluster, wls, _ = make_snapshot(sid, n_iterations=50)
+    ctrl = StopAndWaitController()
+    fw = SchedulingFramework(cluster, MetronomePlugin(controller=ctrl))
+    for wl in wls:
+        assert fw.schedule_workload(wl)
+    return cluster, fw, ctrl, wls
+
+
+def same_groups(got, want):
+    """Bit-for-bit: same job keys in the same order, same task objects in
+    the same order."""
+    assert list(got.keys()) == list(want.keys())
+    for j in want:
+        assert [t.uid for t in got[j]] == [t.uid for t in want[j]]
+        assert group_demand_gbps(got[j]) == group_demand_gbps(want[j])
+
+
+SNAPSHOT_IDS = ["S2", "F1", "F2", "F4"]
+
+
+class TestPlanningViewMatchesScheduler:
+    @pytest.mark.parametrize("sid", SNAPSHOT_IDS)
+    def test_host_groups(self, sid):
+        cluster, fw, _, _ = scheduled(sid)
+        view = LinkView.from_registry(cluster, fw.registry)
+        for n in cluster.node_names:
+            same_groups(view.host_groups(n),
+                        legacy_node_jobs(cluster, n, fw.registry))
+
+    @pytest.mark.parametrize("sid", SNAPSHOT_IDS)
+    def test_uplink_groups(self, sid):
+        cluster, fw, _, _ = scheduled(sid)
+        view = LinkView.from_registry(cluster, fw.registry)
+        for leaf in cluster.topology.uplinks:
+            same_groups(view.uplink_groups(leaf),
+                        legacy_uplink_jobs(cluster, leaf, fw.registry))
+
+    @pytest.mark.parametrize("sid", SNAPSHOT_IDS)
+    def test_candidate_pod_groupings(self, sid):
+        """The scheduler's Score-phase view: a probe pod provisionally on
+        every node must reproduce the legacy extra/extra_node semantics."""
+        cluster, fw, _, _ = scheduled(sid)
+        probe = make_job("probe", n_tasks=1, period_ms=100.0, duty=0.3,
+                         bw_gbps=9.0).tasks[0]
+        for node in cluster.node_names:
+            view = LinkView.from_registry(cluster, fw.registry, extra=probe,
+                                          extra_node=node)
+            for n in cluster.node_names:
+                same_groups(
+                    view.host_groups(n),
+                    legacy_node_jobs(cluster, n, fw.registry,
+                                     extra=probe if n == node else None))
+            for leaf in cluster.topology.uplinks:
+                same_groups(
+                    view.uplink_groups(leaf),
+                    legacy_uplink_jobs(cluster, leaf, fw.registry,
+                                       extra=probe, extra_node=node))
+            assert (view.traversed_uplinks(probe.job)
+                    == legacy_traversed_uplinks(cluster, probe, node,
+                                                fw.registry))
+
+    @pytest.mark.parametrize("sid", SNAPSHOT_IDS)
+    def test_traversed_uplinks_deployed_jobs(self, sid):
+        cluster, fw, _, wls = scheduled(sid)
+        view = LinkView.from_registry(cluster, fw.registry)
+        for wl in wls:
+            for job in wl.jobs:
+                pod = job.tasks[0]
+                node = pod.node
+                got = view.traversed_uplinks(job.name)
+                want = legacy_traversed_uplinks(cluster, pod, node,
+                                                fw.registry)
+                assert got == want
+
+
+class TestFlowViewMatchesSimulator:
+    @pytest.mark.parametrize("sid", SNAPSHOT_IDS)
+    def test_flow_specs(self, sid):
+        cluster, fw, _, wls = scheduled(sid)
+        view = LinkView(cluster)  # the simulator's storeless instance
+        for wl in wls:
+            for job in wl.jobs:
+                flows = view.flows_for(job)
+                want = legacy_job_links(cluster, job)
+                assert [f.node for f in flows] == list(want.keys())
+                assert [f.demand_gbps for f in flows] == list(want.values())
+                nodes = job.nodes_used()
+                for f in flows:
+                    assert f.links == cluster.topology.flow_links(f.node,
+                                                                  nodes)
+
+    def test_single_node_job_no_flows(self):
+        cluster, _, _ = make_snapshot("S2", n_iterations=10)
+        job = make_job("solo", n_tasks=2, period_ms=100.0, duty=0.3,
+                       bw_gbps=10.0, spread=0)
+        for t in job.tasks:
+            t.node = "worker-a30-0"
+        assert LinkView(cluster).flows_for(job) == []
+
+
+class TestRecalcMatchesController:
+    @pytest.mark.parametrize("sid", SNAPSHOT_IDS)
+    def test_recalc_traffic(self, sid):
+        cluster, fw, ctrl, _ = scheduled(sid)
+        view = LinkView.from_registry(cluster, fw.registry)
+        if sid != "F1":  # 1:1 fabric: nothing contends, no schemes exist
+            assert ctrl.links, "snapshots must produce contention schemes"
+        for link_id, state in ctrl.links.items():
+            sch = state.scheme
+            duties, bws = view.recalc_traffic(link_id, sch.jobs, sch.muls,
+                                              sch.base_ms)
+            ld, lb = legacy_link_traffic(fw.registry, sch, cluster, link_id)
+            assert duties == ld
+            assert bws == lb
+
+
+class TestContentionPredicate:
+    def test_eq9_pairs(self):
+        """Eq. 9: only pairs whose combined demand exceeds the allocatable
+        bandwidth contend."""
+        cluster, fw, _, _ = scheduled("S2")
+        view = LinkView.from_registry(cluster, fw.registry)
+        for n in cluster.node_names:
+            demands = view.demands(n)
+            cap = cluster.link_alloc(n)
+            pairs = view.contending_pairs(n)
+            jobs = list(demands)
+            for i in range(len(jobs)):
+                for j in range(i + 1, len(jobs)):
+                    a, b = jobs[i], jobs[j]
+                    expect = demands[a] + demands[b] > cap
+                    assert ((a, b) in pairs) == expect
+                    assert view.contends(n, a, b) == expect
+        # both 25G jobs share host links on the 25G testbed -> contention
+        assert any(view.contending_pairs(n) for n in cluster.node_names)
+
+    def test_planning_links_order(self):
+        cluster, fw, _, _ = scheduled("F2")
+        view = LinkView.from_registry(cluster, fw.registry)
+        assert view.planning_links() == (list(cluster.node_names)
+                                         + cluster.topology.uplink_ids)
+
+
+class TestExpectedIteration:
+    def test_no_congestion_equals_period(self):
+        cluster, fw, _, wls = scheduled("S2")
+        view = LinkView.from_registry(cluster, fw.registry)
+        job = wls[0].jobs[0]
+        assert view.expected_iteration_ms(job.name) == pytest.approx(
+            job.traffic.period_ms)
+
+    def test_allocatable_drop_stretches_comm(self):
+        cluster, fw, _, wls = scheduled("S2")
+        job = wls[0].jobs[0]
+        node = job.tasks[0].node
+        cluster.node(node).allocatable_gbps = 12.5  # half of the 25G demand
+        view = LinkView.from_registry(cluster, fw.registry)
+        spec = job.traffic
+        want = spec.compute_ms + spec.comm_ms * (spec.bw_gbps / 12.5)
+        assert view.expected_iteration_ms(job.name) == pytest.approx(want)
+
+    def test_unknown_job_is_none(self):
+        cluster, fw, _, _ = scheduled("S2")
+        view = LinkView.from_registry(cluster, fw.registry)
+        assert view.expected_iteration_ms("nope") is None
