@@ -8,15 +8,18 @@ from repro.configs.metronome_testbed import SNAPSHOTS, make_snapshot
 from repro.core.harness import priority_split, run_experiment
 from repro.core.simulator import SimConfig
 
+from . import common
 from .common import Timer, emit
 
-# more drift to make the cushions/monitor matter (paper runs real hardware
-# noise; we dial jitter up to the same effect)
-ABLATION_CFG = SimConfig(duration_ms=150_000.0, seed=3, jitter_std=0.02)
+def _cfg(**kw) -> SimConfig:
+    # more drift to make the cushions/monitor matter (paper runs real
+    # hardware noise; we dial jitter up to the same effect)
+    return common.bench_cfg(jitter_std=0.02, **kw)
 
 
 def run() -> None:
-    for sid in SNAPSHOTS:
+    n_iter = common.pick(400, 30)
+    for sid in common.pick(SNAPSHOTS, ("S2",)):
         variants = {}
         for label, kw in (
             ("full", {}),
@@ -25,14 +28,13 @@ def run() -> None:
             ("wo_stage3", {"skip_third_stage": True,
                            "rotation_mode": "compact"}),
         ):
-            cluster, wls, bg = make_snapshot(sid, n_iterations=400)
+            cluster, wls, bg = make_snapshot(sid, n_iterations=n_iter)
             with Timer() as t:
                 variants[label] = run_experiment(
-                    "metronome", cluster, wls, ABLATION_CFG, background=bg,
+                    "metronome", cluster, wls, _cfg(), background=bg,
                     **kw)
-        cluster, wls, bg = make_snapshot(sid, n_iterations=400)
-        cfg = SimConfig(duration_ms=150_000.0, seed=3, jitter_std=0.02,
-                        monitor=False)
+        cluster, wls, bg = make_snapshot(sid, n_iterations=n_iter)
+        cfg = _cfg(monitor=False)
         variants["wo_monitor"] = run_experiment(
             "metronome", cluster, wls, cfg, background=bg)
 

@@ -21,6 +21,7 @@ from repro.configs.metronome_testbed import (DYNAMIC_SNAPSHOTS,
 from repro.core.harness import priority_split, run_experiment
 from repro.core.simulator import SimConfig
 
+from . import common
 from .common import Timer, emit
 
 AMPLITUDES = (0.2, 0.3, 0.4)
@@ -30,7 +31,7 @@ VARIANTS = (
     ("metronome_noreconf", "metronome", False),
     ("default", "default", True),
 )
-CFG = SimConfig(duration_ms=120_000.0, seed=3, jitter_std=0.01)
+
 
 
 def _jct_ms(res, jobs) -> float:
@@ -40,16 +41,20 @@ def _jct_ms(res, jobs) -> float:
 
 
 def run() -> None:
+    cfg = SimConfig(duration_ms=common.pick(120_000.0, 20_000.0), seed=3,
+                    jitter_std=0.01)
     for sid in DYNAMIC_SNAPSHOTS:
-        for amp in AMPLITUDES:
+        for amp in common.pick(AMPLITUDES, (0.3,)):
             results = {}
             lo_jct = {}
             for label, sched, reconf in VARIANTS:
                 cluster, wls, bg, evs = make_dynamic_snapshot(
-                    sid, n_iterations=300, amplitude=amp)
+                    sid, n_iterations=common.pick(300, 25), amplitude=amp,
+                    t_on_ms=common.pick(15_000.0, 4_000.0),
+                    t_off_ms=common.pick(45_000.0, 12_000.0))
                 hi, lo = priority_split(wls)
                 with Timer() as t:
-                    r = run_experiment(sched, cluster, wls, CFG,
+                    r = run_experiment(sched, cluster, wls, cfg,
                                        background=bg, events=evs,
                                        reconfigure=reconf)
                 results[label] = r

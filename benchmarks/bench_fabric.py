@@ -18,17 +18,24 @@ from repro.core.cluster import make_fabric_cluster
 from repro.core.harness import run_experiment
 from repro.core.simulator import SimConfig
 
+from . import common
 from .common import Timer, emit
 
 RATIOS = (1.0, 2.0, 4.0)
 SCHEDULERS = ("metronome", "default", "diktyo", "ideal")
-CFG = SimConfig(duration_ms=120_000.0, seed=3, jitter_std=0.01)
 
 
-def _f2_workloads(n_iterations: int = 300):
+def _cfg() -> SimConfig:
+    return SimConfig(duration_ms=common.pick(120_000.0, 15_000.0), seed=3,
+                     jitter_std=0.01)
+
+
+def _f2_workloads(n_iterations=None):
     """The F2 snapshot's workload pair (single source of truth for the
     spec lives in configs.metronome_testbed); only the cluster varies
     across the oversubscription sweep."""
+    if n_iterations is None:
+        n_iterations = common.pick(300, 25)
     _, wls, _ = make_snapshot("F2", n_iterations=n_iterations)
     return wls
 
@@ -39,7 +46,8 @@ def _avg_jct_ms(res) -> float:
 
 
 def run() -> None:
-    for ratio in RATIOS:
+    cfg = _cfg()
+    for ratio in common.pick(RATIOS, (2.0,)):
         results = {}
         for sched in SCHEDULERS:
             cluster = make_fabric_cluster(n_leaves=2, hosts_per_leaf=2,
@@ -47,7 +55,7 @@ def run() -> None:
                                           oversubscription=ratio)
             wls = _f2_workloads()
             with Timer() as t:
-                results[sched] = run_experiment(sched, cluster, wls, CFG)
+                results[sched] = run_experiment(sched, cluster, wls, cfg)
             r = results[sched]
             uplink = max(r.sim.uplink_utilization.values(), default=0.0)
             iters = [v for v in r.sim.time_per_1000_iters_s.values()
@@ -63,9 +71,10 @@ def run() -> None:
     # the shipped fabric snapshots end-to-end (F2: 2:1, F4: 4:1, 3 jobs)
     for sid in FABRIC_SNAPSHOTS:
         for sched in ("metronome", "default"):
-            cluster, wls, bg = make_snapshot(sid, n_iterations=300)
+            cluster, wls, bg = make_snapshot(
+                sid, n_iterations=common.pick(300, 25))
             with Timer() as t:
-                r = run_experiment(sched, cluster, wls, CFG, background=bg)
+                r = run_experiment(sched, cluster, wls, cfg, background=bg)
             uplink = max(r.sim.uplink_utilization.values(), default=0.0)
             emit(f"fabric_{sid}_{sched}", t.us,
                  f"avg_jct_s={_avg_jct_ms(r) / 1e3:.2f};"

@@ -11,8 +11,9 @@ import numpy as np
 
 from repro.kernels import ref
 from repro.core import geometry as G
-from repro.core import scoring as S
+from repro.core import rotation as R
 
+from . import common
 from .common import Timer, emit
 
 
@@ -28,7 +29,7 @@ def _bench(fn, *args, reps=3):
 def run() -> None:
     key = jax.random.PRNGKey(0)
     # attention reference path (the dry-run fallback)
-    for s in (512, 1024):
+    for s in common.pick((512, 1024), (128,)):
         q = jax.random.normal(key, (1, 8, s, 64), jnp.float32)
         k = jax.random.normal(key, (1, 2, s, 64), jnp.float32)
         v = jax.random.normal(key, (1, 2, s, 64), jnp.float32)
@@ -42,13 +43,14 @@ def run() -> None:
     pats = G.pattern_matrix([1, 1, 1], [0.3, 0.3, 0.3], 72)
     bw = np.array([20.0, 20.0, 20.0])
     with Timer() as t:
-        res = S.find_optimal_rotation(pats, bw, 25.0, [1, 1, 1], 0)
+        res = R.find_optimal_rotation(pats, bw, 25.0, [1, 1, 1], 0)
     emit("kernel_score_enumeration_3tasks", t.us,
          f"combos={res.n_evaluated};combos_per_s={res.n_evaluated/(t.us/1e6):.0f}")
 
     # rg-lru associative scan reference
-    a = jax.nn.sigmoid(jax.random.normal(key, (4, 2048, 512))) * 0.3 + 0.65
-    x = jax.random.normal(key, (4, 2048, 512), jnp.float32)
+    rg_shape = common.pick((4, 2048, 512), (2, 256, 128))
+    a = jax.nn.sigmoid(jax.random.normal(key, rg_shape)) * 0.3 + 0.65
+    x = jax.random.normal(key, rg_shape, jnp.float32)
     us = _bench(jax.jit(ref.rg_lru_ref), a, x)
-    emit("kernel_rg_lru_ref_4x2048x512", us,
-         f"melems_per_s={4*2048*512/us:.1f}")
+    emit(f"kernel_rg_lru_ref_{'x'.join(map(str, rg_shape))}", us,
+         f"melems_per_s={rg_shape[0]*rg_shape[1]*rg_shape[2]/us:.1f}")

@@ -8,22 +8,26 @@ from repro.configs.metronome_testbed import make_snapshot
 from repro.core.harness import priority_split, run_experiment
 from repro.core.simulator import SimConfig
 
-from .common import BENCH_CFG, Timer, emit
+from . import common
+from .common import Timer, emit
 
 
 def run() -> None:
+    cfg = common.bench_cfg()
+    n_iter = common.pick(400, 30)
     # --- Fig. 11: halve the batch size of all S1 jobs at t=30s -> duty up ---
     for label, changes in (("orig", ()),
                            ("halved_batch", (("t", None, 1.4),))):
         results = {}
         for sched in ("metronome", "default", "diktyo"):
-            cluster, wls, bg = make_snapshot("S1", n_iterations=400)
+            cluster, wls, bg = make_snapshot("S1", n_iterations=n_iter)
             tc = []
             if changes:
-                tc = [(30_000.0, j.name, 1.4) for wl in wls for j in wl.jobs]
+                t_on = common.pick(30_000.0, 5_000.0)
+                tc = [(t_on, j.name, 1.4) for wl in wls for j in wl.jobs]
             with Timer() as t:
                 results[sched] = run_experiment(
-                    sched, cluster, wls, BENCH_CFG, background=bg,
+                    sched, cluster, wls, cfg, background=bg,
                     traffic_changes=tc)
         me = results["metronome"]
         for other in ("default", "diktyo"):
@@ -41,16 +45,17 @@ def run() -> None:
 
     # --- Fig. 12: sweep the congestion latency parameter on S4/S5 ----------
     for sid in ("S4", "S5"):
-        for tau in (10.0, 40.0, 80.0):
+        for tau in common.pick((10.0, 40.0, 80.0), (40.0,)):
             results = {}
             for sched in ("metronome", "default", "diktyo"):
-                cluster, wls, bg = make_snapshot(sid, n_iterations=300)
+                cluster, wls, bg = make_snapshot(
+                    sid, n_iterations=common.pick(300, 25))
                 for other in cluster.node_names:
                     if other != "worker-a30-2":
                         cluster.set_latency("worker-a30-2", other, tau)
                 with Timer() as t:
                     results[sched] = run_experiment(
-                        sched, cluster, wls, BENCH_CFG, background=bg)
+                        sched, cluster, wls, cfg, background=bg)
             me = results["metronome"]
             for other in ("default", "diktyo"):
                 o = results[other]

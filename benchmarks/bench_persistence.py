@@ -7,14 +7,18 @@ from repro.configs.metronome_testbed import make_snapshot
 from repro.core.harness import priority_split, run_experiment
 from repro.core.simulator import SimConfig
 
+from . import common
 from .common import Timer, emit
 
 
 def run() -> None:
     for sid in ("S1", "S2", "S3"):
         rows = {}
-        for label, dur, iters in (("short", 150_000.0, 400),
-                                  ("long", 600_000.0, 5000)):
+        for label, dur, iters in (
+                ("short", common.pick(150_000.0, 15_000.0),
+                 common.pick(400, 30)),
+                ("long", common.pick(600_000.0, 30_000.0),
+                 common.pick(5000, 60))):
             cluster, wls, bg = make_snapshot(sid, n_iterations=iters)
             cfg = SimConfig(duration_ms=dur, seed=3, jitter_std=0.01)
             with Timer() as t:

@@ -11,11 +11,12 @@ from repro.core.harness import priority_split
 from repro.core.scheduler import MetronomePlugin
 from repro.core.simulator import ClusterSimulator, SimConfig
 
+from . import common
 from .common import Timer, emit
 
 
 def _run_with(sid: str, a_t: float, o_t: int, jitter: float = 0.02):
-    cluster, wls, bg = make_snapshot(sid, n_iterations=400)
+    cluster, wls, bg = make_snapshot(sid, n_iterations=common.pick(400, 30))
     ctrl = StopAndWaitController(a_t=a_t, o_t=o_t)
     fw = SchedulingFramework(cluster, MetronomePlugin(controller=ctrl))
     jobs = []
@@ -24,8 +25,8 @@ def _run_with(sid: str, a_t: float, o_t: int, jitter: float = 0.02):
         jobs.extend(wl.jobs)
     ctrl.run_offline_recalculation(fw.registry, cluster)
     sim = ClusterSimulator(cluster, jobs,
-                           SimConfig(duration_ms=150_000, seed=3,
-                                     jitter_std=jitter),
+                           SimConfig(duration_ms=common.pick(150_000, 15_000),
+                                     seed=3, jitter_std=jitter),
                            controller=ctrl, background=bg,
                            registry=fw.registry)
     res = sim.run()
@@ -34,11 +35,11 @@ def _run_with(sid: str, a_t: float, o_t: int, jitter: float = 0.02):
 
 def run() -> None:
     # --- Fig. 14: A_T x O_T flame chart over S1..S5 -------------------------
-    for sid in ("S1", "S2", "S3"):
+    for sid in common.pick(("S1", "S2", "S3"), ("S2",)):
         base = None
         rows = []
-        for o_t in (3, 5):
-            for a_t in (1.05, 1.10, 1.15):
+        for o_t in common.pick((3, 5), (5,)):
+            for a_t in common.pick((1.05, 1.10, 1.15), (1.10,)):
                 with Timer() as t:
                     res, wls = _run_with(sid, a_t, o_t)
                 hi, lo = priority_split(wls)
@@ -54,7 +55,7 @@ def run() -> None:
     wrn = dict(MODEL_FLEET["FT-WideResNet101"])
     vgg = dict(MODEL_FLEET["FT-VGG19-S3"])
     # benchmark: exactly commensurate 2:1 periods
-    gaps = (35.0, 30.0, 20.0, 10.0, 5.0, 0.0)
+    gaps = common.pick((35.0, 30.0, 20.0, 10.0, 5.0, 0.0), (35.0, 0.0))
     ref_lo = ref_hi = None
     for gap in gaps:
         MODEL_FLEET["FT-WideResNet101"] = dict(

@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 from repro.configs.metronome_testbed import SNAPSHOTS, make_snapshot
 from repro.core.harness import RunResult, priority_split, run_experiment
@@ -12,9 +12,29 @@ SCHEDULERS = ("metronome", "default", "diktyo", "ideal")
 
 BENCH_CFG = SimConfig(duration_ms=150_000.0, seed=3, jitter_std=0.01)
 
+# --smoke mode (benchmarks/run.py --smoke, exercised by CI): every bench
+# runs end-to-end with tiny iteration counts / durations so the scripts
+# cannot rot silently.  The flag is set BEFORE any run() executes; benches
+# read it at call time via pick().
+SMOKE = False
 
-def run_snapshot_all(sid: str, n_iterations: int = 400,
-                     cfg: SimConfig = BENCH_CFG,
+
+def pick(default, smoke_value):
+    """``default`` normally, ``smoke_value`` under ``run.py --smoke``."""
+    return smoke_value if SMOKE else default
+
+
+def bench_cfg(**overrides) -> SimConfig:
+    """The standard bench SimConfig, smoke-shrunk when --smoke is active."""
+    cfg = SimConfig(duration_ms=pick(150_000.0, 15_000.0), seed=3,
+                    jitter_std=0.01)
+    for k, v in overrides.items():
+        setattr(cfg, k, v)
+    return cfg
+
+
+def run_snapshot_all(sid: str, n_iterations: Optional[int] = None,
+                     cfg: Optional[SimConfig] = None,
                      schedulers=SCHEDULERS, **kw) -> Dict[str, RunResult]:
     """Run one snapshot under every scheduler.
 
@@ -23,6 +43,10 @@ def run_snapshot_all(sid: str, n_iterations: int = 400,
     (every run regenerates structurally identical workloads from the same
     snapshot, so one representative list is unambiguous — job names and
     priorities are what callers consume)."""
+    if n_iterations is None:
+        n_iterations = pick(400, 30)
+    if cfg is None:
+        cfg = bench_cfg()
     out: Dict[str, RunResult] = {}
     wls_rep = None
     for sched in schedulers:

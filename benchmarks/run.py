@@ -11,13 +11,14 @@ import traceback
 
 from . import (bench_ablation, bench_dynamic, bench_fabric, bench_kernels,
                bench_param_variation, bench_persistence, bench_roofline,
-               bench_sched_time, bench_snapshots, bench_tct,
-               bench_thresholds)
+               bench_rotation, bench_sched_time, bench_snapshots, bench_tct,
+               bench_thresholds, common)
 
 ALL = {
     "snapshots": bench_snapshots,     # Fig. 7/8 + Table V
     "fabric": bench_fabric,           # beyond-paper: oversubscribed fabrics
     "dynamic": bench_dynamic,         # beyond-paper: mid-run fluctuation
+    "rotation": bench_rotation,       # beyond-paper: joint planner vs legacy
     "tct": bench_tct,                 # Fig. 10
     "param_variation": bench_param_variation,  # Fig. 11/12
     "persistence": bench_persistence,  # Table VI
@@ -33,7 +34,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names (default: all)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny iteration counts / durations: every bench "
+                         "runs end-to-end fast (CI keeps the scripts alive)")
     args = ap.parse_args()
+    if args.smoke:
+        common.SMOKE = True
     names = args.only.split(",") if args.only else list(ALL)
     print("name,us_per_call,derived")
     failed = []

@@ -111,7 +111,7 @@ def make_snapshot(sid: str, n_iterations: int = 400
             _wl("wl-rn152", [job("rn152-ft", "FT-ResNet152", LOW, 0.001)]),
         ]
         _congest(cluster, bg, "worker-a30-2", iperf_gbps=16.0, tau_ms=40.0)
-    elif sid in ("F2", "F4"):
+    elif sid in ("F2", "F4", "J1"):
         return make_fabric_snapshot(sid, n_iterations=n_iterations)
     else:
         raise ValueError(f"unknown snapshot {sid!r}")
@@ -134,6 +134,21 @@ def make_fabric_snapshot(sid: str, n_iterations: int = 400
       F4: 2 leaves x 4 hosts @25G, 4:1 oversubscription (25G uplinks).
           Three 8-task jobs (1 HIGH + 2 LOW) span both leaves; per-host
           demand 3x6 = 18G < 25G, per-uplink 3x24G vs 25G.
+      J1: 2 leaves x 2 hosts @25G, 4:1 oversubscription (12.5G uplinks) —
+          the joint-rotation oracle snapshot: per-link rotation solves
+          PROVABLY conflict.  Two 4-task spanning jobs (hi*/lo, 5G each)
+          contend only on the uplinks (in-leaf 10G vs 12.5G; pair 20G);
+          an intra-leaf 2-task job (24G, pinned to one rack because 24G
+          exceeds the uplink's 12.5G — Eq. 14) contends with both on the
+          leaf0 host links (24+5 > 25G).  The host-link solve puts hi/lo
+          adjacent (their pair fits a host link, so only the intra-leaf
+          job needs separating) while the uplink solve must spread hi/lo
+          apart — the host-optimal relative shift is infeasible on the
+          shared uplink.  The legacy "uplinks win" reconciliation then
+          lands the intra-leaf job on top of the spanning LOW job
+          (29G > 25G sustained); the joint planner picks the one region
+          where all three constraints hold (bench_rotation.py,
+          tests/test_rotation.py).
     """
     def job(name, prio, submit, *, n_tasks, period_ms, duty, bw_gbps):
         return make_job(name, n_tasks=n_tasks, period_ms=period_ms, duty=duty,
@@ -157,6 +172,17 @@ def make_fabric_snapshot(sid: str, n_iterations: int = 400
             _wl("wl-f4-hi", [job("f4-hi", HIGH, 0.0, **spec)]),
             _wl("wl-f4-lo0", [job("f4-lo0", LOW, 0.001, **spec)]),
             _wl("wl-f4-lo1", [job("f4-lo1", LOW, 0.002, **spec)]),
+        ]
+    elif sid == "J1":
+        cluster = make_fabric_cluster(n_leaves=2, hosts_per_leaf=2,
+                                      bw_gbps=25.0, oversubscription=4.0)
+        span = dict(n_tasks=4, period_ms=100.0, duty=0.30, bw_gbps=5.0)
+        wls = [
+            _wl("wl-j1-hi", [job("j1-hi", HIGH, 0.0, **span)]),
+            _wl("wl-j1-lo", [job("j1-lo", LOW, 0.001, **span)]),
+            _wl("wl-j1-local", [job("j1-local", LOW, 0.002, n_tasks=2,
+                                    period_ms=100.0, duty=0.35,
+                                    bw_gbps=24.0)]),
         ]
     else:
         raise ValueError(f"unknown fabric snapshot {sid!r}")
@@ -227,5 +253,7 @@ def make_dynamic_snapshot(
 SNAPSHOTS = ("S1", "S2", "S3", "S4", "S5")
 # beyond-paper leaf–spine snapshots (oversubscribed fabric; bench_fabric.py)
 FABRIC_SNAPSHOTS = ("F2", "F4")
+# joint-rotation oracle snapshot (per-link solves conflict; bench_rotation.py)
+JOINT_SNAPSHOTS = ("J1",)
 # beyond-paper dynamic snapshots (mid-run fluctuation; bench_dynamic.py)
 DYNAMIC_SNAPSHOTS = ("D1", "D2")

@@ -1,6 +1,7 @@
 # The paper's primary contribution: the Metronome scheduling mechanism.
 #   geometry  — TDM circle abstraction (Eqs. 1-6, 9)
-#   scoring   — rotation-scheme enumeration (Eq. 18, stages 1 & 3)
+#   scoring   — per-candidate Eq. 18 evaluators (ranges, banks, Psi)
+#   rotation  — fabric-wide joint rotation planner (single scheme producer)
 #   framework — K8s-scheduling-framework analogue (extension points)
 #   scheduler — Algorithm 1 (MetronomePlugin)
 #   controller— stop-and-wait controller (global offset, recalc, regulation)
@@ -12,11 +13,11 @@
 #   trace     — Gavel-style workload generator
 #   harness   — scheduler -> controller -> simulator glue
 from . import (baselines, cluster, contention, controller, events, framework,
-               geometry, harness, scheduler, scoring, simulator, topology,
-               trace, workload)
+               geometry, harness, rotation, scheduler, scoring, simulator,
+               topology, trace, workload)
 
 __all__ = [
     "baselines", "cluster", "contention", "controller", "events", "framework",
-    "geometry", "harness", "scheduler", "scoring", "simulator", "topology",
-    "trace", "workload",
+    "geometry", "harness", "rotation", "scheduler", "scoring", "simulator",
+    "topology", "trace", "workload",
 ]

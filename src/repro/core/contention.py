@@ -28,8 +28,15 @@ one view:
     and demand aggregates per source host link.
 
 The controller's offline recalculation keeps its legacy whole-job host-link
-demand (:meth:`recalc_traffic`) for star-regression compatibility; the
-divergence is documented there and reconciling it is a roadmap item.
+demand (:meth:`recalc_traffic` / :meth:`recalc_demands`).  Since the
+fabric-wide rotation planner became the single producer of schemes
+(``core/rotation.py``), this divergence is an explicit, named *demand
+convention* of the planner (``demand='planning'`` vs ``demand='recalc'``)
+rather than two code paths: the Score phase plans with the planning view,
+the offline 3rd stage re-solves with the recalc view, and both read the
+same grouped tasks from this one class (DESIGN.md section 13).  Folding the
+host rule into the planning view would re-scale Eq. 18's excess on every
+star recalculation and is pinned out by the seed goldens.
 """
 from __future__ import annotations
 
@@ -236,19 +243,29 @@ class LinkView:
 
         Uplinks use the in-leaf grouping (matching :meth:`uplink_groups`).
         Host links keep the controller's legacy whole-job convention — the
-        sum over ALL deployed tasks of the job, not only those on this node.
-        That is deliberately preserved: the star-topology seed goldens pin
-        the recalculated shifts bit-for-bit, and reconciling the host rule
-        with the planning view is an open roadmap item."""
-        topo = self.cluster.topology
-        leaf = self._uplink_leaf(link_id)
+        sum over ALL deployed tasks of the job, not only those on this node
+        (see :meth:`recalc_demands`)."""
         duties: List[float] = []
-        bws: List[float] = []
         for idx, j in enumerate(jobs):
             tasks = self.job_tasks(j)
             spec = tasks[0].traffic if tasks else TrafficSpec(100.0, 0.3, 1.0)
             eff_period = base_ms / max(int(muls[idx]), 1)
             duties.append(min(1.0, spec.comm_ms / eff_period))
+        return duties, self.recalc_demands(link_id, jobs)
+
+    def recalc_demands(self, link_id: str, jobs: Sequence[str]) -> List[float]:
+        """Per-job demand (Gbps) under the offline-recalculation convention.
+
+        Uplinks: the in-leaf aggregate (identical to the planning view).
+        Host links: the sum over ALL deployed tasks of the job — the
+        controller's legacy whole-job rule, deliberately preserved: the
+        star-topology seed goldens pin the recalculated shifts bit-for-bit
+        against it (DESIGN.md section 13 documents the divergence)."""
+        topo = self.cluster.topology
+        leaf = self._uplink_leaf(link_id)
+        bws: List[float] = []
+        for j in jobs:
+            tasks = self.job_tasks(j)
             if leaf is None:
                 bws.append(sum(t.traffic.bw_gbps for t in tasks
                                if t.node is not None))
@@ -256,7 +273,7 @@ class LinkView:
                 bws.append(sum(t.traffic.bw_gbps for t in tasks
                                if t.node is not None and not t.low_comm
                                and topo.leaf_of[t.node] == leaf))
-        return duties, bws
+        return bws
 
     # ----------------------------------------------------- reconfiguration view
     def expected_iteration_ms(self, job: str) -> Optional[float]:

@@ -2,9 +2,14 @@
 
 Three duties:
   1. **Global offset**: per-link rotation schemes arrive from the scheduler;
-     jobs spanning several links need consistent time-shifts. We traverse the
-     job-link affinity graph (Cassini-style) anchored at the *highest
-     priority* job (the paper's difference vs Cassini's random reference).
+     jobs spanning several links need consistent time-shifts. Offset
+     resolution is delegated to the fabric-wide rotation planner
+     (:func:`repro.core.rotation.resolve`): consistent per-link solutions
+     keep the Cassini-style affinity-graph BFS anchored at the *highest
+     priority* job (the paper's difference vs Cassini's random reference);
+     conflicting per-link solutions are re-solved jointly over every link
+     the component touches.  ``joint=False`` restores the legacy
+     "uplinks take precedence" tie-break as an ablation.
   2. **Offline recalculation**: when SkipPhaseThree == 0, re-run the
      exhaustive 3rd-stage search (maximize Psi among perfect-score interval
      midpoints) and update the scheme.
@@ -19,15 +24,15 @@ import collections
 import dataclasses
 from typing import Callable, Dict, List, Optional, Tuple
 
-import networkx as nx
 import numpy as np
 
-from . import geometry, scoring
+from . import geometry, rotation
 from .cluster import Cluster
 from .contention import LinkView
 from .framework import TaskRegistry
 from .geometry import DI_PRE
-from .scheduler import LinkScheme, ReserveMessage
+from .rotation import LinkScheme
+from .scheduler import ReserveMessage
 from .topology import is_uplink
 from .workload import HIGH, Task, TrafficSpec
 
@@ -63,6 +68,7 @@ class StopAndWaitController:
         recalc_hook: Optional[Callable[[str], None]] = None,
         phase_monitor: bool = False,
         reconfigure: bool = True,
+        joint: bool = True,  # False = legacy uplink-wins reconciliation
     ) -> None:
         self.a_t = a_t
         self.o_t = o_t
@@ -71,6 +77,8 @@ class StopAndWaitController:
         # background changes by re-deriving schemes; False = ablation
         self.reconfigure = reconfigure
         self.reconf_count = 0
+        self.joint = joint
+        self.joint_resolve_count = 0  # components re-solved jointly
         self.links: Dict[str, LinkState] = {}  # link id -> state (see LinkState)
         self.global_offsets_ms: Dict[str, float] = {}
         self.injected_ms: Dict[str, float] = {}  # per-job E_T idle injection
@@ -99,7 +107,7 @@ class StopAndWaitController:
                 self.pending_recalc.append(link_id)
         for jname, job in registry.jobs.items():
             self._priorities[jname] = job.priority
-        self._recompute_global_offsets()
+        self._replan_offsets(registry, cluster)
         # offline recalculation is delegated (the paper decouples it from the
         # scheduling fast path); callers may run run_offline_recalculation()
         # asynchronously or via the hook.
@@ -118,7 +126,9 @@ class StopAndWaitController:
             sch.muls = np.delete(sch.muls, idx)
         return not sch.jobs
 
-    def on_evict(self, node: str, pod: Task) -> None:
+    def on_evict(self, node: str, pod: Task,
+                 registry: Optional[TaskRegistry] = None,
+                 cluster: Optional[Cluster] = None) -> None:
         """Pod eviction: retire the job from the node's host-link scheme and
         from every uplink scheme it appears in (evictions are all-or-nothing
         at the job level, so the job's cross-leaf flows disappear too)."""
@@ -132,52 +142,40 @@ class StopAndWaitController:
                     dead.append(link_id)
         for link_id in dead:
             del self.links[link_id]
-        self._recompute_global_offsets()
+        self._replan_offsets(registry, cluster)
 
     # ---------------------------------------------------------- global offset
-    def _recompute_global_offsets(self) -> None:
-        """Traverse the affinity graph; reference = highest-priority job.
-
-        Edge (job_a, job_b) on link l implies a *relative* time shift
-        delta = shift_b - shift_a (ms on that link's base circle). A BFS from
-        the reference (offset 0) assigns each job a global offset; Eq. 17
-        consistency across links is guaranteed by the scheduler's loop filter.
-        """
-        g = nx.Graph()
-        link_shift_ms: Dict[Tuple[str, str], float] = {}
-        # A pair contending on links with different capacities can receive
-        # different relative shifts from the per-link solver; add_edge
-        # overwrites attrs, so iterate in a fixed order with uplinks LAST:
-        # the most oversubscribed tier wins the tie deterministically (a
-        # joint multi-link rotation solve is an open roadmap item).
-        ordered = sorted(self.links.items(),
-                         key=lambda kv: (is_uplink(kv[0]), kv[0]))
-        for node, state in ordered:
-            sch = state.scheme
-            delays = geometry.shifts_to_delay_ms(sch.shifts_slots, sch.base_ms,
-                                                 self.di_pre)
-            for j, d in zip(sch.jobs, delays):
-                link_shift_ms[(node, j)] = float(d)
-                g.add_node(j)
-            for i in range(len(sch.jobs)):
-                for k in range(i + 1, len(sch.jobs)):
-                    a, b = sch.jobs[i], sch.jobs[k]
-                    rel = link_shift_ms[(node, b)] - link_shift_ms[(node, a)]
-                    g.add_edge(a, b, rel=rel, src=a)
-
-        offsets: Dict[str, float] = {}
-        for comp in nx.connected_components(g):
-            comp = list(comp)
-            # reference: highest priority, ties -> arbitrary-but-stable
-            ref = sorted(comp, key=lambda j: (-self._priorities.get(j, 0), j))[0]
-            offsets[ref] = 0.0
-            for u, v in nx.bfs_edges(g, ref):
-                rel = g[u][v]["rel"]
-                if g[u][v]["src"] != u:
-                    rel = -rel
-                offsets[v] = offsets[u] + rel
-        # normalize: reference stays 0; negative offsets wrap onto the circle
-        self.global_offsets_ms = offsets
+    def _replan_offsets(self, registry: Optional[TaskRegistry] = None,
+                        cluster: Optional[Cluster] = None, *,
+                        mode: str = "fast", demand: str = "planning") -> None:
+        """Resolve the stored per-link schemes into global offsets via the
+        rotation planner.  With a live (registry, cluster) the planner can
+        re-solve conflicting components jointly; without one — or with
+        ``joint=False`` — the legacy last-link-wins reconciliation applies
+        (canonical order: host links sorted, uplinks LAST)."""
+        schemes = {lid: st.scheme for lid, st in self.links.items()}
+        view = None
+        if registry is not None and cluster is not None:
+            view = LinkView.from_registry(cluster, registry)
+        res = rotation.resolve(
+            schemes, self._priorities, view, registry, di_pre=self.di_pre,
+            mode=mode, demand=demand, joint=self.joint,
+        )
+        for lid, sch in res.schemes.items():
+            if lid in self.links and sch is not schemes.get(lid):
+                self.links[lid].scheme = sch
+                # the joint re-solve owns its jobs' E_T injections: a new
+                # commensurate unification may DROP an injection to zero,
+                # and a stale positive entry would keep stretching the
+                # job's period off the re-planned circle
+                for j, inj in sch.injected_ms.items():
+                    if inj > 0:
+                        self.injected_ms[j] = inj
+                    else:
+                        self.injected_ms.pop(j, None)
+        if res.joint_links:
+            self.joint_resolve_count += 1
+        self.global_offsets_ms = res.offsets_ms
 
     def job_offset_ms(self, job: str) -> float:
         base = 0.0
@@ -227,20 +225,16 @@ class StopAndWaitController:
             if state is None:
                 continue
             sch = state.scheme
-            duties, bws = view.recalc_traffic(link_id, sch.jobs, sch.muls,
-                                              sch.base_ms)
-            patterns = geometry.pattern_matrix(sch.muls, duties, self.di_pre)
-            ref_index = sch.jobs.index(sch.ref_job) if sch.ref_job in sch.jobs else 0
-            result = scoring.find_optimal_rotation(
-                patterns, bws, cluster.link_alloc(link_id), sch.muls,
-                ref_index, self.di_pre,
-            )
+            result = rotation.replan_link(view, link_id, sch,
+                                          cluster.link_alloc(link_id),
+                                          self.di_pre)
             sch.shifts_slots = result.shifts
             sch.score = result.score
             state.optimal = True
             self.recalc_count += 1
             done += 1
-        self._recompute_global_offsets()
+        self._replan_offsets(registry, cluster, mode="optimal",
+                             demand="recalc")
         return done
 
     # -------------------------------------------------------- reconfiguration
@@ -256,8 +250,11 @@ class StopAndWaitController:
         allocatable share — when a link can no longer carry a job's full
         demand, even a perfectly rotated comm phase stretches, and the
         A_T/O_T drift rule must not fight that unavoidable slowdown with
-        realign pauses.  Returns the number of schemes re-derived (0 when
-        reconfiguration is disabled or no scheme lives on the link)."""
+        realign pauses.  The planner's conflict resolution applies to the
+        re-derived scheme too: when the new per-link solution disagrees
+        with the schemes of other links the jobs traverse, the component is
+        re-solved jointly.  Returns the number of schemes re-derived (0
+        when reconfiguration is disabled or no scheme lives on the link)."""
         state = self.links.get(link_id)
         if not self.reconfigure or state is None:
             return 0
@@ -416,3 +413,7 @@ class StopAndWaitController:
         if tasks:
             self.set_baseline(job, tasks[0].traffic.period_ms,
                               self._priorities.get(job, 0))
+    # NOTE: the legacy ``_recompute_global_offsets`` (BFS with add_edge
+    # overwrite + uplink-LAST tie-break) is gone; offset resolution lives in
+    # rotation.resolve() and the ablation flag ``joint=False`` preserves the
+    # old tie-break semantics for comparison (bench_rotation.py).

@@ -33,10 +33,12 @@ class RunResult:
 
 
 def make_plugin(name: str, controller: Optional[StopAndWaitController] = None,
-                rotation_mode: str = "intermediate") -> SchedulerPlugin:
+                rotation_mode: str = "intermediate",
+                rotation_joint: bool = True) -> SchedulerPlugin:
     if name == "metronome":
         return MetronomePlugin(controller=controller,
-                               rotation_mode=rotation_mode)
+                               rotation_mode=rotation_mode,
+                               joint=rotation_joint)
     if name == "default":
         return DefaultPlugin()
     if name == "diktyo":
@@ -57,6 +59,7 @@ def run_experiment(
     rotation_mode: str = "intermediate",
     events: Sequence = (),
     reconfigure: bool = True,
+    rotation_joint: bool = True,
 ) -> RunResult:
     """Schedule all workloads with the named mechanism, then simulate.
 
@@ -65,10 +68,13 @@ def run_experiment(
     the simulator's dynamic-environment stream (``core/events.py``);
     ``reconfigure=False`` ablates the controller's reconfiguration loop
     (capacity/background changes are then handled only by the drift
-    monitor).  The ``'ideal'`` reference deliberately ignores ``events``
-    (and ``background``/``traffic_changes``): it is the STATIC
-    contention-free bound, so dynamic-snapshot comparisons against it
-    measure fluctuation cost plus contention cost together.
+    monitor).  ``rotation_joint=False`` ablates the fabric-wide joint
+    rotation planner: per-link solves are reconciled with the legacy
+    "uplinks take precedence" tie-break instead (bench_rotation.py).  The
+    ``'ideal'`` reference deliberately ignores ``events`` (and
+    ``background``/``traffic_changes``): it is the STATIC contention-free
+    bound, so dynamic-snapshot comparisons against it measure fluctuation
+    cost plus contention cost together.
     """
     config = config or SimConfig()
     if scheduler == "ideal":
@@ -77,8 +83,10 @@ def run_experiment(
     cl = cluster.copy()
     controller = None
     if scheduler == "metronome":
-        controller = StopAndWaitController(reconfigure=reconfigure)
-    plugin = make_plugin(scheduler, controller, rotation_mode=rotation_mode)
+        controller = StopAndWaitController(reconfigure=reconfigure,
+                                           joint=rotation_joint)
+    plugin = make_plugin(scheduler, controller, rotation_mode=rotation_mode,
+                         rotation_joint=rotation_joint)
     fw = SchedulingFramework(cl, plugin)
 
     accepted, rejected = [], []
@@ -152,7 +160,13 @@ def run_trace_experiment(
 ) -> RunResult:
     """Online (trace) mode: workloads arrive at their submit times, queue
     when the cluster is full, and release capacity on completion — the K8s
-    behavior of the paper's 4 h trace (Fig. 10)."""
+    behavior of the paper's 4 h trace (Fig. 10).
+
+    ``events`` feeds the simulator's dynamic stream; the trace generator's
+    event-driven truncation plugs in here (``trace_to_jobs(...,
+    open_ended=True)`` + ``trace_departure_events``): jobs then end when
+    their :class:`~repro.core.events.JobDeparture` fires — never-admitted
+    jobs depart from the queue — instead of exhausting an iteration cap."""
     config = config or SimConfig()
     if scheduler == "ideal":
         return _run_ideal(cluster, workloads, config)

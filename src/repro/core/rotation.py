@@ -1,0 +1,881 @@
+"""Fabric-wide joint rotation planner — the single producer of rotation
+schemes (paper sections III-B / III-C generalized to multi-tier fabrics).
+
+The paper's offline recalculation (Eqs. 15-18) solves rotation *per link*;
+since the fabric refactor a job can traverse a host link **and** a leaf
+uplink, and reconciling conflicting per-link shifts with a BFS +
+"uplinks take precedence" tie-break (the pre-planner controller) can leave
+a link oversubscribed in time even though each per-link solve was perfect.
+This module replaces that heuristic with one global solve in the spirit of
+CASSINI's affinity-graph formulation: every job receives a **single** circle
+offset that is evaluated simultaneously on every link it traverses.
+
+Layering:
+
+  * :func:`find_feasible_rotation` / :func:`find_optimal_rotation` /
+    :func:`coordinate_descent_rotation` — the per-link solvers (moved here
+    from ``scoring.py``, which now only holds the per-candidate evaluators).
+  * :func:`solve_link` — one link's rotation problem from a
+    :class:`~repro.core.contention.LinkView` (the legacy Score-phase
+    ``_score_link`` generalized over demand conventions).
+  * :func:`joint_solve` — the fabric-wide solve of one affinity component:
+    periods unified over *all* component jobs, per-job shift ranges from
+    Eq. 15 (one range per job — intersecting the per-link ranges of Eq. 15
+    degenerates to the global ``S // mul_p`` once the base circle is
+    shared), reference pinned per Eq. 16, Eq. 18 scored on every link at
+    once (min over links), and Psi (Eq. 9) minimized over links as the
+    multi-link tie-break.  Falls back to coordinate descent over jobs when
+    the joint product space is too large (the paper's own reduction
+    argument).
+  * :func:`resolve` — global-offset resolution over a set of per-link
+    schemes: consistent components keep the per-link solutions and the
+    legacy BFS traversal **bit-for-bit** (star topologies always land
+    here); components whose per-link solutions conflict are re-solved
+    jointly.  ``joint=False`` preserves the legacy last-link-wins
+    reconciliation (uplinks last in the canonical order) as an ablation.
+  * :func:`plan` — the scheduler/controller entry point: per-link solve +
+    conflict resolution in one call.
+
+The joint evaluation is batched: every link's demand bank shares the
+component's pattern matrix and differs only in per-job bandwidth and link
+capacity, which is exactly the stacked ``(L, R, S)`` layout of the
+``kernels.metronome_score`` multi-link core (``backend='kernel'``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import networkx as nx
+import numpy as np
+
+from . import geometry, scoring
+from .contention import LinkView, group_demand_gbps
+from .geometry import DI_PRE
+from .topology import is_uplink
+
+PERFECT = 100.0
+_EPS = 1e-9
+# per-link relative shifts (ms) closer than this are "the same solution"
+REL_TOL_MS = 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Results
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RotationResult:
+    score: float
+    shifts: np.ndarray  # (P,) integer slot shifts theta_{l,p}
+    perfect: bool
+    psi: float = 0.0  # min communication interval of the chosen scheme
+    n_evaluated: int = 0
+
+
+@dataclasses.dataclass
+class LinkScheme:
+    """Rotation scheme of one fabric link (host link id == node name,
+    uplinks ``uplink:<leaf>``)."""
+
+    jobs: List[str]  # job order used in the rotation problem
+    shifts_slots: np.ndarray  # theta per job (slots)
+    base_ms: float
+    muls: np.ndarray
+    score: float
+    early_return: bool
+    injected_ms: Dict[str, float]  # E_T idle injection per job
+    ref_job: str = ""
+
+
+@dataclasses.dataclass
+class PlanResult:
+    """Output of :func:`plan` / :func:`resolve`.
+
+    ``schemes`` maps every contended link to its scheme (per-link solution
+    for consistent components, the joint solution restricted to the link's
+    jobs otherwise); ``offsets_ms`` is the global circle offset per job;
+    ``score`` the worst per-link Eq. 18 score; ``joint_links`` which links
+    were re-solved jointly (empty whenever the per-link solutions already
+    agree — always on star topologies)."""
+
+    schemes: Dict[str, LinkScheme]
+    offsets_ms: Dict[str, float]
+    score: float
+    feasible: bool
+    joint_links: List[str]
+    n_evaluated: int = 0
+
+
+def priority_order(registry, jobs: Sequence[str]) -> List[str]:
+    """Jobs by (priority desc, deployment order asc) — Eq. 16's reference
+    semantics; index 0 is the pinned reference."""
+    def key(j: str):
+        job = registry.jobs.get(j)
+        prio = job.priority if job else 0
+        sub = job.submit_time_s if job else 0.0
+        return (-prio, sub, j)
+    return sorted(jobs, key=key)
+
+
+# ---------------------------------------------------------------------------
+# Per-link solvers (section III-B / III-C, single link)
+# ---------------------------------------------------------------------------
+
+def find_feasible_rotation(
+    patterns: np.ndarray,
+    bw: Sequence[float],
+    capacity: float,
+    muls: Sequence[int],
+    ref_index: int = 0,
+    n_slots: int = DI_PRE,
+    chunk: int = 4096,
+    max_exhaustive: int = 1 << 22,
+    mode: str = "intermediate",
+) -> RotationResult:
+    """Score-phase fast path (Algorithm 1, Score extension point).
+
+    Traverses combos lexicographically and stops at the first maximal run of
+    perfect scores, returning the scheme at the run's middle index. Falls
+    back to the best seen score when no perfect combo exists.
+
+    ``mode='compact'`` is the paper's 3rd-stage ABLATION (section IV-C):
+    take the first index of the perfect run (comm phases packed
+    back-to-back, no cushion slots) instead of the middle.
+    """
+    bw = np.asarray(bw, dtype=np.float64)
+    ranges = scoring.shift_ranges(muls, ref_index, n_slots)
+    n_total = scoring.total_combos(ranges)
+    if n_total > max_exhaustive:
+        return coordinate_descent_rotation(
+            patterns, bw, capacity, muls, ref_index, n_slots
+        )
+    bank = scoring.rolled_bank(patterns, ranges)
+
+    best_score = -1.0
+    best_combo = np.zeros(len(ranges), dtype=np.int64)
+    run_start = None  # start index of the current perfect run
+    n_eval = 0
+    pos = 0
+    while pos < n_total:
+        cnt = min(chunk, n_total - pos)
+        combos = scoring.lex_combos(ranges, pos, cnt)
+        scores = scoring.score_combos(patterns, bw, capacity, combos, bank)
+        n_eval += cnt
+        is_perfect = scores >= PERFECT - _EPS
+        for j in range(cnt):
+            if is_perfect[j]:
+                if run_start is None:
+                    run_start = pos + j
+            else:
+                if run_start is not None:
+                    # first perfect run ended at pos+j-1 -> return middle
+                    # (or the run's edge in the no-cushion ablation)
+                    mid = (run_start if mode == "compact"
+                           else (run_start + pos + j - 1) // 2)
+                    shifts = scoring.lex_combos(ranges, mid, 1)[0]
+                    return RotationResult(
+                        PERFECT, shifts, True,
+                        scoring.scheme_psi(patterns, bw, capacity, muls,
+                                           shifts, n_slots),
+                        n_eval)
+                if scores[j] > best_score:
+                    best_score = float(scores[j])
+                    best_combo = combos[j]
+        pos += cnt
+    if run_start is not None:  # perfect run extends to the end
+        mid = (run_start if mode == "compact"
+               else (run_start + n_total - 1) // 2)
+        shifts = scoring.lex_combos(ranges, mid, 1)[0]
+        return RotationResult(
+            PERFECT, shifts, True,
+            scoring.scheme_psi(patterns, bw, capacity, muls, shifts, n_slots),
+            n_eval)
+    return RotationResult(
+        best_score, best_combo, False,
+        scoring.scheme_psi(patterns, bw, capacity, muls, best_combo, n_slots),
+        n_eval)
+
+
+def find_optimal_rotation(
+    patterns: np.ndarray,
+    bw: Sequence[float],
+    capacity: float,
+    muls: Sequence[int],
+    ref_index: int = 0,
+    n_slots: int = DI_PRE,
+    chunk: int = 8192,
+    max_exhaustive: int = 1 << 22,
+    scorer: Optional[Callable[[np.ndarray], np.ndarray]] = None,
+) -> RotationResult:
+    """Offline recalculation (3rd optimization stage), section III-C.
+
+    Enumerates all rotation schemes; candidate set = middle indices of all
+    perfect-score runs (the paper's search-space narrowing); among candidates
+    maximizes Psi (Eq. 9). ``scorer`` may override the combo scorer (used to
+    plug in the Pallas kernel).
+    """
+    bw = np.asarray(bw, dtype=np.float64)
+    ranges = scoring.shift_ranges(muls, ref_index, n_slots)
+    n_total = scoring.total_combos(ranges)
+    if n_total > max_exhaustive:
+        return coordinate_descent_rotation(
+            patterns, bw, capacity, muls, ref_index, n_slots, optimize_psi=True
+        )
+    bank = scoring.rolled_bank(patterns, ranges)
+
+    candidates: List[int] = []
+    best_score = -1.0
+    best_idx = 0
+    run_start = None
+    pos = 0
+    while pos < n_total:
+        cnt = min(chunk, n_total - pos)
+        combos = scoring.lex_combos(ranges, pos, cnt)
+        if scorer is not None:
+            scores = np.asarray(scorer(combos))
+        else:
+            scores = scoring.score_combos(patterns, bw, capacity, combos, bank)
+        is_perfect = scores >= PERFECT - _EPS
+        for j in range(cnt):
+            gi = pos + j
+            if is_perfect[j]:
+                if run_start is None:
+                    run_start = gi
+            else:
+                if run_start is not None:
+                    candidates.append((run_start + gi - 1) // 2)
+                    run_start = None
+                if scores[j] > best_score:
+                    best_score = float(scores[j])
+                    best_idx = gi
+        pos += cnt
+    if run_start is not None:
+        candidates.append((run_start + n_total - 1) // 2)
+
+    if not candidates:
+        shifts = scoring.lex_combos(ranges, best_idx, 1)[0]
+        return RotationResult(
+            best_score, shifts, False,
+            scoring.scheme_psi(patterns, bw, capacity, muls, shifts, n_slots),
+            n_total)
+
+    # stage 3: among perfect-run midpoints maximize Psi
+    best_psi = -1.0
+    best_shifts = None
+    for c in candidates:
+        shifts = scoring.lex_combos(ranges, c, 1)[0]
+        psi = scoring.scheme_psi(patterns, bw, capacity, muls, shifts, n_slots)
+        if psi > best_psi:
+            best_psi = psi
+            best_shifts = shifts
+    return RotationResult(PERFECT, best_shifts, True, best_psi, n_total)
+
+
+def coordinate_descent_rotation(
+    patterns: np.ndarray,
+    bw: np.ndarray,
+    capacity: float,
+    muls: Sequence[int],
+    ref_index: int,
+    n_slots: int = DI_PRE,
+    optimize_psi: bool = False,
+    sweeps: int = 4,
+) -> RotationResult:
+    """Large combo spaces: hold all but one pod fixed (paper's reduction)."""
+    bw = np.asarray(bw, dtype=np.float64)
+    p = patterns.shape[0]
+    ranges = scoring.shift_ranges(muls, ref_index, n_slots)
+    shifts = np.zeros(p, dtype=np.int64)
+    n_eval = 0
+    for _ in range(sweeps):
+        changed = False
+        for i in range(p):
+            if i == ref_index or ranges[i] <= 1:
+                continue
+            cands = np.tile(shifts, (ranges[i], 1))
+            cands[:, i] = np.arange(ranges[i])
+            scores = scoring.score_combos(patterns, bw, capacity, cands)
+            n_eval += ranges[i]
+            best = scores.max()
+            mask = scores >= best - _EPS
+            if optimize_psi and best >= PERFECT - _EPS:
+                # pick the perfect shift maximizing Psi
+                idxs = np.nonzero(mask)[0]
+                psis = [
+                    scoring.scheme_psi(patterns, bw, capacity, muls, cands[k],
+                                       n_slots)
+                    for k in idxs
+                ]
+                pick = int(idxs[int(np.argmax(psis))])
+            else:
+                # middle of the first perfect/best run
+                idxs = np.nonzero(mask)[0]
+                runs = np.split(idxs, np.where(np.diff(idxs) != 1)[0] + 1)
+                pick = int(runs[0][len(runs[0]) // 2])
+            if pick != shifts[i]:
+                shifts[i] = pick
+                changed = True
+        if not changed:
+            break
+    final = scoring.score_combos(patterns, bw, capacity, shifts[None, :])[0]
+    return RotationResult(
+        float(final), shifts, final >= PERFECT - _EPS,
+        scoring.scheme_psi(patterns, bw, capacity, muls, shifts, n_slots),
+        n_eval)
+
+
+# ---------------------------------------------------------------------------
+# One link's rotation problem from the LinkView
+# ---------------------------------------------------------------------------
+
+def _link_demands(view: LinkView, link_id: str, jobs: Sequence[str],
+                  demand: str) -> List[float]:
+    """Per-job demand on one link under the named convention.
+
+    ``'planning'`` — the Score-phase view (the link's grouped tasks);
+    ``'recalc'``  — the controller's offline-recalculation view (whole-job
+    demand on host links; see :meth:`LinkView.recalc_demands`)."""
+    if demand == "recalc":
+        return view.recalc_demands(link_id, jobs)
+    groups = view.link_groups(link_id)
+    return [group_demand_gbps(groups.get(j, [])) for j in jobs]
+
+
+def solve_link(
+    view: LinkView,
+    registry,
+    link_id: str,
+    *,
+    self_job: Optional[str] = None,
+    mode: str = "fast",
+    demand: str = "planning",
+    di_pre: int = DI_PRE,
+    g_t_ms: float = 5.0,
+    e_t_frac: float = 0.10,
+    rotation_mode: str = "intermediate",
+) -> Tuple[float, Optional[LinkScheme]]:
+    """One link's rotation problem. Returns (score, scheme); scheme is None
+    on the early-return paths (empty link, only the candidate's own job, or
+    aggregate demand within capacity — no contention to solve)."""
+    groups = view.link_groups(link_id)
+    cap = view.cluster.link_alloc(link_id)
+    total_bw = sum(group_demand_gbps(ts) for ts in groups.values())
+    only_self = self_job is not None and list(groups.keys()) == [self_job]
+    if not groups or only_self or total_bw <= cap:
+        return PERFECT, None
+
+    # --- two-dimensional bandwidth scheduling: interleave phases -----------
+    jobs = priority_order(registry, groups.keys())
+    ref_index = 0  # highest priority (ties: earliest) — Eq. 16
+    periods = []
+    prios = []
+    for j in jobs:
+        ts = groups[j]
+        periods.append(ts[0].traffic.period_ms)
+        job = registry.jobs.get(j)
+        prios.append(job.priority if job else 0)
+    unified = geometry.unify_periods(
+        periods, prios, g_t_ms=g_t_ms, e_t_frac=e_t_frac
+    )
+    duties = []
+    for idx, j in enumerate(jobs):
+        spec = groups[j][0].traffic
+        # idle injection stretches the period -> duty shrinks (comm time
+        # m_p is unchanged); this is the E_T mechanism's second insight.
+        duties.append(min(1.0, spec.comm_ms / unified.periods_ms[idx]))
+    bws = _link_demands(view, link_id, jobs, demand)
+    patterns = geometry.pattern_matrix(unified.muls, duties, di_pre)
+    if mode == "optimal":
+        result = find_optimal_rotation(patterns, bws, cap, unified.muls,
+                                       ref_index, di_pre)
+    else:
+        result = find_feasible_rotation(patterns, bws, cap, unified.muls,
+                                        ref_index, di_pre,
+                                        mode=rotation_mode)
+    scheme = LinkScheme(
+        jobs=jobs,
+        shifts_slots=result.shifts,
+        base_ms=unified.base_ms,
+        muls=unified.muls,
+        score=float(result.score),
+        early_return=False,
+        injected_ms={j: float(unified.injected_ms[i])
+                     for i, j in enumerate(jobs)},
+        ref_job=jobs[ref_index],
+    )
+    return float(result.score), scheme
+
+
+def replan_link(view: LinkView, link_id: str, scheme: LinkScheme,
+                capacity: float, di_pre: int = DI_PRE) -> RotationResult:
+    """Offline 3rd-stage re-solve of one EXISTING scheme (the controller's
+    pending-recalc path): keep the scheme's job order / unified base, re-read
+    demand from the live view under the recalc convention, maximize Psi."""
+    duties, bws = view.recalc_traffic(link_id, scheme.jobs, scheme.muls,
+                                      scheme.base_ms)
+    patterns = geometry.pattern_matrix(scheme.muls, duties, di_pre)
+    ref_index = (scheme.jobs.index(scheme.ref_job)
+                 if scheme.ref_job in scheme.jobs else 0)
+    return find_optimal_rotation(patterns, bws, capacity, scheme.muls,
+                                 ref_index, di_pre)
+
+
+# ---------------------------------------------------------------------------
+# Joint multi-link solve (one affinity component)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class JointResult:
+    jobs: List[str]
+    shifts: np.ndarray  # (P,) global slot shifts
+    base_ms: float
+    muls: np.ndarray
+    schemes: Dict[str, LinkScheme]  # per link, restricted to its jobs
+    offsets_ms: Dict[str, float]
+    score: float  # min over links
+    psi: float  # min over links (Eq. 9)
+    feasible: bool
+    n_evaluated: int = 0
+
+
+def _min_link_scores(patterns: np.ndarray, bw_lp: np.ndarray,
+                     caps: np.ndarray, combos: np.ndarray,
+                     banks) -> np.ndarray:
+    """(K,) joint score: Eq. 18 evaluated on every link, min over links."""
+    out = None
+    for li in range(len(caps)):
+        s = scoring.score_combos(patterns, bw_lp[li], float(caps[li]),
+                                 combos, banks)
+        out = s if out is None else np.minimum(out, s)
+    return out
+
+
+def _kernel_joint_scores(patterns: np.ndarray, bw_lp: np.ndarray,
+                         caps: np.ndarray, ranges: Sequence[int],
+                         banks) -> Optional[np.ndarray]:
+    """Batched multi-link evaluation of the FULL combo space via the
+    stacked (L, R, S) kernel; None when the space has != 2 free jobs
+    (the pairwise product layout does not apply)."""
+    free = [i for i, r in enumerate(ranges) if r > 1]
+    if len(free) != 2:
+        return None
+    from repro.kernels import ops as kops  # deferred: jax import is heavy
+    pa, pb = free
+    l, p = bw_lp.shape
+    s = patterns.shape[1]
+    base = np.zeros((l, s))
+    for i in range(p):
+        if i not in (pa, pb):
+            base += bw_lp[:, i:i + 1] * patterns[i][None, :]
+    bank_a = bw_lp[:, pa, None, None] * banks[pa][None, :, :]  # (L, Ra, S)
+    bank_b = bw_lp[:, pb, None, None] * banks[pb][None, :, :]  # (L, Rb, S)
+    scores = kops.score_multilink(base, bank_a, bank_b, np.asarray(caps))
+    # C-order flatten == lexicographic combo order (free job a is the more
+    # significant digit; every other range is 1)
+    return np.asarray(scores).reshape(-1)
+
+
+def _perfect_runs(perfect: np.ndarray) -> List[Tuple[int, int]]:
+    """[(start, end)] of every maximal run of True, vectorized."""
+    idx = np.flatnonzero(perfect)
+    if idx.size == 0:
+        return []
+    brk = np.flatnonzero(np.diff(idx) != 1)
+    starts = np.concatenate(([idx[0]], idx[brk + 1]))
+    ends = np.concatenate((idx[brk], [idx[-1]]))
+    return list(zip(starts.tolist(), ends.tolist()))
+
+
+def joint_solve(
+    view: LinkView,
+    registry,
+    links: Sequence[str],
+    *,
+    jobs: Optional[Sequence[str]] = None,
+    mode: str = "fast",
+    demand: str = "planning",
+    rotation_mode: str = "intermediate",
+    di_pre: int = DI_PRE,
+    g_t_ms: float = 5.0,
+    e_t_frac: float = 0.10,
+    backend: str = "numpy",
+    max_exhaustive: int = 1 << 22,
+    chunk: int = 8192,
+) -> Optional[JointResult]:
+    """Solve one affinity component jointly over every link it touches.
+
+    One global shift per job; Eq. 18 evaluated simultaneously on all links
+    (min over links), Eq. 15 ranges on the shared base circle, Eq. 16
+    reference pinned, Eq. 9 Psi (min over links) as the tie-break among
+    perfect-run midpoints in ``mode='optimal'``; ``mode='fast'`` returns the
+    middle of the first jointly perfect run (``rotation_mode='compact'`` is
+    the no-cushion ablation).  Returns None when a job has no tasks in the
+    view (stale scheme — the caller falls back to the BFS merge)."""
+    groups_by_link = {l: view.link_groups(l) for l in links}
+    if jobs is None:
+        seen: Dict[str, None] = {}
+        for l in links:
+            for j in groups_by_link[l]:
+                seen[j] = None
+        jobs = list(seen)
+    jobs = priority_order(registry, jobs)
+    if not jobs:
+        return None
+    specs = []
+    for j in jobs:
+        ts = view.job_tasks(j)
+        if not ts:
+            return None
+        specs.append(ts[0].traffic)
+    prios = []
+    for j in jobs:
+        job = registry.jobs.get(j)
+        prios.append(job.priority if job else 0)
+    unified = geometry.unify_periods([s.period_ms for s in specs], prios,
+                                     g_t_ms=g_t_ms, e_t_frac=e_t_frac)
+    duties = [min(1.0, specs[i].comm_ms / unified.periods_ms[i])
+              for i in range(len(jobs))]
+    patterns = geometry.pattern_matrix(unified.muls, duties, di_pre)
+    ranges = scoring.shift_ranges(unified.muls, 0, di_pre)
+    caps = np.array([view.cluster.link_alloc(l) for l in links])
+    bw_lp = np.zeros((len(links), len(jobs)))
+    for li, l in enumerate(links):
+        dmds = _link_demands(view, l, jobs, demand)
+        present = groups_by_link[l]
+        for pi, j in enumerate(jobs):
+            bw_lp[li, pi] = dmds[pi] if j in present else 0.0
+
+    n_total = scoring.total_combos(ranges)
+    banks = scoring.rolled_bank(patterns, ranges)
+
+    def psi_of(shifts: np.ndarray) -> float:
+        return min(
+            scoring.scheme_psi(patterns, bw_lp[li], float(caps[li]),
+                               unified.muls, shifts, di_pre)
+            for li in range(len(links))
+        )
+
+    if n_total > max_exhaustive:
+        result = _joint_coordinate_descent(
+            patterns, bw_lp, caps, unified.muls, ranges, psi_of,
+            optimize_psi=(mode == "optimal"))
+    else:
+        result = _joint_exhaustive(
+            patterns, bw_lp, caps, ranges, banks, psi_of,
+            mode=mode, rotation_mode=rotation_mode,
+            backend=backend, chunk=chunk)
+
+    shifts = result.shifts
+    delays = geometry.shifts_to_delay_ms(shifts, unified.base_ms, di_pre)
+    offsets = {j: float(d) for j, d in zip(jobs, delays)}
+    schemes: Dict[str, LinkScheme] = {}
+    link_scores: List[float] = []
+    for li, l in enumerate(links):
+        on_link = [pi for pi, j in enumerate(jobs) if j in groups_by_link[l]]
+        sc = float(scoring.score_combos(
+            patterns, bw_lp[li], float(caps[li]), shifts[None, :])[0])
+        link_scores.append(sc)
+        link_jobs = [jobs[pi] for pi in on_link]
+        ref = link_jobs[0] if link_jobs else ""
+        schemes[l] = LinkScheme(
+            jobs=link_jobs,
+            shifts_slots=shifts[on_link].copy(),
+            base_ms=float(unified.base_ms),
+            muls=unified.muls[on_link].copy(),
+            score=sc,
+            early_return=False,
+            injected_ms={jobs[pi]: float(unified.injected_ms[pi])
+                         for pi in on_link},
+            ref_job=ref,
+        )
+    worst = min(link_scores) if link_scores else PERFECT
+    return JointResult(
+        jobs=list(jobs), shifts=shifts, base_ms=float(unified.base_ms),
+        muls=unified.muls, schemes=schemes, offsets_ms=offsets,
+        score=worst, psi=result.psi, feasible=worst >= PERFECT - _EPS,
+        n_evaluated=result.n_evaluated,
+    )
+
+
+def _joint_exhaustive(patterns, bw_lp, caps, ranges, banks, psi_of, *,
+                      mode, rotation_mode, backend, chunk) -> RotationResult:
+    n_total = scoring.total_combos(ranges)
+    joint_all = None
+    if backend == "kernel":
+        joint_all = _kernel_joint_scores(patterns, bw_lp, caps, ranges, banks)
+
+    candidates: List[int] = []
+    best_score = -1.0
+    best_idx = 0
+    run_start: Optional[int] = None  # global start of an open perfect run
+    n_eval = 0
+
+    def _close(start: int, end: int) -> Optional[RotationResult]:
+        """A maximal perfect run [start, end] is complete (global indices)."""
+        if mode == "fast":
+            mid = (start if rotation_mode == "compact"
+                   else (start + end) // 2)
+            shifts = scoring.lex_combos(ranges, mid, 1)[0]
+            return RotationResult(PERFECT, shifts, True, psi_of(shifts),
+                                  n_eval)
+        candidates.append((start + end) // 2)
+        return None
+
+    pos = 0
+    while pos < n_total:
+        cnt = n_total if joint_all is not None else min(chunk, n_total - pos)
+        if joint_all is not None:
+            js = joint_all
+        else:
+            combos = scoring.lex_combos(ranges, pos, cnt)
+            js = _min_link_scores(patterns, bw_lp, caps, combos, banks)
+        n_eval += cnt * len(caps)
+        perfect = js >= PERFECT - _EPS
+        # vectorized run scan (replaces the per-combo Python loop of the
+        # per-link solvers — see benchmarks/bench_rotation.py)
+        runs = _perfect_runs(perfect)
+        if run_start is not None:
+            if runs and runs[0][0] == 0:
+                start0, end0 = runs.pop(0)
+                if end0 == cnt - 1 and pos + cnt < n_total:
+                    pass  # run still open into the next chunk
+                else:
+                    done = _close(run_start, pos + end0)
+                    if done is not None:
+                        return done
+                    run_start = None
+            else:
+                done = _close(run_start, pos - 1)
+                if done is not None:
+                    return done
+                run_start = None
+        for start, end in runs:
+            if end == cnt - 1 and pos + cnt < n_total:
+                run_start = pos + start  # continues into the next chunk
+            else:
+                done = _close(pos + start, pos + end)
+                if done is not None:
+                    return done
+        imperfect = ~perfect
+        if imperfect.any():
+            local_best = int(np.argmax(np.where(imperfect, js, -np.inf)))
+            if js[local_best] > best_score:
+                best_score = float(js[local_best])
+                best_idx = pos + local_best
+        pos += cnt
+    if run_start is not None:
+        done = _close(run_start, n_total - 1)
+        if done is not None:
+            return done
+
+    if mode == "optimal" and candidates:
+        best_psi = -1.0
+        best_shifts = None
+        for c in candidates:
+            shifts = scoring.lex_combos(ranges, c, 1)[0]
+            psi = psi_of(shifts)
+            if psi > best_psi:
+                best_psi = psi
+                best_shifts = shifts
+        return RotationResult(PERFECT, best_shifts, True, best_psi, n_eval)
+    shifts = scoring.lex_combos(ranges, best_idx, 1)[0]
+    return RotationResult(best_score, shifts, False, psi_of(shifts), n_eval)
+
+
+def _joint_coordinate_descent(patterns, bw_lp, caps, muls, ranges, psi_of, *,
+                              optimize_psi, sweeps: int = 4) -> RotationResult:
+    """Coordinate descent over jobs with the joint (min-over-links) score."""
+    p = patterns.shape[0]
+    shifts = np.zeros(p, dtype=np.int64)
+    n_eval = 0
+    for _ in range(sweeps):
+        changed = False
+        for i in range(p):
+            if ranges[i] <= 1:
+                continue
+            cands = np.tile(shifts, (ranges[i], 1))
+            cands[:, i] = np.arange(ranges[i])
+            js = _min_link_scores(patterns, bw_lp, caps, cands, None)
+            n_eval += ranges[i] * len(caps)
+            best = js.max()
+            mask = js >= best - _EPS
+            idxs = np.nonzero(mask)[0]
+            if optimize_psi and best >= PERFECT - _EPS:
+                psis = [psi_of(cands[k]) for k in idxs]
+                pick = int(idxs[int(np.argmax(psis))])
+            else:
+                runs = np.split(idxs, np.where(np.diff(idxs) != 1)[0] + 1)
+                pick = int(runs[0][len(runs[0]) // 2])
+            if pick != shifts[i]:
+                shifts[i] = pick
+                changed = True
+        if not changed:
+            break
+    final = _min_link_scores(patterns, bw_lp, caps, shifts[None, :], None)[0]
+    return RotationResult(float(final), shifts, final >= PERFECT - _EPS,
+                          psi_of(shifts), n_eval)
+
+
+# ---------------------------------------------------------------------------
+# Global resolution: consistent BFS merge or joint re-solve per component
+# ---------------------------------------------------------------------------
+
+def resolve(
+    schemes: Dict[str, LinkScheme],
+    priorities: Dict[str, int],
+    view: Optional[LinkView],
+    registry=None,
+    *,
+    di_pre: int = DI_PRE,
+    mode: str = "fast",
+    demand: str = "planning",
+    g_t_ms: float = 5.0,
+    e_t_frac: float = 0.10,
+    rotation_mode: str = "intermediate",
+    joint: bool = True,
+    backend: str = "numpy",
+) -> PlanResult:
+    """Assign each job one global circle offset from a set of per-link
+    schemes (Cassini-style affinity graph anchored at the highest-priority
+    job — the paper's difference vs Cassini's random reference, Eq. 16).
+
+    Components whose per-link relative shifts all agree keep their schemes
+    and the BFS traversal of the pre-planner controller bit-for-bit.  A
+    component with CONFLICTING per-link shifts is re-solved jointly from the
+    live ``view`` (``joint=True``); with ``joint=False`` — or when no view
+    is available — the legacy reconciliation applies: links are traversed
+    in canonical order (host links sorted, uplinks LAST) and the last
+    writer wins, i.e. the most oversubscribed tier takes precedence."""
+    g = nx.Graph()
+    link_shift_ms: Dict[Tuple[str, str], float] = {}
+    # canonical deterministic construction order (sorted hosts, uplinks
+    # last): for consistent components any order gives the same offsets;
+    # for the joint=False ablation it reproduces the legacy tie-break.
+    ordered = sorted(schemes.items(), key=lambda kv: (is_uplink(kv[0]), kv[0]))
+    for link_id, sch in ordered:
+        delays = geometry.shifts_to_delay_ms(sch.shifts_slots, sch.base_ms,
+                                             di_pre)
+        for j, d in zip(sch.jobs, delays):
+            link_shift_ms[(link_id, j)] = float(d)
+            g.add_node(j)
+        for i in range(len(sch.jobs)):
+            for k in range(i + 1, len(sch.jobs)):
+                a, b = sch.jobs[i], sch.jobs[k]
+                rel = (link_shift_ms[(link_id, b)]
+                       - link_shift_ms[(link_id, a)])
+                if g.has_edge(a, b):
+                    if g[a][b]["src"] != a:
+                        rel = -rel
+                    g[a][b]["rels"].append(rel)
+                else:
+                    g.add_edge(a, b, rels=[rel], src=a)
+
+    offsets: Dict[str, float] = {}
+    joint_links: List[str] = []
+    new_schemes: Dict[str, LinkScheme] = dict(schemes)
+    n_eval = 0
+    for comp in nx.connected_components(g):
+        comp = set(comp)
+        sub = g.subgraph(comp)
+        conflicted = any(
+            max(d["rels"]) - min(d["rels"]) > REL_TOL_MS
+            for _, _, d in sub.edges(data=True)
+        )
+        if conflicted and joint and view is not None and registry is not None:
+            comp_links = [lid for lid, sch in schemes.items()
+                          if any(j in comp for j in sch.jobs)]
+            jr = joint_solve(
+                view, registry, comp_links, mode=mode, demand=demand,
+                rotation_mode=rotation_mode, di_pre=di_pre, g_t_ms=g_t_ms,
+                e_t_frac=e_t_frac, backend=backend,
+            )
+            if jr is not None:
+                offsets.update(jr.offsets_ms)
+                new_schemes.update(jr.schemes)
+                joint_links.extend(comp_links)
+                n_eval += jr.n_evaluated
+                continue
+        # consistent component (or legacy fallback): BFS from the
+        # highest-priority reference; the last rel in canonical order is
+        # the edge value (== the only value when consistent).
+        comp_list = list(comp)
+        ref = sorted(comp_list,
+                     key=lambda j: (-priorities.get(j, 0), j))[0]
+        offsets[ref] = 0.0
+        for u, v in nx.bfs_edges(g, ref):
+            rel = g[u][v]["rels"][-1]
+            if g[u][v]["src"] != u:
+                rel = -rel
+            offsets[v] = offsets[u] + rel
+
+    scores = [sch.score for sch in new_schemes.values()]
+    worst = min(scores) if scores else PERFECT
+    return PlanResult(
+        schemes=new_schemes, offsets_ms=offsets, score=worst,
+        feasible=worst >= PERFECT - _EPS, joint_links=joint_links,
+        n_evaluated=n_eval,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Top-level: per-link solve + conflict resolution in one call
+# ---------------------------------------------------------------------------
+
+def plan(
+    view: LinkView,
+    registry,
+    *,
+    links: Optional[Sequence[str]] = None,
+    self_job: Optional[str] = None,
+    mode: str = "fast",
+    demand: str = "planning",
+    di_pre: int = DI_PRE,
+    g_t_ms: float = 5.0,
+    e_t_frac: float = 0.10,
+    rotation_mode: str = "intermediate",
+    joint: bool = True,
+    backend: str = "numpy",
+) -> PlanResult:
+    """The planner entry point: solve every (given or contended) link, then
+    resolve the per-link solutions into one consistent set of global
+    offsets.  On star topologies — or whenever the per-link solutions
+    already agree — this reduces bit-for-bit to the per-link solve."""
+    link_ids = list(links) if links is not None else view.planning_links()
+    schemes: Dict[str, LinkScheme] = {}
+    worst = PERFECT
+    for lid in link_ids:
+        score, scheme = solve_link(
+            view, registry, lid, self_job=self_job, mode=mode, demand=demand,
+            di_pre=di_pre, g_t_ms=g_t_ms, e_t_frac=e_t_frac,
+            rotation_mode=rotation_mode,
+        )
+        worst = min(worst, score)
+        if scheme is not None:
+            schemes[lid] = scheme
+    if not schemes:
+        return PlanResult(schemes={}, offsets_ms={}, score=worst,
+                          feasible=worst >= PERFECT - _EPS, joint_links=[])
+    if len(schemes) == 1:
+        # single contended link: nothing to resolve — offsets are the
+        # scheme's own delays (BFS from the priority-0 reference would
+        # yield exactly these, ref delay being 0 per Eq. 16)
+        (lid, sch), = schemes.items()
+        delays = geometry.shifts_to_delay_ms(sch.shifts_slots, sch.base_ms,
+                                             di_pre)
+        return PlanResult(
+            schemes=schemes,
+            offsets_ms={j: float(d) for j, d in zip(sch.jobs, delays)},
+            score=worst, feasible=worst >= PERFECT - _EPS, joint_links=[])
+    priorities = {j: (registry.jobs[j].priority if j in registry.jobs else 0)
+                  for sch in schemes.values() for j in sch.jobs}
+    res = resolve(
+        schemes, priorities, view, registry, di_pre=di_pre, mode=mode,
+        demand=demand, g_t_ms=g_t_ms, e_t_frac=e_t_frac,
+        rotation_mode=rotation_mode, joint=joint, backend=backend,
+    )
+    # resolve()'s schemes carry the FINAL per-link scores (a jointly
+    # re-solved component replaces the stale per-link ones); early-return
+    # links contribute exactly PERFECT and cannot lower the worst score
+    return res

@@ -4,7 +4,8 @@ Implements the five extension points:
 
   PreFilter      : latency score Delta_n per node + resource caching
   Filter         : dependency-loop, CPU/MEM/GPU and bandwidth (Eq. 13-14)
-  Score          : Eq. 18 over rotation schemes (1st opt. stage + Eqs. 15-17)
+  Score          : Eq. 18 via the fabric-wide rotation planner (1st opt.
+                   stage + Eqs. 15-17, jointly over every traversed link)
   NormalizeScore : Eq. 19 latency tie-break (2nd opt. stage)
   Reserve        : state update + SEND(shifts, SkipPhaseThree) to controller
 """
@@ -17,28 +18,22 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import networkx as nx
 import numpy as np
 
-from . import geometry, scoring
+from . import geometry, rotation
 from .cluster import Cluster
-from .contention import LinkView, group_demand_gbps
+from .contention import LinkView
 from .framework import ScheduleContext, SchedulerPlugin, TaskRegistry
 from .geometry import DI_PRE
+from .rotation import LinkScheme
 from .workload import Task
 
 PERFECT = 100.0
 
-
-@dataclasses.dataclass
-class LinkScheme:
-    """Result of the Score phase for one candidate node's host link."""
-
-    jobs: List[str]  # job order used in the rotation problem
-    shifts_slots: np.ndarray  # theta per job (slots)
-    base_ms: float
-    muls: np.ndarray
-    score: float
-    early_return: bool
-    injected_ms: Dict[str, float]  # E_T idle injection per job
-    ref_job: str = ""
+# Beyond-paper rack-locality bonus: a candidate that makes the pod's job
+# traverse a spine uplink scores this much below an intra-leaf candidate of
+# equal rotation feasibility — prefer placements that need no uplink
+# rotation at all.  Kept below 1.0 so rotation feasibility (and the
+# dependency-loop cap at 99.0) always dominates the choice.
+RACK_LOCALITY_PENALTY = 0.5
 
 
 @dataclasses.dataclass
@@ -69,12 +64,14 @@ class MetronomePlugin(SchedulerPlugin):
         e_t_frac: float = 0.10,
         di_pre: int = DI_PRE,
         rotation_mode: str = "intermediate",  # 'compact' = stage-3 ablation
+        joint: bool = True,  # False = legacy per-link solve (uplink-wins)
     ) -> None:
         self.controller = controller
         self.g_t_ms = g_t_ms
         self.e_t_frac = e_t_frac
         self.di_pre = di_pre
         self.rotation_mode = rotation_mode
+        self.joint = joint
         self.messages: List[ReserveMessage] = []
 
     # ------------------------------------------------------------------ utils
@@ -84,15 +81,6 @@ class MetronomePlugin(SchedulerPlugin):
         (the single source of truth for groupings/demand — contention.py)."""
         return LinkView.from_registry(cluster, registry, extra=pod,
                                       extra_node=node_name)
-
-    def _priority_order(self, registry: TaskRegistry, jobs: Sequence[str]) -> List[str]:
-        """Sort jobs by (priority desc, deployment order asc)."""
-        def key(j: str):
-            job = registry.jobs.get(j)
-            prio = job.priority if job else 0
-            sub = job.submit_time_s if job else 0.0
-            return (-prio, sub, j)
-        return sorted(jobs, key=key)
 
     # -------------------------------------------------------------- PreFilter
     def pre_filter(self, ctx: ScheduleContext, cluster: Cluster, pod: Task,
@@ -137,15 +125,20 @@ class MetronomePlugin(SchedulerPlugin):
         # so loop-free placements always win ties (see score()).
         return True
 
-    def _creates_dependency_loop(self, view: LinkView, pod: Task) -> bool:
+    def _dependency_loop_closure(self, view: LinkView, pod: Task
+                                 ) -> Tuple[bool, List[str]]:
         """Cassini's affinity-loop filter, restricted to edges that matter.
 
         Only *contending* pairs (the LinkView's Eq. 9 predicate: combined
         demand exceeding the link's allocatable capacity) constrain
         relative rotations; sub-capacity co-location imposes nothing. And a
         pre-existing loop between other jobs is not this pod's problem: we
-        reject the node only when the NEW placement closes a cross-link
+        flag the node only when the NEW placement closes a cross-link
         cycle through the pod's own job.
+
+        Returns ``(loop, closure_links)``: whether such a cycle exists, and
+        every link of the pod's affinity component (the links a joint solve
+        must cover to give the cycle one consistent set of offsets).
         """
         g = nx.Graph()
         for link_id in view.planning_links():
@@ -155,11 +148,18 @@ class MetronomePlugin(SchedulerPlugin):
                 else:
                     g.add_edge(a, b, links={link_id})
         # a 2-job multi-link relation needs only one relative shift, which
-        # the controller resolves deterministically (uplink schemes take
-        # precedence when per-link solutions differ); cross-link cycles of
-        # length >= 3 THROUGH THIS JOB prevent a consistent global offset.
+        # the rotation planner resolves (consistent per-link solutions are
+        # kept; conflicts trigger the joint multi-link solve); cross-link
+        # cycles of length >= 3 THROUGH THIS JOB couple links beyond the
+        # pod's own traversal — only a joint solve over the whole closure
+        # can give them consistent offsets.
         if pod.job not in g:
-            return False
+            return False, []
+        comp = nx.node_connected_component(g, pod.job)
+        closure = {l for u, v, d in g.subgraph(comp).edges(data=True)
+                   for l in d["links"]}
+        closure_links = [l for l in view.planning_links() if l in closure]
+        loop = False
         try:
             for cyc in nx.cycle_basis(g, pod.job):
                 if len(cyc) < 3 or pod.job not in cyc:
@@ -169,107 +169,93 @@ class MetronomePlugin(SchedulerPlugin):
                     links = g[a][b]["links"]
                     common = set(links) if common is None else common & links
                 if not common:
-                    return True
+                    loop = True
+                    break
         except nx.NetworkXError:
             pass
-        return False
+        return loop, closure_links
 
     # ------------------------------------------------------------------ Score
-    def _score_link(self, registry: TaskRegistry, groups: Dict[str, List[Task]],
-                    cap: float, self_job: str
-                    ) -> Tuple[float, Optional[LinkScheme]]:
-        """Rotation-feasibility score of one link under ``groups`` (job ->
-        its tasks sourcing traffic onto the link). Returns (score, scheme);
-        scheme is None on the early-return paths (no contention to solve)."""
-        total_bw = sum(group_demand_gbps(ts) for ts in groups.values())
-        only_self = list(groups.keys()) == [self_job]
-        # early return: empty link or aggregate demand within capacity
-        if not groups or only_self or total_bw <= cap:
-            return PERFECT, None
-
-        # --- two-dimensional bandwidth scheduling: interleave phases -------
-        jobs = self._priority_order(registry, groups.keys())
-        ref_index = 0  # highest priority (ties: earliest) — Eq. 16
-        periods = []
-        prios = []
-        for j in jobs:
-            ts = groups[j]
-            periods.append(ts[0].traffic.period_ms)
-            job = registry.jobs.get(j)
-            prios.append(job.priority if job else 0)
-        unified = geometry.unify_periods(
-            periods, prios, g_t_ms=self.g_t_ms, e_t_frac=self.e_t_frac
-        )
-        duties = []
-        bws = []
-        for idx, j in enumerate(jobs):
-            ts = groups[j]
-            spec = ts[0].traffic
-            # idle injection stretches the period -> duty shrinks (comm time
-            # m_p is unchanged); this is the E_T mechanism's second insight.
-            eff_period = unified.periods_ms[idx]
-            duties.append(min(1.0, spec.comm_ms / eff_period))
-            bws.append(group_demand_gbps(ts))
-        patterns = geometry.pattern_matrix(unified.muls, duties, self.di_pre)
-        result = scoring.find_feasible_rotation(
-            patterns, bws, cap, unified.muls, ref_index,
-            self.di_pre, mode=self.rotation_mode,
-        )
-        scheme = LinkScheme(
-            jobs=jobs,
-            shifts_slots=result.shifts,
-            base_ms=unified.base_ms,
-            muls=unified.muls,
-            score=float(result.score),
-            early_return=False,
-            injected_ms={j: float(unified.injected_ms[i]) for i, j in enumerate(jobs)},
-            ref_job=jobs[ref_index],
-        )
-        return float(result.score), scheme
-
     def score(self, ctx: ScheduleContext, cluster: Cluster, pod: Task,
               node_name: str, registry: TaskRegistry) -> float:
-        node = cluster.node(node_name)
         schemes: Dict[str, Dict[str, LinkScheme]] = ctx.cache.setdefault(
             "schemes", {})
+        rot_scores: Dict[str, float] = ctx.cache.setdefault("rot_score", {})
 
         # early return 1: LowComm pod — communication need not be guaranteed
         if pod.low_comm:
             ctx.cache.setdefault("early", {})[node_name] = True
+            rot_scores[node_name] = PERFECT
             return PERFECT
 
-        # every link the placement would traverse gets its own rotation
-        # problem; the node's bandwidth score is the worst of them
+        # the planner's fast feasible path over every link the placement
+        # would traverse: host link + uplinks, solved per link and resolved
+        # jointly when the per-link solutions conflict; the node's
+        # bandwidth score is the worst link score
         view = self._candidate_view(cluster, pod, node_name, registry)
-        link_schemes: Dict[str, LinkScheme] = {}
-        worst, host_scheme = self._score_link(
-            registry, view.host_groups(node_name), node.alloc_bw, pod.job)
-        if host_scheme is not None:
-            link_schemes[node_name] = host_scheme
-        for leaf in view.traversed_uplinks(pod.job):
-            up = cluster.topology.uplinks[leaf]
-            uscore, uscheme = self._score_link(
-                registry, view.uplink_groups(leaf), up.alloc_bw, pod.job)
-            worst = min(worst, uscore)
-            if uscheme is not None:
-                link_schemes[up.id] = uscheme
+        links = [node_name] + [
+            cluster.topology.uplinks[leaf].id
+            for leaf in view.traversed_uplinks(pod.job)
+        ]
+        plan = rotation.plan(
+            view, registry, links=links, self_job=pod.job, mode="fast",
+            demand="planning", di_pre=self.di_pre, g_t_ms=self.g_t_ms,
+            e_t_frac=self.e_t_frac, rotation_mode=self.rotation_mode,
+            joint=self.joint,
+        )
+        link_schemes = plan.schemes
+        worst = plan.score
 
         if not link_schemes:
-            # no contention on any traversed link
+            # no contention on any traversed link — still prefer intra-leaf
+            # placements before any uplink rotation is even needed
             ctx.cache.setdefault("early", {})[node_name] = True
-            return PERFECT
+            rot_scores[node_name] = PERFECT
+            return PERFECT - self._rack_penalty(view, pod)
 
-        # cross-link dependency loop: the computed rotation cannot be made
-        # globally consistent -> cap below perfect (loop-free nodes win).
-        # The schemes keep the RAW rotation scores: the loop cap only
-        # demotes the NODE choice; the controller's realign guard needs to
-        # know whether an interleave actually exists on each link.
-        if self._creates_dependency_loop(view, pod):
-            worst = min(worst, 99.0)
+        # cross-link dependency loop: the per-link rotations cannot be made
+        # globally consistent by offset translation alone.  With the joint
+        # planner the cycle is SOLVABLE: re-plan over the affinity
+        # component's full link closure and let the joint score speak (a
+        # genuinely infeasible cycle scores below perfect by itself).  In
+        # legacy mode (joint=False) keep the old cap below perfect so
+        # loop-free placements win ties.  The schemes keep the RAW rotation
+        # scores either way: the controller's realign guard needs to know
+        # whether an interleave actually exists on each link.
+        loop, closure = self._dependency_loop_closure(view, pod)
+        if loop:
+            if self.joint:
+                wanted = set(closure) | set(links)
+                plan_links = [l for l in view.planning_links() if l in wanted]
+                jplan = rotation.plan(
+                    view, registry, links=plan_links,
+                    self_job=pod.job, mode="fast", demand="planning",
+                    di_pre=self.di_pre, g_t_ms=self.g_t_ms,
+                    e_t_frac=self.e_t_frac, rotation_mode=self.rotation_mode,
+                    joint=True,
+                )
+                if jplan.schemes:
+                    link_schemes = jplan.schemes
+                    worst = jplan.score
+            else:
+                worst = min(worst, 99.0)
 
         schemes[node_name] = link_schemes
         ctx.cache.setdefault("early", {})[node_name] = False
-        return float(worst)
+        # the raw rotation score drives SkipPhaseThree (Reserve); the rack
+        # penalty only demotes the NODE choice
+        rot_scores[node_name] = float(worst)
+        return float(max(0.0, worst - self._rack_penalty(view, pod)))
+
+    def _rack_penalty(self, view: LinkView, pod: Task) -> float:
+        """Rack-locality Score bonus (inverted as a penalty): demote
+        candidates that make the pod's job traverse a spine uplink.  When
+        the job spans leaves regardless of this pod, every candidate pays
+        equally and the preference is a no-op; on star topologies no uplink
+        exists and the penalty is always zero."""
+        if view.traversed_uplinks(pod.job):
+            return RACK_LOCALITY_PENALTY
+        return 0.0
 
     # -------------------------------------------------------- NormalizeScore
     def normalize_scores(self, ctx: ScheduleContext, cluster: Cluster, pod: Task,
@@ -304,7 +290,11 @@ class MetronomePlugin(SchedulerPlugin):
         all_schemes: Dict[str, Dict[str, LinkScheme]] = ctx.cache.get(
             "schemes", {})
         early = ctx.cache.get("early", {}).get(node_name, True)
-        max_score = ctx.cache.get("max_score", PERFECT)
+        # the raw (pre-rack-penalty) rotation scores decide SkipPhaseThree;
+        # the best candidate's raw score says whether contention was
+        # avoidable at all
+        rot_scores = ctx.cache.get("rot_score", {})
+        max_score = max(rot_scores.values()) if rot_scores else PERFECT
         link_schemes = {} if early else all_schemes.get(node_name, {})
 
         # per-link SkipPhaseThree (Alg. 1): skip when the best node is
@@ -335,4 +325,5 @@ class MetronomePlugin(SchedulerPlugin):
     def unreserve(self, cluster: Cluster, pod: Task, node_name: str,
                   registry: TaskRegistry) -> None:
         if self.controller is not None:
-            self.controller.on_evict(node_name, pod)
+            self.controller.on_evict(node_name, pod, registry=registry,
+                                     cluster=cluster)

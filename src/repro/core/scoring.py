@@ -1,29 +1,16 @@
-"""Rotation-scheme enumeration and scoring — paper sections III-B / III-C.
+"""Per-candidate rotation-scheme evaluators — paper section III-B (Eq. 18).
 
-Two entry points mirroring the paper's split between the scheduler and the
-stop-and-wait controller:
-
-  * :func:`find_feasible_rotation` — the Score-phase fast path: traverse
-    rotation schemes in lexicographic order until the *first* interval of
-    perfect scores, return its middle index ("locally optimal feasible
-    solution", section III-B).
-
-  * :func:`find_optimal_rotation` — the offline recalculation (3rd stage):
-    enumerate all schemes, restrict to middle indices of perfect-score
-    intervals, and among those maximize the minimum communication interval
-    Psi (Eq. 9), section III-C.
-
-Combo spaces are the Cartesian product of per-task shift ranges
-``[0, S/mul_p)`` (Eq. 15) with the highest-priority reference task pinned to
-0 (Eq. 16). When the product is too large for exhaustive enumeration we use
-the paper's own reduction argument (hold all but one pod fixed) as
-coordinate descent.
+This module holds the *evaluation* primitives of the rotation search: the
+per-task shift ranges of Eq. 15, lexicographic combo decoding, rolled
+demand banks, the vectorized Eq. 18 scorer, and the Psi (Eq. 9) metric of a
+chosen scheme.  The *search* itself — per-link solvers, the fabric-wide
+joint solve, and global-offset resolution — lives in
+:mod:`repro.core.rotation`, the single producer of rotation schemes.
 """
 from __future__ import annotations
 
-import dataclasses
 import math
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence
 
 import numpy as np
 
@@ -32,15 +19,6 @@ from .geometry import DI_PRE
 
 PERFECT = 100.0
 _EPS = 1e-9
-
-
-@dataclasses.dataclass
-class RotationResult:
-    score: float
-    shifts: np.ndarray  # (P,) integer slot shifts theta_{l,p}
-    perfect: bool
-    psi: float = 0.0  # min communication interval of the chosen scheme
-    n_evaluated: int = 0
 
 
 def shift_ranges(muls: Sequence[int], ref_index: int, n_slots: int = DI_PRE) -> List[int]:
@@ -54,7 +32,7 @@ def shift_ranges(muls: Sequence[int], ref_index: int, n_slots: int = DI_PRE) -> 
     return out
 
 
-def _rolled_bank(patterns: np.ndarray, ranges: Sequence[int]) -> List[np.ndarray]:
+def rolled_bank(patterns: np.ndarray, ranges: Sequence[int]) -> List[np.ndarray]:
     """bank[p][r] = pattern p rolled by r slots, for r in [0, ranges[p])."""
     p, s = patterns.shape
     bank = []
@@ -86,7 +64,7 @@ def score_combos(
     return np.maximum(0.0, 100.0 * (1.0 - ex / (capacity * s)))
 
 
-def _lex_combos(ranges: Sequence[int], start: int, count: int) -> np.ndarray:
+def lex_combos(ranges: Sequence[int], start: int, count: int) -> np.ndarray:
     """Decode lexicographic combo indices [start, start+count) -> (count, P)."""
     idx = np.arange(start, start + count, dtype=np.int64)
     p = len(ranges)
@@ -104,200 +82,12 @@ def total_combos(ranges: Sequence[int]) -> int:
     return n
 
 
-def find_feasible_rotation(
-    patterns: np.ndarray,
-    bw: Sequence[float],
-    capacity: float,
-    muls: Sequence[int],
-    ref_index: int = 0,
-    n_slots: int = DI_PRE,
-    chunk: int = 4096,
-    max_exhaustive: int = 1 << 22,
-    mode: str = "intermediate",
-) -> RotationResult:
-    """Score-phase fast path (Algorithm 1, Score extension point).
+def scheme_psi(patterns, bw, capacity, muls, shifts, n_slots=DI_PRE) -> float:
+    """Psi (Eq. 9) of one chosen scheme.
 
-    Traverses combos lexicographically and stops at the first maximal run of
-    perfect scores, returning the scheme at the run's middle index. Falls
-    back to the best seen score when no perfect combo exists.
-
-    ``mode='compact'`` is the paper's 3rd-stage ABLATION (section IV-C):
-    take the first index of the perfect run (comm phases packed
-    back-to-back, no cushion slots) instead of the middle.
-    """
-    bw = np.asarray(bw, dtype=np.float64)
-    ranges = shift_ranges(muls, ref_index, n_slots)
-    n_total = total_combos(ranges)
-    if n_total > max_exhaustive:
-        return coordinate_descent_rotation(
-            patterns, bw, capacity, muls, ref_index, n_slots
-        )
-    bank = _rolled_bank(patterns, ranges)
-
-    best_score = -1.0
-    best_combo = np.zeros(len(ranges), dtype=np.int64)
-    run_start = None  # start index of the current perfect run
-    n_eval = 0
-    pos = 0
-    while pos < n_total:
-        cnt = min(chunk, n_total - pos)
-        combos = _lex_combos(ranges, pos, cnt)
-        scores = score_combos(patterns, bw, capacity, combos, bank)
-        n_eval += cnt
-        is_perfect = scores >= PERFECT - _EPS
-        for j in range(cnt):
-            if is_perfect[j]:
-                if run_start is None:
-                    run_start = pos + j
-            else:
-                if run_start is not None:
-                    # first perfect run ended at pos+j-1 -> return middle
-                    # (or the run's edge in the no-cushion ablation)
-                    mid = (run_start if mode == "compact"
-                           else (run_start + pos + j - 1) // 2)
-                    shifts = _lex_combos(ranges, mid, 1)[0]
-                    return RotationResult(PERFECT, shifts, True,
-                                          _psi(patterns, bw, capacity, muls, shifts, n_slots),
-                                          n_eval)
-                if scores[j] > best_score:
-                    best_score = float(scores[j])
-                    best_combo = combos[j]
-        pos += cnt
-    if run_start is not None:  # perfect run extends to the end
-        mid = (run_start if mode == "compact"
-               else (run_start + n_total - 1) // 2)
-        shifts = _lex_combos(ranges, mid, 1)[0]
-        return RotationResult(PERFECT, shifts, True,
-                              _psi(patterns, bw, capacity, muls, shifts, n_slots), n_eval)
-    return RotationResult(best_score, best_combo, False,
-                          _psi(patterns, bw, capacity, muls, best_combo, n_slots), n_eval)
-
-
-def _psi(patterns, bw, capacity, muls, shifts, n_slots) -> float:
-    # duty w.r.t. the base circle = total comm slots / n_slots; Eq. 9 midpoints
-    # need the per-task duty cycle (per-burst arc = duty * n_slots / mul).
+    The duty w.r.t. the base circle = total comm slots / n_slots; Eq. 9
+    midpoints need the per-task duty cycle (per-burst arc =
+    duty * n_slots / mul)."""
     duties = [float(patterns[i].sum() / n_slots) for i in range(len(muls))]
-    return geometry.min_comm_interval(muls, duties, bw, shifts, capacity, n_slots)
-
-
-def find_optimal_rotation(
-    patterns: np.ndarray,
-    bw: Sequence[float],
-    capacity: float,
-    muls: Sequence[int],
-    ref_index: int = 0,
-    n_slots: int = DI_PRE,
-    chunk: int = 8192,
-    max_exhaustive: int = 1 << 22,
-    scorer: Optional[Callable[[np.ndarray], np.ndarray]] = None,
-) -> RotationResult:
-    """Offline recalculation (3rd optimization stage), section III-C.
-
-    Enumerates all rotation schemes; candidate set = middle indices of all
-    perfect-score runs (the paper's search-space narrowing); among candidates
-    maximizes Psi (Eq. 9). ``scorer`` may override the combo scorer (used to
-    plug in the Pallas kernel).
-    """
-    bw = np.asarray(bw, dtype=np.float64)
-    ranges = shift_ranges(muls, ref_index, n_slots)
-    n_total = total_combos(ranges)
-    if n_total > max_exhaustive:
-        return coordinate_descent_rotation(
-            patterns, bw, capacity, muls, ref_index, n_slots, optimize_psi=True
-        )
-    bank = _rolled_bank(patterns, ranges)
-
-    candidates: List[int] = []
-    best_score = -1.0
-    best_idx = 0
-    run_start = None
-    prev_perfect_end = None
-    pos = 0
-    while pos < n_total:
-        cnt = min(chunk, n_total - pos)
-        combos = _lex_combos(ranges, pos, cnt)
-        if scorer is not None:
-            scores = np.asarray(scorer(combos))
-        else:
-            scores = score_combos(patterns, bw, capacity, combos, bank)
-        is_perfect = scores >= PERFECT - _EPS
-        for j in range(cnt):
-            gi = pos + j
-            if is_perfect[j]:
-                if run_start is None:
-                    run_start = gi
-            else:
-                if run_start is not None:
-                    candidates.append((run_start + gi - 1) // 2)
-                    run_start = None
-                if scores[j] > best_score:
-                    best_score = float(scores[j])
-                    best_idx = gi
-        pos += cnt
-    if run_start is not None:
-        candidates.append((run_start + n_total - 1) // 2)
-
-    if not candidates:
-        shifts = _lex_combos(ranges, best_idx, 1)[0]
-        return RotationResult(best_score, shifts, False,
-                              _psi(patterns, bw, capacity, muls, shifts, n_slots), n_total)
-
-    # stage 3: among perfect-run midpoints maximize Psi
-    best_psi = -1.0
-    best_shifts = None
-    for c in candidates:
-        shifts = _lex_combos(ranges, c, 1)[0]
-        psi = _psi(patterns, bw, capacity, muls, shifts, n_slots)
-        if psi > best_psi:
-            best_psi = psi
-            best_shifts = shifts
-    return RotationResult(PERFECT, best_shifts, True, best_psi, n_total)
-
-
-def coordinate_descent_rotation(
-    patterns: np.ndarray,
-    bw: np.ndarray,
-    capacity: float,
-    muls: Sequence[int],
-    ref_index: int,
-    n_slots: int = DI_PRE,
-    optimize_psi: bool = False,
-    sweeps: int = 4,
-) -> RotationResult:
-    """Large combo spaces: hold all but one pod fixed (paper's reduction)."""
-    bw = np.asarray(bw, dtype=np.float64)
-    p = patterns.shape[0]
-    ranges = shift_ranges(muls, ref_index, n_slots)
-    shifts = np.zeros(p, dtype=np.int64)
-    n_eval = 0
-    for _ in range(sweeps):
-        changed = False
-        for i in range(p):
-            if i == ref_index or ranges[i] <= 1:
-                continue
-            cands = np.tile(shifts, (ranges[i], 1))
-            cands[:, i] = np.arange(ranges[i])
-            scores = score_combos(patterns, bw, capacity, cands)
-            n_eval += ranges[i]
-            best = scores.max()
-            mask = scores >= best - _EPS
-            if optimize_psi and best >= PERFECT - _EPS:
-                # pick the perfect shift maximizing Psi
-                idxs = np.nonzero(mask)[0]
-                psis = [
-                    _psi(patterns, bw, capacity, muls, cands[k], n_slots) for k in idxs
-                ]
-                pick = int(idxs[int(np.argmax(psis))])
-            else:
-                # middle of the first perfect/best run
-                idxs = np.nonzero(mask)[0]
-                runs = np.split(idxs, np.where(np.diff(idxs) != 1)[0] + 1)
-                pick = int(runs[0][len(runs[0]) // 2])
-            if pick != shifts[i]:
-                shifts[i] = pick
-                changed = True
-        if not changed:
-            break
-    final = score_combos(patterns, bw, capacity, shifts[None, :])[0]
-    return RotationResult(float(final), shifts, final >= PERFECT - _EPS,
-                          _psi(patterns, bw, capacity, muls, shifts, n_slots), n_eval)
+    return geometry.min_comm_interval(muls, duties, bw, shifts, capacity,
+                                      n_slots)

@@ -412,7 +412,21 @@ class ClusterSimulator:
 
     def _apply_departure(self, ev: events_mod.JobDeparture) -> None:
         st = self.jobs.get(ev.job)
-        if st is None or st.phase == DONE:
+        if st is None:
+            # never admitted: the job departs from the arrival/pending
+            # queues instead (trace truncation of a job that waited out its
+            # whole window without getting capacity).  Strip just the
+            # departed job — a multi-job workload (HPO sweep) keeps its
+            # siblings queued; an emptied workload is dropped.
+            def keep(wl) -> bool:
+                wl.jobs = [j for j in wl.jobs if j.name != ev.job]
+                return bool(wl.jobs)
+
+            self._arrivals = collections.deque(
+                t for t in self._arrivals if keep(t[2]))
+            self._pending = [wl for wl in self._pending if keep(wl)]
+            return
+        if st.phase == DONE:
             return
         st.flows = []
         st.phase = DONE
@@ -429,7 +443,8 @@ class ClusterSimulator:
             if t.node in self.cluster.nodes:
                 self.cluster.node(t.node).release(t.uid, t.resources)
             if self.controller is not None:
-                self.controller.on_evict(t.node, t)
+                self.controller.on_evict(t.node, t, registry=self.registry,
+                                         cluster=self.cluster)
             if self.registry is not None:
                 self.registry.tasks.pop(t.uid, None)
         if self.registry is not None:

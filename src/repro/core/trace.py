@@ -4,6 +4,16 @@ Generates a job arrival sequence with priorities and durations (0.5-1.5 h)
 drawn from the 13-model fleet, targeting a cluster load (fraction of GPUs
 serving active jobs) above a configurable threshold. All randomness is
 seeded for reproducibility.
+
+Trace truncation can be expressed two ways: the legacy iteration cap
+(``trace_to_jobs`` derives ``n_iterations`` from the duration) or the
+event-driven form (``open_ended=True`` + :func:`trace_departure_events`):
+each job runs until its :class:`~repro.core.events.JobDeparture` fires on
+the simulator clock — the K8s behavior where a job's deadline, not a
+pre-computed iteration count, ends it.  The event form survives contention
+honestly (a slowed job does FEWER iterations in its window instead of
+holding its GPUs longer) and feeds ``harness.run_trace_experiment`` via its
+``events=`` stream.
 """
 from __future__ import annotations
 
@@ -12,7 +22,18 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from .events import JobDeparture
 from .workload import HIGH, LOW, Job, make_job
+
+# iteration ceiling of open-ended (departure-truncated) jobs: high enough
+# that no realistic trace window ever exhausts it
+OPEN_ENDED_ITERATIONS = 1_000_000_000
+
+
+def trace_job_name(spec: "TraceJobSpec", index: int) -> str:
+    """Canonical job name of the ``index``-th trace entry (shared by
+    :func:`trace_to_jobs` and :func:`trace_departure_events`)."""
+    return f"{spec.model.lower()}-{index}"
 
 
 @dataclasses.dataclass
@@ -66,17 +87,26 @@ def generate_trace(
 
 
 def trace_to_jobs(trace: List[TraceJobSpec], model_fleet: Dict[str, dict],
-                  time_scale: float = 1.0) -> List[Job]:
+                  time_scale: float = 1.0, *,
+                  open_ended: bool = False) -> List[Job]:
     """Materialize Job objects; ``time_scale`` compresses the trace (e.g.
-    0.1 -> a 4 h trace plays in 24 min of simulated time)."""
+    0.1 -> a 4 h trace plays in 24 min of simulated time).
+
+    ``open_ended=True`` switches truncation from the iteration cap to
+    :class:`~repro.core.events.JobDeparture` events: jobs get an
+    effectively unbounded iteration budget and the caller feeds
+    :func:`trace_departure_events` into the simulator's event stream."""
     jobs = []
     for i, spec in enumerate(trace):
         fleet = model_fleet[spec.model]
         period = fleet["period_ms"]
-        n_iter = max(1, int(spec.duration_s * time_scale * 1e3 / period))
+        if open_ended:
+            n_iter = OPEN_ENDED_ITERATIONS
+        else:
+            n_iter = max(1, int(spec.duration_s * time_scale * 1e3 / period))
         jobs.append(
             make_job(
-                f"{spec.model.lower()}-{i}",
+                trace_job_name(spec, i),
                 n_tasks=spec.n_tasks,
                 period_ms=period,
                 duty=fleet["duty"],
@@ -88,6 +118,21 @@ def trace_to_jobs(trace: List[TraceJobSpec], model_fleet: Dict[str, dict],
             )
         )
     return jobs
+
+
+def trace_departure_events(trace: List[TraceJobSpec],
+                           time_scale: float = 1.0) -> List[JobDeparture]:
+    """The event-driven form of trace truncation: one
+    :class:`~repro.core.events.JobDeparture` per trace entry at
+    ``(submit + duration) * time_scale`` on the simulator clock (ms).
+    Pair with ``trace_to_jobs(..., open_ended=True)``."""
+    return [
+        JobDeparture(
+            time_ms=(spec.submit_time_s + spec.duration_s) * time_scale * 1e3,
+            job=trace_job_name(spec, i),
+        )
+        for i, spec in enumerate(trace)
+    ]
 
 
 def cluster_load(trace: List[TraceJobSpec], total_gpus: int,

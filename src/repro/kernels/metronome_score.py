@@ -1,4 +1,4 @@
-"""Pallas TPU kernel for Metronome's rotation-scheme scoring (Eq. 18).
+"""Pallas TPU kernels for Metronome's rotation-scheme scoring (Eq. 18).
 
 The paper calls the Score phase "computationally intensive" (section III-B):
 for every candidate rotation scheme, sum the bandwidth demand over the
@@ -7,8 +7,16 @@ enumeration to the TPU as a *pairwise* product core: two free tasks' rolled
 banks (Ra, S) and (Rb, S) are resident in VMEM and a (block_a x Rb x S)
 broadcast-accumulate + relu-reduce produces a block of the (Ra, Rb) score
 matrix per grid step. Outer tasks (if any) are folded into ``base_demand``
-by the caller (repro.core.scoring holds all but the innermost two fixed —
+by the caller (repro.core.rotation holds all but the innermost two fixed —
 the paper's own reduction argument).
+
+:func:`metronome_score_multilink` extends the pairwise core to the
+fabric-wide joint solve (``core/rotation.py``): the demand banks are
+stacked per link — ``(L, Ra, S)`` / ``(L, Rb, S)`` with per-link capacities
+— and the relu-excess is reduced over links *and* slots in one kernel.  The
+joint score of a rotation pair is the worst per-link Eq. 18 score
+(feasible iff every link is perfect), computed as the max over links of the
+normalized excess fraction.
 
 The slot axis S (Di-Pre = 72) is padded to the 128-wide TPU lane dimension;
 padded slots carry zero demand so they never contribute excess.
@@ -81,4 +89,72 @@ def metronome_score_pairwise(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(base, a, b)
+    return out[:ra, :rb]
+
+
+def _multilink_kernel(caps_ref, base_ref, bank_a_ref, bank_b_ref, out_ref, *,
+                      n_slots: int, n_links: int):
+    caps = caps_ref[...]           # (L, LANE) — capacity broadcast per lane
+    base = base_ref[...]           # (L, 1, S_pad)
+    bank_a = bank_a_ref[...]       # (L, block_a, S_pad)
+    bank_b = bank_b_ref[...]       # (L, Rb, S_pad)
+    cap_col = caps[:, :1]          # (L, 1)
+    # total[l, a, b, s] = base[l, s] + bank_a[l, a, s] + bank_b[l, b, s]
+    total = (base[:, :, None, :] + bank_a[:, :, None, :]
+             + bank_b[:, None, :, :])  # (L, block_a, Rb, S_pad)
+    excess = jnp.maximum(total - cap_col[:, None, :, None], 0.0)
+    ex = jnp.sum(excess, axis=-1)  # (L, block_a, Rb) — reduce over slots
+    # per-link normalized excess fraction, then reduce over links: the worst
+    # link dominates (min over per-link scores == 100 * (1 - max frac))
+    frac = ex / (cap_col[:, None, :] * n_slots)
+    worst = jnp.max(frac, axis=0)  # (block_a, Rb)
+    score = jnp.maximum(0.0, 100.0 * (1.0 - worst))
+    out_ref[...] = score.astype(out_ref.dtype)
+
+
+def metronome_score_multilink(
+    base_demand: jax.Array,  # (L, S) fixed demand per link
+    bank_a: jax.Array,  # (L, Ra, S)
+    bank_b: jax.Array,  # (L, Rb, S)
+    capacities: jax.Array,  # (L,)
+    *,
+    block_a: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """Joint scores (Ra, Rb): min over links of Eq. 18 for every rotation
+    pair of two free jobs, all links evaluated in one kernel.
+
+    Links where a job is absent carry zero rows in its bank; padded slots
+    carry zero demand — neither can contribute excess."""
+    l, s = base_demand.shape
+    ra, rb = bank_a.shape[1], bank_b.shape[1]
+    s_pad = -(-s // LANE) * LANE
+    ra_pad = -(-ra // block_a) * block_a
+
+    def pad(x, rows):
+        out = jnp.zeros((l, rows, s_pad), jnp.float32)
+        return out.at[:, : x.shape[1], :s].set(x.astype(jnp.float32))
+
+    base = pad(base_demand[:, None, :], 1)
+    a = pad(bank_a, ra_pad)
+    b = pad(bank_b, rb)
+    caps = jnp.broadcast_to(
+        jnp.asarray(capacities, jnp.float32)[:, None], (l, LANE))
+
+    kernel = functools.partial(_multilink_kernel, n_slots=s, n_links=l)
+    out = pl.pallas_call(
+        kernel,
+        grid=(ra_pad // block_a,),
+        in_specs=[
+            pl.BlockSpec((l, LANE), lambda i: (0, 0)),
+            pl.BlockSpec((l, 1, s_pad), lambda i: (0, 0, 0)),
+            pl.BlockSpec((l, block_a, s_pad), lambda i: (0, i, 0)),
+            pl.BlockSpec((l, rb, s_pad), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_a, rb), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((ra_pad, rb), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(caps, base, a, b)
     return out[:ra, :rb]

@@ -16,7 +16,7 @@ import numpy as np
 
 from . import ref
 from .flash_attention import flash_attention_fwd
-from .metronome_score import metronome_score_pairwise
+from .metronome_score import metronome_score_multilink, metronome_score_pairwise
 from .rg_lru import rg_lru_pallas
 
 
@@ -62,11 +62,38 @@ flash_attention.defvjp(_fa_fwd, _fa_bwd)
 
 def score_pairwise(base_demand, bank_a, bank_b, capacity: float,
                    interpret: Optional[bool] = None) -> np.ndarray:
-    """Eq. 18 scores for every (rot_a, rot_b) pair; see core/scoring.py."""
+    """Eq. 18 scores for every (rot_a, rot_b) pair; see core/rotation.py."""
     itp = (not _on_tpu()) if interpret is None else interpret
     out = metronome_score_pairwise(
         jnp.asarray(base_demand), jnp.asarray(bank_a), jnp.asarray(bank_b),
         capacity, interpret=itp)
+    return np.asarray(out)
+
+
+_score_multilink_jit = jax.jit(ref.metronome_score_multilink_ref)
+
+
+def score_multilink(base_demand, bank_a, bank_b, capacities,
+                    interpret: Optional[bool] = None) -> np.ndarray:
+    """Joint (min-over-links) Eq. 18 scores for every rotation pair of two
+    free jobs over stacked (L, R, S) per-link demand banks.
+
+    Dispatch: real TPU -> compiled Pallas multi-link kernel; anything else
+    -> the jit'd jnp reference (the batched CPU fallback of the fabric-wide
+    planner).  ``interpret=True`` forces the Pallas kernel in interpret
+    mode (parity tests only — far slower than the jnp path)."""
+    if interpret:
+        out = metronome_score_multilink(
+            jnp.asarray(base_demand), jnp.asarray(bank_a),
+            jnp.asarray(bank_b), jnp.asarray(capacities), interpret=True)
+    elif _on_tpu():
+        out = metronome_score_multilink(
+            jnp.asarray(base_demand), jnp.asarray(bank_a),
+            jnp.asarray(bank_b), jnp.asarray(capacities), interpret=False)
+    else:
+        out = _score_multilink_jit(
+            jnp.asarray(base_demand), jnp.asarray(bank_a),
+            jnp.asarray(bank_b), jnp.asarray(capacities))
     return np.asarray(out)
 
 

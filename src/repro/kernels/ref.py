@@ -49,6 +49,29 @@ def metronome_score_ref(base_demand: np.ndarray, bank_a: np.ndarray,
     return np.maximum(0.0, 100.0 * (1.0 - excess / (capacity * s)))
 
 
+def metronome_score_multilink_ref(base_demand, bank_a, bank_b,
+                                  capacities) -> jnp.ndarray:
+    """Multi-link joint rotation-score oracle (jnp; jit-able).
+
+    base_demand: (L, S) demand of all FIXED jobs per link (already rotated).
+    bank_a:      (L, Ra, S) demand of free job A per link at every rotation.
+    bank_b:      (L, Rb, S) demand of free job B per link at every rotation.
+    capacities:  (L,) per-link allocatable bandwidth.
+    Returns (Ra, Rb): min over links of the per-link Eq. 18 score — the
+    joint feasibility score of the fabric-wide rotation planner.
+    """
+    base = jnp.asarray(base_demand, jnp.float32)
+    a = jnp.asarray(bank_a, jnp.float32)
+    b = jnp.asarray(bank_b, jnp.float32)
+    caps = jnp.asarray(capacities, jnp.float32)
+    s = base.shape[-1]
+    total = (base[:, None, None, :] + a[:, :, None, :]
+             + b[:, None, :, :])  # (L, Ra, Rb, S)
+    excess = jnp.maximum(total - caps[:, None, None, None], 0.0).sum(axis=-1)
+    frac = excess / (caps[:, None, None] * s)
+    return jnp.maximum(0.0, 100.0 * (1.0 - jnp.max(frac, axis=0)))
+
+
 def rg_lru_ref(a: jax.Array, x: jax.Array, h0: Optional[jax.Array] = None
                ) -> jax.Array:
     """Linear recurrence oracle: y_t = a_t * y_{t-1} + x_t. (B, S, W)."""

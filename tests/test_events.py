@@ -223,3 +223,86 @@ class TestOnlinePending:
             framework=fw, arrivals=[wl(big)])
         sim.run()
         assert sim.pending_jobs == ["big"]
+
+
+class TestTraceDepartures:
+    """Trace truncation via JobDeparture events instead of iteration caps
+    (ROADMAP PR 2 follow-up, wired through harness.run_trace_experiment)."""
+
+    def _trace(self):
+        from repro.configs.metronome_testbed import MODEL_FLEET
+        from repro.core.trace import generate_trace
+        return MODEL_FLEET, generate_trace(
+            MODEL_FLEET, duration_s=600, total_gpus=13, target_load=0.8,
+            seed=2, job_duration_range_s=(60, 120))[:6]
+
+    def test_departure_events_match_trace(self):
+        from repro.core.trace import (trace_departure_events, trace_to_jobs,
+                                      OPEN_ENDED_ITERATIONS)
+        fleet, trace = self._trace()
+        jobs = trace_to_jobs(trace, fleet, time_scale=1.0, open_ended=True)
+        evs = trace_departure_events(trace, time_scale=1.0)
+        assert len(evs) == len(jobs)
+        assert all(j.n_iterations == OPEN_ENDED_ITERATIONS for j in jobs)
+        for j, ev, spec in zip(jobs, evs, trace):
+            assert ev.job == j.name
+            assert ev.time_ms == pytest.approx(
+                (spec.submit_time_s + spec.duration_s) * 1e3)
+
+    def test_open_ended_trace_ends_by_departure(self):
+        """Jobs end when their departure fires — not an iteration cap — and
+        a job that never got capacity departs from the pending queue."""
+        from repro.core.harness import run_trace_experiment
+        from repro.core.trace import trace_departure_events, trace_to_jobs
+        fleet, trace = self._trace()
+        cluster, _, _ = make_snapshot("S1")
+        jobs = trace_to_jobs(trace, fleet, time_scale=1.0, open_ended=True)
+        wls = [Workload(name=j.name, jobs=[j]) for j in jobs]
+        for w in wls:
+            for j in w.jobs:
+                j.workload = w.name
+                for t in j.tasks:
+                    t.workload = w.name
+        evs = trace_departure_events(trace, time_scale=1.0)
+        cfg = SimConfig(duration_ms=900_000, seed=0, jitter_std=0.01)
+        res = run_trace_experiment("metronome", cluster, wls, cfg, events=evs)
+        ends = {ev.job: ev.time_ms for ev in evs}
+        ran = [n for n, f in res.sim.finish_times_ms.items()
+               if not np.isnan(f)]
+        assert ran, "at least one trace job must run"
+        for n in ran:
+            assert res.sim.finish_times_ms[n] <= ends[n] + 1e-6
+            # open-ended: the job cannot have exhausted its budget
+            assert res.sim.iterations_done[n] < 10**9
+        # nobody is left queued forever: every non-admitted job departed
+        assert res.rejected == []
+
+    def test_multi_job_workload_departure_strips_only_the_departed(self):
+        """A pending HPO-style workload keeps its sibling jobs when one of
+        them departs before ever being admitted."""
+        cl = small_cluster(n=1)  # 1 node, gpu capacity for 4 task pods
+        fw = SchedulingFramework(cl, MetronomePlugin())
+        blocker = make_job("blocker", n_tasks=4, period_ms=100, duty=0.2,
+                           bw_gbps=4.0, spread=0, n_iterations=5)
+        sib_a = make_job("sib-a", n_tasks=4, period_ms=100, duty=0.2,
+                         bw_gbps=4.0, spread=0, n_iterations=5,
+                         submit_time_s=0.001)
+        sib_b = make_job("sib-b", n_tasks=4, period_ms=100, duty=0.2,
+                         bw_gbps=4.0, spread=0, n_iterations=5,
+                         submit_time_s=0.001)
+        hpo = Workload(name="hpo", jobs=[sib_a, sib_b])
+        for j in (sib_a, sib_b):
+            j.workload = "hpo"
+            for t in j.tasks:
+                t.workload = "hpo"
+        evs = [JobDeparture(time_ms=100.0, job="sib-a")]
+        sim = ClusterSimulator(
+            cl, [], SimConfig(duration_ms=30_000), registry=fw.registry,
+            framework=fw, arrivals=[wl(blocker), hpo], events=evs)
+        res = sim.run()
+        # the departed sibling never ran; the survivor did once the blocker
+        # released the node
+        assert "sib-a" not in sim.jobs
+        assert "sib-b" in sim.jobs
+        assert res.iterations_done["sib-b"] == 5
+        assert sim.pending_jobs == []

@@ -92,7 +92,7 @@ class TestPhaseMonitor:
                               early_return=False, injected_ms={},
                               ref_job="hi"), optimal=True)
         c._priorities = {"hi": 1, "lo": 0}
-        c._recompute_global_offsets()
+        c._replan_offsets()
         return c
 
     def test_default_off(self):

@@ -201,7 +201,7 @@ class TestCommGate:
                               ref_job="ref"),
             optimal=True)
         ctrl._priorities = {"ref": 1, "j": 0}
-        ctrl._recompute_global_offsets()
+        ctrl._replan_offsets()
         clock = {"t": 0.012}  # 12 ms
         slept = []
         gate = CommGate(ctrl, "j", clock=lambda: clock["t"],

@@ -199,3 +199,50 @@ class TestBaselines:
         fw.schedule_job(j)
         used = j.nodes_used()
         assert used == ["n0", "n1"] or used == ["n0"]
+
+
+class TestRackLocality:
+    """Beyond-paper rack-locality Score bonus: intra-leaf placements win
+    before any uplink rotation is needed (ROADMAP PR 1 follow-up)."""
+
+    def _fabric(self):
+        from repro.core.cluster import make_fabric_cluster
+        return make_fabric_cluster(n_leaves=2, hosts_per_leaf=2,
+                                   bw_gbps=25.0, oversubscription=2.0)
+
+    def test_two_task_job_stays_intra_leaf(self):
+        """An F2-style fabric, one 2-task job: both pods land in ONE leaf
+        even though all four hosts are empty and latency-equal."""
+        cl = self._fabric()
+        fw = SchedulingFramework(cl, MetronomePlugin())
+        j = make_job("solo", n_tasks=2, period_ms=100, duty=0.35,
+                     bw_gbps=12.0)
+        assert fw.schedule_job(j)
+        leaves = {cl.topology.leaf_of[n] for n in j.nodes_used()}
+        assert len(leaves) == 1, "rack-locality bonus must keep it intra-leaf"
+
+    def test_second_job_also_compacts(self):
+        """With the first leaf partially used, a second 2-task job fills the
+        other leaf intra-leaf rather than straddling the spine."""
+        cl = self._fabric()
+        fw = SchedulingFramework(cl, MetronomePlugin())
+        a = make_job("a", n_tasks=2, period_ms=100, duty=0.35, bw_gbps=12.0)
+        b = make_job("b", n_tasks=2, period_ms=100, duty=0.35, bw_gbps=12.0,
+                     submit_time_s=0.001)
+        assert fw.schedule_job(a) and fw.schedule_job(b)
+        for j in (a, b):
+            leaves = {cl.topology.leaf_of[n] for n in j.nodes_used()}
+            assert len(leaves) == 1
+
+    def test_star_unaffected(self):
+        """No uplinks -> the penalty is identically zero (seed behavior)."""
+        from repro.core.scheduler import RACK_LOCALITY_PENALTY
+        from repro.core.contention import LinkView
+        cl = small_cluster()
+        fw = SchedulingFramework(cl, MetronomePlugin())
+        j = make_job("j", n_tasks=2, period_ms=100, duty=0.3, bw_gbps=10.0)
+        assert fw.schedule_job(j)
+        plugin = fw.plugin
+        view = LinkView.from_registry(cl, fw.registry)
+        assert plugin._rack_penalty(view, j.tasks[0]) == 0.0
+        assert RACK_LOCALITY_PENALTY < 1.0  # must stay below the loop cap

@@ -1,4 +1,8 @@
-"""Tests for rotation-scheme enumeration (sections III-B / III-C)."""
+"""Tests for rotation-scheme evaluation + enumeration (III-B / III-C).
+
+The evaluators (Eq. 18 scorer, ranges, banks) live in ``core.scoring``; the
+solvers (feasible / optimal / coordinate descent) moved into the fabric-wide
+planner ``core.rotation`` and are exercised here against the evaluators."""
 import itertools
 
 import numpy as np
@@ -6,6 +10,7 @@ import pytest
 from hypothesis import given, strategies as st
 
 from repro.core import geometry as G
+from repro.core import rotation as R
 from repro.core import scoring as S
 
 
@@ -31,7 +36,7 @@ class TestScoreCombos:
 
     def test_lex_combos_cover_space(self):
         ranges = [1, 3, 4]
-        combos = S._lex_combos(ranges, 0, 12)
+        combos = S.lex_combos(ranges, 0, 12)
         assert combos.shape == (12, 3)
         assert len({tuple(c) for c in combos}) == 12
         assert combos[:, 0].max() == 0
@@ -40,20 +45,20 @@ class TestScoreCombos:
 class TestFeasibleRotation:
     def test_finds_perfect_when_exists(self):
         pats = G.pattern_matrix([1, 1], [0.3, 0.3], 72)
-        res = S.find_feasible_rotation(pats, [20.0, 20.0], 25.0, [1, 1], 0)
+        res = R.find_feasible_rotation(pats, [20.0, 20.0], 25.0, [1, 1], 0)
         assert res.perfect
         d = G.demand(pats, np.array([20.0, 20.0]), res.shifts)
         assert d.max() <= 25.0 + 1e-9
 
     def test_reference_shift_zero(self):
         pats = G.pattern_matrix([1, 1], [0.3, 0.3], 72)
-        res = S.find_feasible_rotation(pats, [20.0, 20.0], 25.0, [1, 1], 0)
+        res = R.find_feasible_rotation(pats, [20.0, 20.0], 25.0, [1, 1], 0)
         assert res.shifts[0] == 0  # Eq. 16
 
     def test_best_effort_when_impossible(self):
         # combined duty > 1 -> no perfect scheme exists (paper snapshot 0)
         pats = G.pattern_matrix([1, 1], [0.6, 0.6], 72)
-        res = S.find_feasible_rotation(pats, [20.0, 20.0], 25.0, [1, 1], 0)
+        res = R.find_feasible_rotation(pats, [20.0, 20.0], 25.0, [1, 1], 0)
         assert not res.perfect
         bf_score, _ = brute_force_best(pats, [20.0, 20.0], 25.0, [1, 1], 0, 72)
         assert res.score == pytest.approx(bf_score, abs=1e-6)
@@ -62,9 +67,9 @@ class TestFeasibleRotation:
         """The fast path returns the middle of the FIRST perfect run."""
         pats = G.pattern_matrix([1, 1], [0.25, 0.25], 72)
         bw = [20.0, 20.0]
-        res = S.find_feasible_rotation(pats, bw, 25.0, [1, 1], 0)
+        res = R.find_feasible_rotation(pats, bw, 25.0, [1, 1], 0)
         scores = S.score_combos(pats, np.asarray(bw), 25.0,
-                                S._lex_combos([1, 72], 0, 72))
+                                S.lex_combos([1, 72], 0, 72))
         perfect = scores >= 100.0 - 1e-9
         # first run of perfect scores
         start = int(np.argmax(perfect))
@@ -78,7 +83,7 @@ class TestOptimalRotation:
     def test_psi_maximized_among_perfect(self):
         pats = G.pattern_matrix([1, 1], [0.2, 0.2], 72)
         bw = [20.0, 20.0]
-        res = S.find_optimal_rotation(pats, bw, 25.0, [1, 1], 0)
+        res = R.find_optimal_rotation(pats, bw, 25.0, [1, 1], 0)
         assert res.perfect
         # stage 3: Psi should be near the theoretical max (bursts
         # antipodal: midpoint distance ~36 slots)
@@ -87,8 +92,8 @@ class TestOptimalRotation:
     def test_optimal_beats_feasible_on_psi(self):
         pats = G.pattern_matrix([1, 2], [0.3, 0.25], 72)
         bw = [20.0, 18.0]
-        fast = S.find_feasible_rotation(pats, bw, 25.0, [1, 2], 0)
-        opt = S.find_optimal_rotation(pats, bw, 25.0, [1, 2], 0)
+        fast = R.find_feasible_rotation(pats, bw, 25.0, [1, 2], 0)
+        opt = R.find_optimal_rotation(pats, bw, 25.0, [1, 2], 0)
         assert opt.score >= fast.score - 1e-9
         if fast.perfect and opt.perfect:
             assert opt.psi >= fast.psi - 1e-9
@@ -97,7 +102,7 @@ class TestOptimalRotation:
         muls = [1, 1, 1, 1, 1]
         pats = G.pattern_matrix(muls, [0.15] * 5, 72)
         bw = [20.0] * 5
-        res = S.coordinate_descent_rotation(
+        res = R.coordinate_descent_rotation(
             pats, np.asarray(bw), 25.0, muls, 0)
         assert res.perfect  # 5 x 0.15 duty easily interleaves
 
@@ -109,7 +114,7 @@ class TestOptimalRotation:
 def test_property_feasible_never_worse_than_zero_shift(duty_a, duty_b, mul_b):
     pats = G.pattern_matrix([1, mul_b], [duty_a, duty_b], 72)
     bw = [20.0, 20.0]
-    res = S.find_feasible_rotation(pats, bw, 25.0, [1, mul_b], 0)
+    res = R.find_feasible_rotation(pats, bw, 25.0, [1, mul_b], 0)
     zero = S.score_combos(pats, np.asarray(bw), 25.0,
                           np.zeros((1, 2), dtype=np.int64))[0]
     assert res.score >= zero - 1e-9
@@ -120,9 +125,9 @@ def test_pallas_scorer_plugs_into_optimal_rotation():
     from repro.kernels import ops as kops
     pats = G.pattern_matrix([1, 1], [0.3, 0.25], 72)
     bw = np.array([20.0, 18.0])
-    banks = S._rolled_bank(pats, [1, 72])
+    banks = S.rolled_bank(pats, [1, 72])
     base = bw[0] * banks[0][0]
     scores_k = kops.score_pairwise(base, np.zeros((1, 72)),
                                    bw[1] * banks[1], 25.0, interpret=True)
-    scores_ref = S.score_combos(pats, bw, 25.0, S._lex_combos([1, 72], 0, 72))
+    scores_ref = S.score_combos(pats, bw, 25.0, S.lex_combos([1, 72], 0, 72))
     assert np.allclose(scores_k[0], scores_ref, atol=1e-4)
