@@ -2,16 +2,22 @@
 (cushion slots) and the continuous monitoring mechanism."""
 from __future__ import annotations
 
-import numpy as np
-
-from repro.configs.metronome_testbed import SNAPSHOTS, make_snapshot
-from repro.core.harness import priority_split, run_experiment
-from repro.core.simulator import SimConfig
+from repro.configs.metronome_testbed import SNAPSHOTS, snapshot_scenario
+from repro.core.experiment import Policy
 
 from . import common
 from .common import Timer, emit
 
-def _cfg(**kw) -> SimConfig:
+# paper's ablation: compact rotation (no cushion slots) and no
+# Psi-maximizing offline recalculation — now one declarative Policy
+ABLATIONS = (
+    Policy("metronome", label="full"),
+    Policy("metronome", skip_third_stage=True, rotation_mode="compact",
+           label="wo_stage3"),
+)
+
+
+def _cfg(**kw):
     # more drift to make the cushions/monitor matter (paper runs real
     # hardware noise; we dial jitter up to the same effect)
     return common.bench_cfg(jitter_std=0.02, **kw)
@@ -20,38 +26,24 @@ def _cfg(**kw) -> SimConfig:
 def run() -> None:
     n_iter = common.pick(400, 30)
     for sid in common.pick(SNAPSHOTS, ("S2",)):
-        variants = {}
-        for label, kw in (
-            ("full", {}),
-            # paper's ablation: compact rotation (no cushion slots) and no
-            # Psi-maximizing offline recalculation
-            ("wo_stage3", {"skip_third_stage": True,
-                           "rotation_mode": "compact"}),
-        ):
-            cluster, wls, bg = make_snapshot(sid, n_iterations=n_iter)
-            with Timer() as t:
-                variants[label] = run_experiment(
-                    "metronome", cluster, wls, _cfg(), background=bg,
-                    **kw)
-        cluster, wls, bg = make_snapshot(sid, n_iterations=n_iter)
-        cfg = _cfg(monitor=False)
-        variants["wo_monitor"] = run_experiment(
-            "metronome", cluster, wls, cfg, background=bg)
-
-        hi, lo = priority_split(wls)
-        full = variants["full"]
-
-        def agg(r, names):
-            vals = [r.sim.time_per_1000_iters_s[j] for j in names
-                    if j in r.sim.time_per_1000_iters_s]
-            return float(np.mean(vals)) if vals else float("nan")
-
-        for label in ("wo_stage3", "wo_monitor"):
-            v = variants[label]
+        scn = snapshot_scenario(sid, n_iterations=n_iter)
+        with Timer() as t:
+            sw = common.run_sweep([scn], ABLATIONS, _cfg(),
+                                  origin="ablation")
+            # the monitor lives in SimConfig, so the wo_monitor ablation is
+            # the same policy under a monitor-less configuration
+            sw_mon = common.run_sweep(
+                [scn], [Policy("metronome", label="wo_monitor")],
+                _cfg(monitor=False), origin="ablation")
+        full = sw.get(sid, "full")
+        variants = {"wo_stage3": sw.get(sid, "wo_stage3"),
+                    "wo_monitor": sw_mon.get(sid, "wo_monitor")}
+        hi, lo = full.high_priority, full.low_priority
+        for label, v in variants.items():
             emit(f"tableVII_{sid}_{label}" if label == "wo_stage3"
-                 else f"tableVIII_{sid}_{label}", 0.0,
-                 f"lo_pct={100*(agg(v, lo)/agg(full, lo)-1):.2f};"
-                 f"hi_pct={100*(agg(v, hi)/agg(full, hi)-1):.2f};"
+                 else f"tableVIII_{sid}_{label}", t.us / 3,
+                 f"lo_pct={100*(v.mean_s_per_1000(lo)/full.mean_s_per_1000(lo)-1):.2f};"
+                 f"hi_pct={100*(v.mean_s_per_1000(hi)/full.mean_s_per_1000(hi)-1):.2f};"
                  f"gamma_delta_pp="
                  f"{100*(v.sim.avg_bw_utilization - full.sim.avg_bw_utilization):.2f};"
                  f"readj_full={full.sim.readjustments};"

@@ -2,42 +2,32 @@
 
 Sweeps the dynamic snapshots (D1: background-flow ramp on a contended host
 link; D2: spine-uplink capacity drop at 4:1 oversubscription — see
-``configs.metronome_testbed.make_dynamic_snapshot``) over fluctuation
-amplitude x scheduler, including the no-reconfigure ablation (the
-controller's section III-C loop disabled: capacity/background changes are
-handled only by the A_T/O_T drift monitor).
+``configs.metronome_testbed.dynamic_scenario``) over fluctuation amplitude
+x policy, including the no-reconfigure ablation (the controller's section
+III-C loop disabled: capacity/background changes are handled only by the
+A_T/O_T drift monitor — now just ``Policy(reconfigure=False)``).
 
-Emits, per (snapshot, amplitude, scheduler): high/low-priority avg JCT,
+Emits, per (snapshot, amplitude, policy): high/low-priority avg JCT,
 Gamma, readjustment and reconfiguration counts; plus per amplitude the
 Metronome JCT gain over Default and the low-priority JCT delta of
 reconfiguration vs the ablation.
 """
 from __future__ import annotations
 
-import numpy as np
-
 from repro.configs.metronome_testbed import (DYNAMIC_SNAPSHOTS,
-                                             make_dynamic_snapshot)
-from repro.core.harness import priority_split, run_experiment
+                                             dynamic_scenario)
+from repro.core.experiment import Policy
 from repro.core.simulator import SimConfig
 
 from . import common
 from .common import Timer, emit
 
 AMPLITUDES = (0.2, 0.3, 0.4)
-# (label, scheduler, reconfigure)
-VARIANTS = (
-    ("metronome", "metronome", True),
-    ("metronome_noreconf", "metronome", False),
-    ("default", "default", True),
+POLICIES = (
+    Policy("metronome"),
+    Policy("metronome", reconfigure=False, label="metronome_noreconf"),
+    Policy("default"),
 )
-
-
-
-def _jct_ms(res, jobs) -> float:
-    fin = [res.sim.finish_times_ms[j] for j in jobs
-           if not np.isnan(res.sim.finish_times_ms[j])]
-    return float(np.mean(fin)) if fin else float("nan")
 
 
 def run() -> None:
@@ -45,29 +35,25 @@ def run() -> None:
                     jitter_std=0.01)
     for sid in DYNAMIC_SNAPSHOTS:
         for amp in common.pick(AMPLITUDES, (0.3,)):
-            results = {}
+            scn = dynamic_scenario(
+                sid, n_iterations=common.pick(300, 25), amplitude=amp,
+                t_on_ms=common.pick(15_000.0, 4_000.0),
+                t_off_ms=common.pick(45_000.0, 12_000.0))
+            with Timer() as t:
+                sw = common.run_sweep([scn], POLICIES, cfg, origin="dynamic")
             lo_jct = {}
-            for label, sched, reconf in VARIANTS:
-                cluster, wls, bg, evs = make_dynamic_snapshot(
-                    sid, n_iterations=common.pick(300, 25), amplitude=amp,
-                    t_on_ms=common.pick(15_000.0, 4_000.0),
-                    t_off_ms=common.pick(45_000.0, 12_000.0))
-                hi, lo = priority_split(wls)
-                with Timer() as t:
-                    r = run_experiment(sched, cluster, wls, cfg,
-                                       background=bg, events=evs,
-                                       reconfigure=reconf)
-                results[label] = r
-                lo_jct[label] = _jct_ms(r, lo)
-                emit(f"dynamic_{sid}_a{amp:g}_{label}", t.us,
-                     f"hi_jct_s={_jct_ms(r, hi) / 1e3:.2f};"
-                     f"lo_jct_s={lo_jct[label] / 1e3:.2f};"
+            for pol in POLICIES:
+                r = sw.get(sid, pol.name)
+                lo_jct[pol.name] = r.mean_jct_ms(r.low_priority)
+                emit(f"dynamic_{sid}_a{amp:g}_{pol.name}",
+                     t.us / len(POLICIES),
+                     f"hi_jct_s={r.mean_jct_ms(r.high_priority) / 1e3:.2f};"
+                     f"lo_jct_s={lo_jct[pol.name] / 1e3:.2f};"
                      f"gamma={r.sim.avg_bw_utilization:.3f};"
                      f"readj={r.sim.readjustments};"
                      f"reconf={r.sim.reconfigurations}")
-            all_jobs = lambda r: list(r.sim.finish_times_ms)  # noqa: E731
-            me = _jct_ms(results["metronome"], all_jobs(results["metronome"]))
-            de = _jct_ms(results["default"], all_jobs(results["default"]))
+            me = sw.get(sid, "metronome").mean_jct_ms()
+            de = sw.get(sid, "default").mean_jct_ms()
             gain = 100.0 * (1.0 - me / de) if de else float("nan")
             # reconfiguration value: low-priority JCT saved vs the ablation
             saved = 100.0 * (1.0 - lo_jct["metronome"]

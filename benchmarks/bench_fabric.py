@@ -13,16 +13,16 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.configs.metronome_testbed import FABRIC_SNAPSHOTS, make_snapshot
+from repro.configs.metronome_testbed import (FABRIC_SNAPSHOTS, make_snapshot,
+                                             snapshot_scenario)
 from repro.core.cluster import make_fabric_cluster
-from repro.core.harness import run_experiment
+from repro.core.experiment import Policy, Scenario
 from repro.core.simulator import SimConfig
 
 from . import common
-from .common import Timer, emit
+from .common import POLICIES, Timer, emit
 
 RATIOS = (1.0, 2.0, 4.0)
-SCHEDULERS = ("metronome", "default", "diktyo", "ideal")
 
 
 def _cfg() -> SimConfig:
@@ -30,52 +30,50 @@ def _cfg() -> SimConfig:
                      jitter_std=0.01)
 
 
-def _f2_workloads(n_iterations=None):
-    """The F2 snapshot's workload pair (single source of truth for the
-    spec lives in configs.metronome_testbed); only the cluster varies
-    across the oversubscription sweep."""
-    if n_iterations is None:
-        n_iterations = common.pick(300, 25)
-    _, wls, _ = make_snapshot("F2", n_iterations=n_iterations)
-    return wls
+def _ratio_scenario(ratio: float) -> Scenario:
+    """The F2 workload pair (single source of truth for the spec lives in
+    configs.metronome_testbed) on a fabric with the given oversubscription
+    ratio; only the cluster varies across the sweep."""
 
-
-def _avg_jct_ms(res) -> float:
-    fin = [v for v in res.sim.finish_times_ms.values() if not np.isnan(v)]
-    return float(np.mean(fin)) if fin else float("nan")
+    def build(ratio=ratio):
+        cluster = make_fabric_cluster(n_leaves=2, hosts_per_leaf=2,
+                                      bw_gbps=25.0, oversubscription=ratio)
+        _, wls, _ = make_snapshot("F2", n_iterations=common.pick(300, 25))
+        return cluster, wls
+    return Scenario(name=f"F2@{ratio:g}to1", build=build)
 
 
 def run() -> None:
     cfg = _cfg()
     for ratio in common.pick(RATIOS, (2.0,)):
-        results = {}
-        for sched in SCHEDULERS:
-            cluster = make_fabric_cluster(n_leaves=2, hosts_per_leaf=2,
-                                          bw_gbps=25.0,
-                                          oversubscription=ratio)
-            wls = _f2_workloads()
-            with Timer() as t:
-                results[sched] = run_experiment(sched, cluster, wls, cfg)
-            r = results[sched]
+        scn = _ratio_scenario(ratio)
+        with Timer() as t:
+            sw = common.run_sweep([scn], POLICIES, cfg, origin="fabric")
+        for sched in common.SCHEDULER_NAMES:
+            r = sw.get(scn.name, sched)
             uplink = max(r.sim.uplink_utilization.values(), default=0.0)
             iters = [v for v in r.sim.time_per_1000_iters_s.values()
                      if not np.isnan(v)]
-            emit(f"fabric_{ratio:g}to1_{sched}", t.us,
-                 f"avg_jct_s={_avg_jct_ms(r) / 1e3:.2f};"
+            emit(f"fabric_{ratio:g}to1_{sched}",
+                 t.us / len(common.SCHEDULER_NAMES),
+                 f"avg_jct_s={r.mean_jct_ms() / 1e3:.2f};"
                  f"s_per_1000={np.mean(iters):.2f};"
                  f"uplink_util={uplink:.3f}")
-        me, de = _avg_jct_ms(results["metronome"]), _avg_jct_ms(results["default"])
+        me = sw.get(scn.name, "metronome").mean_jct_ms()
+        de = sw.get(scn.name, "default").mean_jct_ms()
         gain = 100.0 * (1.0 - me / de) if de else float("nan")
         emit(f"fabric_{ratio:g}to1_metronome_gain", 0.0,
              f"jct_gain_vs_default_pct={gain:.2f}")
     # the shipped fabric snapshots end-to-end (F2: 2:1, F4: 4:1, 3 jobs)
+    scenarios = [snapshot_scenario(sid, n_iterations=common.pick(300, 25))
+                 for sid in FABRIC_SNAPSHOTS]
+    policies = [Policy("metronome"), Policy("default")]
+    with Timer() as t:
+        sw = common.run_sweep(scenarios, policies, cfg, origin="fabric")
     for sid in FABRIC_SNAPSHOTS:
         for sched in ("metronome", "default"):
-            cluster, wls, bg = make_snapshot(
-                sid, n_iterations=common.pick(300, 25))
-            with Timer() as t:
-                r = run_experiment(sched, cluster, wls, cfg, background=bg)
+            r = sw.get(sid, sched)
             uplink = max(r.sim.uplink_utilization.values(), default=0.0)
-            emit(f"fabric_{sid}_{sched}", t.us,
-                 f"avg_jct_s={_avg_jct_ms(r) / 1e3:.2f};"
+            emit(f"fabric_{sid}_{sched}", t.us / (2 * len(FABRIC_SNAPSHOTS)),
+                 f"avg_jct_s={r.mean_jct_ms() / 1e3:.2f};"
                  f"uplink_util={uplink:.3f};readj={r.sim.readjustments}")

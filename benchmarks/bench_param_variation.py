@@ -5,63 +5,80 @@ from __future__ import annotations
 import numpy as np
 
 from repro.configs.metronome_testbed import make_snapshot
-from repro.core.harness import priority_split, run_experiment
-from repro.core.simulator import SimConfig
+from repro.core.events import TrafficChange
+from repro.core.experiment import Policy, Scenario
 
 from . import common
 from .common import Timer, emit
+
+POLICIES = tuple(Policy(s) for s in ("metronome", "default", "diktyo"))
+
+
+def _s1_scenario(label: str, halve_batch: bool, n_iter: int) -> Scenario:
+    """S1, optionally with every job's duty rising 1.4x mid-run (the
+    batch-size-halving traffic change of Fig. 11) as typed events."""
+
+    def build():
+        cluster, wls, bg = make_snapshot("S1", n_iterations=n_iter)
+        events = []
+        if halve_batch:
+            t_on = common.pick(30_000.0, 5_000.0)
+            events = [TrafficChange(t_on, j.name, 1.4)
+                      for wl in wls for j in wl.jobs]
+        return cluster, wls, bg, events
+    return Scenario(name=f"S1-{label}", build=build)
+
+
+def _tau_scenario(sid: str, tau: float, n_iter: int) -> Scenario:
+    """S4/S5 with the congested node's latency parameter overridden."""
+
+    def build():
+        cluster, wls, bg = make_snapshot(sid, n_iterations=n_iter)
+        for other in cluster.node_names:
+            if other != "worker-a30-2":
+                cluster.set_latency("worker-a30-2", other, tau)
+        return cluster, wls, bg
+    return Scenario(name=f"{sid}-tau{int(tau)}", build=build)
+
+
+def _accel(sw, scn_name: str, other: str) -> float:
+    me = sw.get(scn_name, "metronome")
+    o = sw.get(scn_name, other)
+    both = sorted(set(me.sim.time_per_1000_iters_s)
+                  & set(o.sim.time_per_1000_iters_s))
+    return 100.0 * (1 - np.mean([me.sim.time_per_1000_iters_s[j]
+                                 for j in both])
+                    / np.mean([o.sim.time_per_1000_iters_s[j]
+                               for j in both]))
 
 
 def run() -> None:
     cfg = common.bench_cfg()
     n_iter = common.pick(400, 30)
     # --- Fig. 11: halve the batch size of all S1 jobs at t=30s -> duty up ---
-    for label, changes in (("orig", ()),
-                           ("halved_batch", (("t", None, 1.4),))):
-        results = {}
-        for sched in ("metronome", "default", "diktyo"):
-            cluster, wls, bg = make_snapshot("S1", n_iterations=n_iter)
-            tc = []
-            if changes:
-                t_on = common.pick(30_000.0, 5_000.0)
-                tc = [(t_on, j.name, 1.4) for wl in wls for j in wl.jobs]
-            with Timer() as t:
-                results[sched] = run_experiment(
-                    sched, cluster, wls, cfg, background=bg,
-                    traffic_changes=tc)
-        me = results["metronome"]
+    for label, halved in (("orig", False), ("halved_batch", True)):
+        scn = _s1_scenario(label, halved, n_iter)
+        with Timer() as t:
+            sw = common.run_sweep([scn], POLICIES, cfg,
+                                  origin="param_variation")
         for other in ("default", "diktyo"):
-            o = results[other]
-            both = set(me.sim.time_per_1000_iters_s) & set(
-                o.sim.time_per_1000_iters_s)
-            acc = 100.0 * (1 - np.mean([me.sim.time_per_1000_iters_s[j]
-                                        for j in both])
-                           / np.mean([o.sim.time_per_1000_iters_s[j]
-                                      for j in both]))
-            emit(f"fig11_{label}_accel_vs_{other}", t.us,
-                 f"accel_pct={acc:.2f};"
+            me = sw.get(scn.name, "metronome")
+            o = sw.get(scn.name, other)
+            emit(f"fig11_{label}_accel_vs_{other}", t.us / len(POLICIES),
+                 f"accel_pct={_accel(sw, scn.name, other):.2f};"
                  f"gamma_me={me.sim.avg_bw_utilization:.4f};"
                  f"gamma_other={o.sim.avg_bw_utilization:.4f}")
 
     # --- Fig. 12: sweep the congestion latency parameter on S4/S5 ----------
     for sid in ("S4", "S5"):
-        for tau in common.pick((10.0, 40.0, 80.0), (40.0,)):
-            results = {}
-            for sched in ("metronome", "default", "diktyo"):
-                cluster, wls, bg = make_snapshot(
-                    sid, n_iterations=common.pick(300, 25))
-                for other in cluster.node_names:
-                    if other != "worker-a30-2":
-                        cluster.set_latency("worker-a30-2", other, tau)
-                with Timer() as t:
-                    results[sched] = run_experiment(
-                        sched, cluster, wls, cfg, background=bg)
-            me = results["metronome"]
+        scenarios = [_tau_scenario(sid, tau, common.pick(300, 25))
+                     for tau in common.pick((10.0, 40.0, 80.0), (40.0,))]
+        with Timer() as t:
+            sw = common.run_sweep(scenarios, POLICIES, cfg,
+                                  origin="param_variation")
+        for scn in scenarios:
             for other in ("default", "diktyo"):
-                o = results[other]
-                both = set(me.sim.time_per_1000_iters_s)
-                acc = 100.0 * (1 - np.mean(
-                    [me.sim.time_per_1000_iters_s[j] for j in both])
-                    / np.mean([o.sim.time_per_1000_iters_s[j] for j in both]))
-                emit(f"fig12_{sid}_tau{int(tau)}_vs_{other}", t.us,
-                     f"accel_pct={acc:.2f}")
+                emit(f"fig12_{scn.name.replace(f'{sid}-', f'{sid}_')}"
+                     f"_vs_{other}",
+                     t.us / (len(scenarios) * len(POLICIES)),
+                     f"accel_pct={_accel(sw, scn.name, other):.2f}")

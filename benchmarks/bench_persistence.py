@@ -1,10 +1,10 @@
 """Table VI: short vs extended observation windows (gain persistence)."""
 from __future__ import annotations
 
-import numpy as np
+import dataclasses
 
-from repro.configs.metronome_testbed import make_snapshot
-from repro.core.harness import priority_split, run_experiment
+from repro.configs.metronome_testbed import snapshot_scenario
+from repro.core.experiment import Policy
 from repro.core.simulator import SimConfig
 
 from . import common
@@ -12,26 +12,28 @@ from .common import Timer, emit
 
 
 def run() -> None:
+    metronome = [Policy("metronome")]
     for sid in ("S1", "S2", "S3"):
-        rows = {}
+        # per-variant SimConfig rides on the Scenario itself
+        scenarios = []
         for label, dur, iters in (
                 ("short", common.pick(150_000.0, 15_000.0),
                  common.pick(400, 30)),
                 ("long", common.pick(600_000.0, 30_000.0),
                  common.pick(5000, 60))):
-            cluster, wls, bg = make_snapshot(sid, n_iterations=iters)
-            cfg = SimConfig(duration_ms=dur, seed=3, jitter_std=0.01)
-            with Timer() as t:
-                rows[label] = (run_experiment("metronome", cluster, wls, cfg,
-                                              background=bg), wls, t)
-        res_s, wls, t = rows["short"]
-        res_l, _, _ = rows["long"]
-        hi, lo = priority_split(wls)
-
-        def agg(r, names):
-            v = [r.sim.time_per_1000_iters_s[j] for j in names]
-            return float(np.mean(v)) if v else float("nan")
-
-        emit(f"tableVI_{sid}", t.us,
-             f"lo_short={agg(res_s, lo):.2f};lo_long={agg(res_l, lo):.2f};"
-             f"hi_short={agg(res_s, hi):.2f};hi_long={agg(res_l, hi):.2f}")
+            scn = snapshot_scenario(
+                sid, n_iterations=iters,
+                sim_config=SimConfig(duration_ms=dur, seed=3,
+                                     jitter_std=0.01))
+            scenarios.append(dataclasses.replace(scn, name=f"{sid}-{label}"))
+        with Timer() as t:
+            sw = common.run_sweep(scenarios, metronome, None,
+                                  origin="persistence")
+        res_s = sw.get(f"{sid}-short", "metronome")
+        res_l = sw.get(f"{sid}-long", "metronome")
+        hi, lo = res_s.high_priority, res_s.low_priority
+        emit(f"tableVI_{sid}", t.us / 2,
+             f"lo_short={res_s.mean_s_per_1000(lo):.2f};"
+             f"lo_long={res_l.mean_s_per_1000(lo):.2f};"
+             f"hi_short={res_s.mean_s_per_1000(hi):.2f};"
+             f"hi_long={res_l.mean_s_per_1000(hi):.2f}")

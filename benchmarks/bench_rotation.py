@@ -25,17 +25,23 @@ import time
 
 import numpy as np
 
-from repro.configs.metronome_testbed import make_snapshot
+from repro.configs.metronome_testbed import make_snapshot, snapshot_scenario
 from repro.core import geometry, rotation, scoring
 from repro.core.contention import LinkView
 from repro.core.controller import StopAndWaitController
+from repro.core.experiment import Policy
 from repro.core.framework import SchedulingFramework
-from repro.core.harness import run_experiment
 from repro.core.scheduler import MetronomePlugin
 from repro.core.topology import is_uplink
 
 from . import common
 from .common import Timer, emit
+
+# the joint planner vs the pre-planner "uplinks take precedence" ablation
+J1_POLICIES = (
+    Policy("metronome", label="joint"),
+    Policy("metronome", rotation_joint=False, label="legacy"),
+)
 
 
 def _worst_planning_score(cluster, registry, ctrl) -> float:
@@ -75,21 +81,20 @@ def _schedule(sid: str, joint: bool, n_iterations: int):
 def _bench_j1() -> None:
     n_iter = common.pick(300, 25)
     cfg = common.bench_cfg(jitter_std=0.02)
-    results = {}
-    for label, joint in (("joint", True), ("legacy", False)):
-        cluster, fw, ctrl, _ = _schedule("J1", joint, n_iter)
+    scn = snapshot_scenario("J1", n_iterations=n_iter)
+    with Timer() as t:
+        sw = common.run_sweep([scn], J1_POLICIES, cfg, origin="rotation")
+    for pol in J1_POLICIES:
+        # fabric feasibility of the final offsets (planner-internal view)
+        cluster, fw, ctrl, _ = _schedule("J1", pol.rotation_joint, n_iter)
         feas = _worst_planning_score(cluster, fw.registry, ctrl)
-        cluster, wls, bg = make_snapshot("J1", n_iterations=n_iter)
-        with Timer() as t:
-            r = run_experiment("metronome", cluster, wls, cfg, background=bg,
-                               rotation_joint=joint)
-        results[label] = r
-        emit(f"rotation_J1_{label}", t.us,
+        r = sw.get("J1", pol.name)
+        emit(f"rotation_J1_{pol.name}", t.us / len(J1_POLICIES),
              f"worst_link_score={feas:.2f};"
              f"lo_jct_s={r.sim.finish_times_ms.get('j1-local', np.nan)/1e3:.2f};"
              f"tct_s={r.sim.total_completion_ms/1e3:.2f}")
-    lo_j = results["joint"].sim.finish_times_ms.get("j1-local", np.nan)
-    lo_l = results["legacy"].sim.finish_times_ms.get("j1-local", np.nan)
+    lo_j = sw.get("J1", "joint").sim.finish_times_ms.get("j1-local", np.nan)
+    lo_l = sw.get("J1", "legacy").sim.finish_times_ms.get("j1-local", np.nan)
     delta = 100.0 * (1.0 - lo_j / lo_l) if lo_l else float("nan")
     emit("rotation_J1_joint_vs_legacy", 0.0,
          f"lo_jct_saving_pct={delta:.2f}")

@@ -2,55 +2,45 @@
 plus Table V: average bandwidth utilization deltas."""
 from __future__ import annotations
 
-import numpy as np
-
 from repro.configs.metronome_testbed import SNAPSHOTS
-from repro.core.harness import priority_split
 
-from .common import SCHEDULERS, Timer, emit, run_snapshot_all
+from .common import SCHEDULER_NAMES, Timer, emit, snapshot_sweep
 
 
 def run() -> None:
     for sid in SNAPSHOTS:
         with Timer() as t:
-            results = run_snapshot_all(sid)
-        wls = results.pop("_workloads")
-        hi, lo = priority_split(wls)
-        me = results["metronome"]
-        for sched in SCHEDULERS:
-            r = results[sched]
-            hi_t = np.mean([r.sim.time_per_1000_iters_s[j] for j in hi]) if hi else float("nan")
-            lo_t = np.mean([r.sim.time_per_1000_iters_s[j] for j in lo]) if lo else float("nan")
-            emit(f"fig7_{sid}_{sched}", t.us / len(SCHEDULERS),
-                 f"hi_s_per_1000={hi_t:.2f};lo_s_per_1000={lo_t:.2f};"
+            sw = snapshot_sweep(sid, origin="snapshots")
+        me = sw.get(sid, "metronome")
+        hi, lo = me.high_priority, me.low_priority
+        for sched in SCHEDULER_NAMES:
+            r = sw.get(sid, sched)
+            emit(f"fig7_{sid}_{sched}", t.us / len(SCHEDULER_NAMES),
+                 f"hi_s_per_1000={r.mean_s_per_1000(hi):.2f};"
+                 f"lo_s_per_1000={r.mean_s_per_1000(lo):.2f};"
                  f"gamma={r.sim.avg_bw_utilization:.4f};"
                  f"readj={r.sim.readjustments}")
         # Fig. 8-style accelerations of Metronome vs De/Di (+ vs ideal gap)
         for other in ("default", "diktyo"):
-            o = results[other]
+            o = sw.get(sid, other)
             if hi:
-                acc = 100.0 * (1 - np.mean([me.sim.time_per_1000_iters_s[j]
-                                            for j in hi])
-                               / np.mean([o.sim.time_per_1000_iters_s[j]
-                                          for j in hi]))
+                acc = 100.0 * (1 - me.mean_s_per_1000(hi)
+                               / o.mean_s_per_1000(hi))
                 emit(f"fig8_{sid}_hi_accel_vs_{other}", 0.0,
                      f"accel_pct={acc:.2f}")
             if lo:
-                acc = 100.0 * (1 - np.mean([me.sim.time_per_1000_iters_s[j]
-                                            for j in lo])
-                               / np.mean([o.sim.time_per_1000_iters_s[j]
-                                          for j in lo]))
+                acc = 100.0 * (1 - me.mean_s_per_1000(lo)
+                               / o.mean_s_per_1000(lo))
                 emit(f"fig8_{sid}_lo_accel_vs_{other}", 0.0,
                      f"accel_pct={acc:.2f}")
         if hi:
-            gap = 100.0 * (np.mean([me.sim.time_per_1000_iters_s[j] for j in hi])
-                           / np.mean([results["ideal"].sim.time_per_1000_iters_s[j]
-                                      for j in hi]) - 1)
+            gap = 100.0 * (me.mean_s_per_1000(hi)
+                           / sw.get(sid, "ideal").mean_s_per_1000(hi) - 1)
             emit(f"claim_{sid}_hi_vs_ideal", 0.0, f"gap_pct={gap:.2f}")
         # Table V: gamma deltas (percentage points and relative %)
         for other in ("default", "diktyo", "ideal"):
             g_me = me.sim.avg_bw_utilization
-            g_o = results[other].sim.avg_bw_utilization
+            g_o = sw.get(sid, other).sim.avg_bw_utilization
             rel = 100.0 * (g_me - g_o) / max(g_o, 1e-9)
             emit(f"tableV_{sid}_vs_{other}", 0.0,
-             f"gamma_delta_pp={100*(g_me-g_o):.2f};gamma_rel_pct={rel:.2f}")
+                 f"gamma_delta_pp={100*(g_me-g_o):.2f};gamma_rel_pct={rel:.2f}")

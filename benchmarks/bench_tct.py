@@ -1,18 +1,19 @@
 """Fig. 10: total completion time of a Gavel-style trace (online arrivals).
 
-Trace truncation is event-driven (``trace_to_jobs(..., open_ended=True)`` +
-``trace_departure_events``): jobs end when their JobDeparture fires on the
-simulator clock — a contended job completes FEWER iterations in its window
-instead of holding its GPUs longer, and never-admitted jobs depart from the
-pending queue (the K8s deadline behavior)."""
+Trace truncation is event-driven (``trace_scenario(open_ended=True)``):
+jobs end when their JobDeparture fires on the simulator clock — a contended
+job completes FEWER iterations in its window instead of holding its GPUs
+longer, and never-admitted jobs depart from the pending queue (the K8s
+deadline behavior).  The 'ideal' reference runs each job alone on a
+dedicated cluster and ignores the event stream, so it keeps the legacy
+iteration caps (the static bound) via a capped companion scenario.
+"""
 from __future__ import annotations
 
-from repro.configs.metronome_testbed import MODEL_FLEET, make_snapshot
-from repro.core.harness import run_trace_experiment
+from repro.configs.metronome_testbed import MODEL_FLEET, trace_scenario
+from repro.core.experiment import Policy
 from repro.core.simulator import SimConfig
-from repro.core.trace import (cluster_load, generate_trace,
-                              trace_departure_events, trace_to_jobs)
-from repro.core.workload import Workload
+from repro.core.trace import cluster_load, generate_trace
 
 from . import common
 from .common import Timer, emit
@@ -26,24 +27,21 @@ def run() -> None:
     load = cluster_load(trace, 13, 1800)
     cfg = SimConfig(duration_ms=common.pick(1_200_000, 120_000), seed=0,
                     jitter_std=0.01)
-    for sched in ("metronome", "default", "diktyo", "ideal"):
-        cluster, _, _ = make_snapshot("S1")
-        # 'ideal' runs each job alone on a dedicated cluster and ignores the
-        # event stream -> keep its legacy iteration caps (the static bound)
-        open_ended = sched != "ideal"
-        jobs = trace_to_jobs(trace, MODEL_FLEET, time_scale=1.0,
-                             open_ended=open_ended)
-        events = (trace_departure_events(trace, time_scale=1.0)
-                  if open_ended else ())
-        wls = [Workload(name=j.name, jobs=[j]) for j in jobs]
-        for w in wls:
-            for j in w.jobs:
-                j.workload = w.name
-                for t in j.tasks:
-                    t.workload = w.name
-        with Timer() as t:
-            res = run_trace_experiment(sched, cluster, wls, cfg,
-                                       events=events)
-        emit(f"fig10_tct_{sched}", t.us,
+    open_scn = trace_scenario(trace, open_ended=True, name="gavel-trace")
+    capped_scn = trace_scenario(trace, open_ended=False,
+                                name="gavel-trace-capped")
+    with Timer() as t:
+        sw = common.run_sweep(
+            [open_scn], [Policy(s) for s in ("metronome", "default",
+                                             "diktyo")],
+            cfg, origin="tct")
+        sw_ideal = common.run_sweep([capped_scn], [Policy("ideal")], cfg,
+                                    origin="tct")
+    per_run_us = t.us / 4
+    for sched, res in (("metronome", sw.get(open_scn.name, "metronome")),
+                       ("default", sw.get(open_scn.name, "default")),
+                       ("diktyo", sw.get(open_scn.name, "diktyo")),
+                       ("ideal", sw_ideal.get(capped_scn.name, "ideal"))):
+        emit(f"fig10_tct_{sched}", per_run_us,
              f"tct_s={res.sim.total_completion_ms/1e3:.1f};load={load:.2f};"
-             f"n_jobs={len(jobs)};queued_left={len(res.rejected)}")
+             f"n_jobs={len(trace)};queued_left={len(res.rejected)}")

@@ -1,54 +1,50 @@
 """Fig. 14 (O_T / A_T monitor thresholds) and Fig. 15 (G_T / E_T period
-approximation via idle injection on snapshot 3)."""
+approximation via idle injection on snapshot 3).
+
+The controller thresholds ride on ``Policy.options`` (scheduler-specific
+options forwarded to ``StopAndWaitController``), so the sweep is a plain
+policy grid instead of a hand-rolled framework/simulator pipeline."""
 from __future__ import annotations
 
-import numpy as np
-
-from repro.configs.metronome_testbed import MODEL_FLEET, make_snapshot
-from repro.core.controller import StopAndWaitController
-from repro.core.framework import SchedulingFramework
-from repro.core.harness import priority_split
-from repro.core.scheduler import MetronomePlugin
-from repro.core.simulator import ClusterSimulator, SimConfig
+from repro.configs.metronome_testbed import MODEL_FLEET, snapshot_scenario
+from repro.core.experiment import Policy
+from repro.core.experiment import run as run_cell
+from repro.core.simulator import SimConfig
 
 from . import common
 from .common import Timer, emit
 
 
-def _run_with(sid: str, a_t: float, o_t: int, jitter: float = 0.02):
-    cluster, wls, bg = make_snapshot(sid, n_iterations=common.pick(400, 30))
-    ctrl = StopAndWaitController(a_t=a_t, o_t=o_t)
-    fw = SchedulingFramework(cluster, MetronomePlugin(controller=ctrl))
-    jobs = []
-    for wl in wls:
-        fw.schedule_workload(wl)
-        jobs.extend(wl.jobs)
-    ctrl.run_offline_recalculation(fw.registry, cluster)
-    sim = ClusterSimulator(cluster, jobs,
-                           SimConfig(duration_ms=common.pick(150_000, 15_000),
-                                     seed=3, jitter_std=jitter),
-                           controller=ctrl, background=bg,
-                           registry=fw.registry)
-    res = sim.run()
-    return res, wls
+def _cfg(jitter: float = 0.02) -> SimConfig:
+    return SimConfig(duration_ms=common.pick(150_000, 15_000), seed=3,
+                     jitter_std=jitter)
+
+
+def _threshold_policy(a_t: float, o_t: int) -> Policy:
+    return Policy("metronome").with_options(a_t=a_t, o_t=o_t)
 
 
 def run() -> None:
     # --- Fig. 14: A_T x O_T flame chart over S1..S5 -------------------------
     for sid in common.pick(("S1", "S2", "S3"), ("S2",)):
-        base = None
+        scn = snapshot_scenario(sid, n_iterations=common.pick(400, 30))
+        policies = [_threshold_policy(a_t, o_t)
+                    for o_t in common.pick((3, 5), (5,))
+                    for a_t in common.pick((1.05, 1.10, 1.15), (1.10,))]
+        with Timer() as t:
+            sw = common.run_sweep([scn], policies, _cfg(),
+                                  origin="thresholds")
         rows = []
-        for o_t in common.pick((3, 5), (5,)):
-            for a_t in common.pick((1.05, 1.10, 1.15), (1.10,)):
-                with Timer() as t:
-                    res, wls = _run_with(sid, a_t, o_t)
-                hi, lo = priority_split(wls)
-                lo_t = np.mean([res.time_per_1000_iters_s[j] for j in lo]) \
-                    if lo else float("nan")
-                rows.append((a_t, o_t, lo_t, res.readjustments, t.us))
+        for pol in policies:
+            res = sw.get(sid, pol.name)
+            opts = pol.scheduler_options()
+            rows.append((opts["a_t"], opts["o_t"],
+                         res.mean_s_per_1000(res.low_priority),
+                         res.sim.readjustments))
         best = min(r[2] for r in rows)
-        for a_t, o_t, lo_t, readj, us in rows:
-            emit(f"fig14_{sid}_AT{int(a_t*100)}_OT{o_t}", us,
+        for a_t, o_t, lo_t, readj in rows:
+            emit(f"fig14_{sid}_AT{int(a_t*100)}_OT{o_t}",
+                 t.us / len(policies),
                  f"lo_increase_pct={100*(lo_t/best-1):.2f};readj={readj}")
 
     # --- Fig. 15: period-gap sweep on S3 (G_T / E_T) ------------------------
@@ -56,16 +52,17 @@ def run() -> None:
     vgg = dict(MODEL_FLEET["FT-VGG19-S3"])
     # benchmark: exactly commensurate 2:1 periods
     gaps = common.pick((35.0, 30.0, 20.0, 10.0, 5.0, 0.0), (35.0, 0.0))
+    pol = _threshold_policy(1.10, 5)
     ref_lo = ref_hi = None
     for gap in gaps:
         MODEL_FLEET["FT-WideResNet101"] = dict(
             wrn, period_ms=vgg["period_ms"] / 2 - gap)
         try:
+            scn = snapshot_scenario("S3", n_iterations=common.pick(400, 30))
             with Timer() as t:
-                res, wls = _run_with("S3", 1.10, 5)
-            hi, lo = priority_split(wls)
-            lo_t = np.mean([res.time_per_1000_iters_s[j] for j in lo])
-            hi_t = np.mean([res.time_per_1000_iters_s[j] for j in hi])
+                res = run_cell(scn, pol, _cfg())
+            lo_t = res.mean_s_per_1000(res.low_priority)
+            hi_t = res.mean_s_per_1000(res.high_priority)
             if gap == 0.0:
                 ref_lo, ref_hi = lo_t, hi_t
             emit(f"fig15_gap{int(gap)}ms", t.us,
@@ -75,3 +72,4 @@ def run() -> None:
     if ref_lo:
         emit("fig15_benchmark", 0.0,
              f"lo_ref={ref_lo:.2f};hi_ref={ref_hi:.2f}")
+

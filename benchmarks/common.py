@@ -1,14 +1,25 @@
-"""Shared helpers for the per-table benchmarks."""
+"""Shared helpers for the per-table benchmarks.
+
+Benches run their experiment grids through the Scenario/Policy sweep API
+(``repro.core.experiment``).  Every sweep executed via :func:`run_sweep` is
+recorded in-process; ``benchmarks/run.py --sweep-out`` persists the merged
+record as schema-versioned ``BENCH_sweep.json`` (uploaded + validated in
+CI), so the perf/result trajectory of every bench is a machine-readable
+artifact instead of stdout-only CSV rows.
+"""
 from __future__ import annotations
 
+import sys
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
-from repro.configs.metronome_testbed import SNAPSHOTS, make_snapshot
-from repro.core.harness import RunResult, priority_split, run_experiment
+from repro.configs.metronome_testbed import snapshot_scenario
+from repro.core.experiment import Policy, Scenario, sweep
+from repro.core.results import SweepResult, to_bench_dict
 from repro.core.simulator import SimConfig
 
-SCHEDULERS = ("metronome", "default", "diktyo", "ideal")
+SCHEDULER_NAMES = ("metronome", "default", "diktyo", "ideal")
+POLICIES = tuple(Policy(scheduler=s) for s in SCHEDULER_NAMES)
 
 BENCH_CFG = SimConfig(duration_ms=150_000.0, seed=3, jitter_std=0.01)
 
@@ -17,6 +28,9 @@ BENCH_CFG = SimConfig(duration_ms=150_000.0, seed=3, jitter_std=0.01)
 # cannot rot silently.  The flag is set BEFORE any run() executes; benches
 # read it at call time via pick().
 SMOKE = False
+
+# every sweep any bench ran this process (run.py --sweep-out persists it)
+RECORDED_SWEEPS: List[SweepResult] = []
 
 
 def pick(default, smoke_value):
@@ -33,30 +47,50 @@ def bench_cfg(**overrides) -> SimConfig:
     return cfg
 
 
-def run_snapshot_all(sid: str, n_iterations: Optional[int] = None,
-                     cfg: Optional[SimConfig] = None,
-                     schedulers=SCHEDULERS, **kw) -> Dict[str, RunResult]:
-    """Run one snapshot under every scheduler.
+def run_sweep(scenarios: Sequence[Scenario], policies: Sequence[Policy],
+              cfg: Optional[SimConfig] = None, *, origin: str,
+              strict: bool = True) -> SweepResult:
+    """Run a grid through ``experiment.sweep`` and record it for the
+    ``BENCH_sweep.json`` artifact.
 
-    Scheduler names key the :class:`RunResult`s; the single non-result key
-    ``"_workloads"`` holds the workload list of the FIRST scheduler's run
-    (every run regenerates structurally identical workloads from the same
-    snapshot, so one representative list is unambiguous — job names and
-    priorities are what callers consume)."""
+    ``strict=True`` (the bench default) re-raises after recording if any
+    cell failed, so a broken bench still fails run.py loudly — the
+    isolation lives in the artifact, which keeps the healthy cells."""
+    sw = sweep(scenarios, policies, cfg)
+    sw.meta.update(origin=origin, smoke=SMOKE)
+    RECORDED_SWEEPS.append(sw)
+    if strict and sw.errors:
+        bad = ", ".join(f"({c.scenario}, {c.policy})" for c in sw.errors)
+        for c in sw.errors:
+            print(c.error, file=sys.stderr)
+        raise RuntimeError(f"sweep cells failed in {origin}: {bad}")
+    return sw
+
+
+def snapshot_sweep(sid: str, n_iterations: Optional[int] = None,
+                   cfg: Optional[SimConfig] = None,
+                   policies: Sequence[Policy] = POLICIES, *,
+                   origin: str) -> SweepResult:
+    """One snapshot under every policy (each cell re-materializes the
+    snapshot, so runs never share mutated Job objects).  The old
+    ``run_snapshot_all`` dict — and its ``"_workloads"`` magic key — is
+    replaced by the typed :class:`SweepResult` (priority splits live on
+    each :class:`ExperimentResult`)."""
     if n_iterations is None:
         n_iterations = pick(400, 30)
     if cfg is None:
         cfg = bench_cfg()
-    out: Dict[str, RunResult] = {}
-    wls_rep = None
-    for sched in schedulers:
-        cluster, wls, bg = make_snapshot(sid, n_iterations=n_iterations)
-        out[sched] = run_experiment(sched, cluster, wls, cfg, background=bg,
-                                    **kw)
-        if wls_rep is None:
-            wls_rep = wls
-    out["_workloads"] = wls_rep
-    return out
+    scn = snapshot_scenario(sid, n_iterations=n_iterations)
+    return run_sweep([scn], policies, cfg, origin=origin)
+
+
+def write_sweeps(path: str) -> None:
+    """Persist every recorded sweep as schema-versioned BENCH_sweep.json."""
+    import json
+
+    with open(path, "w") as f:
+        json.dump(to_bench_dict(RECORDED_SWEEPS, smoke=SMOKE), f, indent=1,
+                  allow_nan=False)
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:

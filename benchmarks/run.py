@@ -37,6 +37,10 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny iteration counts / durations: every bench "
                          "runs end-to-end fast (CI keeps the scripts alive)")
+    ap.add_argument("--sweep-out", default=None, metavar="PATH",
+                    help="write every experiment sweep the benches ran as "
+                         "schema-versioned JSON (CI: BENCH_sweep.json, "
+                         "validated by scripts/validate_bench.py)")
     args = ap.parse_args()
     if args.smoke:
         common.SMOKE = True
@@ -49,6 +53,10 @@ def main() -> None:
         except Exception:  # noqa: BLE001 — keep the harness going
             traceback.print_exc()
             failed.append(name)
+    if args.sweep_out:
+        common.write_sweeps(args.sweep_out)
+        print(f"# wrote {len(common.RECORDED_SWEEPS)} sweeps to "
+              f"{args.sweep_out}", file=sys.stderr)
     if failed:
         print(f"# FAILED benches: {failed}", file=sys.stderr)
         sys.exit(1)

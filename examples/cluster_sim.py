@@ -1,22 +1,20 @@
 """Full-trace cluster simulation: Metronome vs Default vs Diktyo vs Ideal.
 
-Reproduces the paper's Fig. 10 experiment shape: a Gavel-style trace of
-training jobs arrives online; each scheduler places (and Metronome
-interleaves) them; we report TCT, bandwidth utilization, and per-priority
-iteration-time ratios.
+Reproduces the paper's Fig. 10 experiment shape through the declarative
+API: a Gavel-style trace becomes ONE trace-mode Scenario (online arrivals,
+queueing, eviction) and the mechanisms are a Policy list — including the
+controller ablations that only the new API can apply to trace runs
+(``--no-joint`` / ``--no-reconfigure``).
 
 Run:  PYTHONPATH=src python examples/cluster_sim.py [--jobs 10] [--seed 1]
 """
 import argparse
 
-import numpy as np
-
-from repro.configs.metronome_testbed import MODEL_FLEET, make_snapshot
+from repro.configs.metronome_testbed import MODEL_FLEET, trace_scenario
 from repro.core.cluster import make_fabric_cluster
-from repro.core.harness import run_trace_experiment
+from repro.core.experiment import Policy, sweep
 from repro.core.simulator import SimConfig
-from repro.core.trace import cluster_load, generate_trace, trace_to_jobs
-from repro.core.workload import Workload
+from repro.core.trace import cluster_load, generate_trace
 
 
 def main():
@@ -27,6 +25,11 @@ def main():
     ap.add_argument("--fabric", type=float, default=None, metavar="RATIO",
                     help="run on a 2-leaf fabric with this oversubscription "
                          "ratio instead of the paper's star testbed")
+    ap.add_argument("--no-joint", action="store_true",
+                    help="ablate the fabric-wide joint rotation planner "
+                         "(legacy uplink-wins tie-break)")
+    ap.add_argument("--no-reconfigure", action="store_true",
+                    help="ablate the section III-C reconfiguration loop")
     args = ap.parse_args()
 
     trace = generate_trace(MODEL_FLEET, duration_s=args.duration_s,
@@ -36,29 +39,29 @@ def main():
           f"{cluster_load(trace, 13, args.duration_s):.2f}")
     cfg = SimConfig(duration_ms=1_200_000, seed=0, jitter_std=0.01)
 
-    rows = []
-    for sched in ("metronome", "default", "diktyo", "ideal"):
-        if args.fabric is not None:
-            cluster = make_fabric_cluster(n_leaves=2, hosts_per_leaf=2,
-                                          oversubscription=args.fabric)
-        else:
-            cluster, _, _ = make_snapshot("S1")
-        jobs = trace_to_jobs(trace, MODEL_FLEET, time_scale=1.0)
-        wls = [Workload(name=j.name, jobs=[j]) for j in jobs]
-        for w in wls:
-            for j in w.jobs:
-                j.workload = w.name
-                for t in j.tasks:
-                    t.workload = w.name
-        res = run_trace_experiment(sched, cluster, wls, cfg)
-        rows.append((sched, res.sim.total_completion_ms / 1e3,
-                     res.sim.avg_bw_utilization, res.sim.readjustments))
+    cluster_factory = None
+    if args.fabric is not None:
+        cluster_factory = lambda: make_fabric_cluster(  # noqa: E731
+            n_leaves=2, hosts_per_leaf=2, oversubscription=args.fabric)
+    scenario = trace_scenario(trace, open_ended=False,
+                              cluster_factory=cluster_factory,
+                              name="gavel-trace")
+    policies = [
+        Policy("metronome", rotation_joint=not args.no_joint,
+               reconfigure=not args.no_reconfigure, label="metronome"),
+        Policy("default"), Policy("diktyo"), Policy("ideal"),
+    ]
+
+    grid = sweep([scenario], policies, cfg)
     print(f"\n{'scheduler':12s} {'TCT (s)':>10s} {'avg BW util':>12s} "
-          f"{'readjusts':>10s}")
-    for sched, tct, gamma, readj in rows:
-        print(f"{sched:12s} {tct:10.1f} {gamma:12.3f} {readj:10d}")
-    me = rows[0][1]
-    de = rows[1][1]
+          f"{'readjusts':>10s} {'queued':>7s}")
+    for pol in policies:
+        r = grid.get(scenario.name, pol.name)
+        print(f"{pol.name:12s} {r.sim.total_completion_ms / 1e3:10.1f} "
+              f"{r.sim.avg_bw_utilization:12.3f} "
+              f"{r.sim.readjustments:10d} {len(r.rejected):7d}")
+    me = grid.get(scenario.name, "metronome").sim.total_completion_ms / 1e3
+    de = grid.get(scenario.name, "default").sim.total_completion_ms / 1e3
     print(f"\nMetronome finishes {de - me:+.1f}s relative to Default "
           f"({100 * (1 - me / de):.1f}% faster)")
 

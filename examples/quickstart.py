@@ -1,67 +1,71 @@
-"""Quickstart: schedule two contending training jobs with Metronome.
+"""Quickstart: the declarative Scenario/Policy experiment API.
 
-Shows the whole mechanism in one page: placement (Algorithm 1), the TDM
-circle with assigned rotations, and the resulting interleaved bandwidth
-demand (Eq. 4) vs the naive zero-shift overlap.
+A Scenario says WHAT runs (cluster + workloads + background + events), a
+Policy says HOW it is scheduled (mechanism + ablation knobs), and
+``run(scenario, policy)`` / ``sweep(scenarios, policies)`` execute the
+grid — the shape of the paper's whole evaluation (snapshots x mechanisms).
+
+Shows, in one page: a two-job contention scenario, a policy grid with an
+ablation (``rotation_mode='compact'``), the typed per-cell results, and the
+JSON round-trip that backs the persisted ``BENCH_sweep.json`` artifact.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
+import json
 
-from repro.core import geometry
 from repro.core.cluster import Cluster, Node, Resources
-from repro.core.controller import StopAndWaitController
-from repro.core.framework import SchedulingFramework
-from repro.core.scheduler import MetronomePlugin
+from repro.core.experiment import Policy, Scenario, sweep
+from repro.core.results import ExperimentResult
+from repro.core.simulator import SimConfig
 from repro.core.workload import HIGH, LOW, Workload, make_job
 
 
-def bar(v, cap, width=50):
-    n = int(min(v / cap, 2.0) * width / 2)
-    mark = "#" * min(n, width // 2) + "!" * max(0, n - width // 2)
-    return mark.ljust(width)
-
-
-def main():
+def build():
+    """Fresh cluster + workloads per materialization (jobs are mutated by
+    scheduling, so every run() cell gets its own copies)."""
     nodes = [Node(f"n{i}", Resources(cpu=32, mem=256, gpu=4), bw_gbps=25.0)
              for i in range(2)]
     cluster = Cluster(nodes)
-    controller = StopAndWaitController()
-    fw = SchedulingFramework(cluster, MetronomePlugin(controller=controller))
-
     hi = make_job("train-hi", n_tasks=2, period_ms=100.0, duty=0.45,
-                  bw_gbps=20.0, priority=HIGH)
+                  bw_gbps=20.0, priority=HIGH, n_iterations=200)
     lo = make_job("train-lo", n_tasks=2, period_ms=100.0, duty=0.45,
-                  bw_gbps=20.0, priority=LOW, submit_time_s=1.0)
-    for job in (hi, lo):
-        ok = fw.schedule_workload(Workload(name=job.name, jobs=[job]))
-        print(f"scheduled {job.name}: {ok}, placement={job.nodes_used()}")
-    controller.run_offline_recalculation(fw.registry, cluster)
+                  bw_gbps=20.0, priority=LOW, submit_time_s=0.001,
+                  n_iterations=200)
+    wls = [Workload(name=j.name, jobs=[j]) for j in (hi, lo)]
+    return cluster, wls
 
-    print("\nassigned global offsets (ms):")
-    for j in ("train-hi", "train-lo"):
-        print(f"  {j}: {controller.job_offset_ms(j):.1f}")
 
-    pats = geometry.pattern_matrix([1, 1], [0.45, 0.45], 72)
-    bw = np.array([20.0, 20.0])
-    shift_lo = geometry.delay_to_shift_slots(
-        controller.job_offset_ms("train-lo"), 100.0)
-    for title, shifts in (("NAIVE (zero shifts) — contention:", [0, 0]),
-                          ("METRONOME (interleaved):", [0, shift_lo])):
-        d = geometry.demand(pats, bw, np.array(shifts))
-        util = geometry.link_utilization(pats, bw, np.array(shifts), 25.0)
-        ex = geometry.excess(pats, bw, np.array(shifts), 25.0)
-        print(f"\n{title}  link util={util:.2f}  excess={ex:.0f}")
-        print("  circle (72 slots, # = demand, ! = over capacity):")
-        for row in range(0, 72, 24):
-            line = "".join(
-                "!" if d[s] > 25 else ("#" if d[s] > 0 else ".")
-                for s in range(row, row + 24))
-            print(f"    [{row:2d}-{row+23:2d}] {line}")
-    print("\nscore (Eq. 18) naive:",
-          geometry.score(pats, bw, np.array([0, 0]), 25.0))
-    print("score (Eq. 18) metronome:",
-          geometry.score(pats, bw, np.array([0, shift_lo]), 25.0))
+def main():
+    scenario = Scenario(name="two-job-contention", build=build)
+    policies = [
+        Policy("metronome"),
+        Policy("metronome", rotation_mode="compact", label="metronome-compact"),
+        Policy("default"),
+        Policy("ideal"),  # dedicated-cluster reference (contention-free bound)
+    ]
+    cfg = SimConfig(duration_ms=40_000.0, seed=0, jitter_std=0.01)
+
+    grid = sweep([scenario], policies, cfg)
+    print(f"{'policy':20s} {'hi s/1000':>10s} {'lo s/1000':>10s} "
+          f"{'gamma':>7s} {'readj':>6s}")
+    for pol in policies:
+        r = grid.get(scenario.name, pol.name)
+        print(f"{pol.name:20s} {r.mean_s_per_1000(r.high_priority):10.2f} "
+              f"{r.mean_s_per_1000(r.low_priority):10.2f} "
+              f"{r.sim.avg_bw_utilization:7.3f} {r.sim.readjustments:6d}")
+
+    me = grid.get(scenario.name, "metronome")
+    de = grid.get(scenario.name, "default")
+    lo_gain = 100.0 * (1 - me.mean_s_per_1000(me.low_priority)
+                       / de.mean_s_per_1000(de.low_priority))
+    print(f"\nMetronome low-priority acceleration vs Default: "
+          f"{lo_gain:.1f}%")
+
+    # results are schema-versioned JSON: what benchmarks persist in CI
+    payload = me.to_json_dict(include_durations=False)
+    back = ExperimentResult.from_json_dict(json.loads(json.dumps(payload)))
+    print(f"JSON round-trip: policy={back.policy!r}, "
+          f"placements={back.placements}")
 
 
 if __name__ == "__main__":

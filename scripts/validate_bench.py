@@ -1,0 +1,41 @@
+#!/usr/bin/env python
+"""Validate a BENCH_sweep.json artifact against the result schema.
+
+Usage:  PYTHONPATH=src python scripts/validate_bench.py BENCH_sweep.json
+
+Exit 0 when the file matches ``repro.core.results.SCHEMA_VERSION``'s
+schema; exit 1 (listing every problem) on drift — CI runs this after the
+benchmark smoke so a silently-changed result format fails the build.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def main(argv) -> int:
+    if len(argv) != 2:
+        print(__doc__, file=sys.stderr)
+        return 2
+    path = argv[1]
+    from repro.core.results import validate_bench_dict
+
+    with open(path) as f:
+        doc = json.load(f)
+    problems = validate_bench_dict(doc)
+    if problems:
+        print(f"{path}: INVALID ({len(problems)} problems)", file=sys.stderr)
+        for p in problems:
+            print(f"  - {p}", file=sys.stderr)
+        return 1
+    n_sweeps = len(doc.get("sweeps", []))
+    n_cells = sum(len(s.get("cells", [])) for s in doc.get("sweeps", []))
+    n_err = sum(1 for s in doc.get("sweeps", [])
+                for c in s.get("cells", []) if c.get("status") != "ok")
+    print(f"{path}: OK — schema v{doc['schema_version']}, {n_sweeps} sweeps, "
+          f"{n_cells} cells ({n_err} error cells)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))

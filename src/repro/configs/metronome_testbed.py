@@ -16,12 +16,15 @@ training on 25 GbE (duty cycles 0.2-0.6, bandwidth demand 8-24 Gbps).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.cluster import Cluster, make_fabric_cluster, make_testbed_cluster
 from repro.core.events import BackgroundFlowChange, Event, LinkCapacityChange
-from repro.core.simulator import BackgroundFlow
+from repro.core.experiment import Scenario
+from repro.core.simulator import BackgroundFlow, SimConfig
 from repro.core.topology import uplink_id
+from repro.core.trace import (TraceJobSpec, trace_departure_events,
+                              trace_to_jobs)
 from repro.core.workload import HIGH, LOW, Job, Workload, make_job
 
 # model -> traffic; period_ms = ideal iteration time (contention free)
@@ -248,6 +251,70 @@ def make_dynamic_snapshot(
     else:
         raise ValueError(f"unknown dynamic snapshot {sid!r}")
     return cluster, wls, bg, events
+
+
+# -------------------------------------------------- declarative scenarios
+# (Scenario/Policy experiment API, DESIGN.md section 14): the snapshot
+# builders above stay the single source of truth for compositions; these
+# wrap them as Scenario instances whose build() returns FRESH objects per
+# materialization — exactly what the benchmarks' per-scheduler regeneration
+# loop used to do by hand.
+
+def snapshot_scenario(sid: str, n_iterations: int = 400,
+                      sim_config: Optional[SimConfig] = None) -> Scenario:
+    """The Table IV snapshot (or fabric/joint snapshot) ``sid`` as an
+    offline Scenario."""
+
+    def build():
+        cluster, wls, bg = make_snapshot(sid, n_iterations=n_iterations)
+        return cluster, wls, bg
+    return Scenario(name=sid, build=build, sim_config=sim_config)
+
+
+def dynamic_scenario(sid: str, n_iterations: int = 400,
+                     amplitude: float = 0.3, t_on_ms: float = 15_000.0,
+                     t_off_ms: float = 45_000.0,
+                     sim_config: Optional[SimConfig] = None) -> Scenario:
+    """Dynamic snapshot ``sid`` (D1/D2) with its fluctuation event stream as
+    an offline Scenario (the events fire mid-run on the simulator clock)."""
+
+    def build():
+        return make_dynamic_snapshot(sid, n_iterations=n_iterations,
+                                     amplitude=amplitude, t_on_ms=t_on_ms,
+                                     t_off_ms=t_off_ms)
+    return Scenario(name=sid, build=build, sim_config=sim_config)
+
+
+def trace_scenario(trace: List[TraceJobSpec], *, time_scale: float = 1.0,
+                   open_ended: bool = True,
+                   cluster_factory: Optional[Callable[[], Cluster]] = None,
+                   name: str = "trace",
+                   sim_config: Optional[SimConfig] = None) -> Scenario:
+    """A Gavel-style trace as a trace-mode Scenario (online arrivals,
+    queueing, eviction — the paper's Fig. 10 K8s behavior).
+
+    ``open_ended=True`` truncates jobs by :class:`JobDeparture` events
+    instead of an iteration cap (a contended job does FEWER iterations in
+    its window; never-admitted jobs depart from the pending queue).  Use
+    ``open_ended=False`` for the 'ideal' reference, which ignores the event
+    stream and needs the static iteration caps."""
+
+    def build():
+        cluster = (cluster_factory() if cluster_factory is not None
+                   else make_testbed_cluster())
+        jobs = trace_to_jobs(trace, MODEL_FLEET, time_scale=time_scale,
+                             open_ended=open_ended)
+        wls = []
+        for j in jobs:
+            wl = Workload(name=j.name, jobs=[j])
+            j.workload = wl.name
+            for t in j.tasks:
+                t.workload = wl.name
+            wls.append(wl)
+        events = (trace_departure_events(trace, time_scale=time_scale)
+                  if open_ended else ())
+        return cluster, wls, (), events
+    return Scenario.trace(name=name, build=build, sim_config=sim_config)
 
 
 SNAPSHOTS = ("S1", "S2", "S3", "S4", "S5")

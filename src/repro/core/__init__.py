@@ -11,13 +11,15 @@
 #   simulator — event-driven fluid-flow cluster simulator
 #   topology  — leaf–spine fabric model (star = paper's Eq. 14 default)
 #   trace     — Gavel-style workload generator
-#   harness   — scheduler -> controller -> simulator glue
-from . import (baselines, cluster, contention, controller, events, framework,
-               geometry, harness, rotation, scheduler, scoring, simulator,
-               topology, trace, workload)
+#   experiment— declarative Scenario/Policy API + sweep grid runner
+#   results   — typed, schema-versioned experiment results (JSON)
+#   harness   — legacy run_experiment/run_trace_experiment shims
+from . import (baselines, cluster, contention, controller, events, experiment,
+               framework, geometry, harness, results, rotation, scheduler,
+               scoring, simulator, topology, trace, workload)
 
 __all__ = [
-    "baselines", "cluster", "contention", "controller", "events", "framework",
-    "geometry", "harness", "rotation", "scheduler", "scoring", "simulator",
-    "topology", "trace", "workload",
+    "baselines", "cluster", "contention", "controller", "events",
+    "experiment", "framework", "geometry", "harness", "results", "rotation",
+    "scheduler", "scoring", "simulator", "topology", "trace", "workload",
 ]

@@ -1,30 +1,36 @@
-"""Glue: scheduler -> controller -> simulator for one experiment run.
+"""Legacy glue API: thin shims over the Scenario/Policy experiment layer.
 
-This is the programmatic equivalent of the paper's testbed procedure:
-submit workloads under a chosen scheduling mechanism, then execute them and
-measure iteration times / bandwidth utilization / TCT.
+``run_experiment`` / ``run_trace_experiment`` predate ``core/experiment.py``
+and are kept as bit-for-bit-pinned compatibility wrappers (golden
+equivalence suite in ``tests/test_experiment.py``): each translates its
+kwargs into a :class:`~repro.core.experiment.Scenario` +
+:class:`~repro.core.experiment.Policy` pair and delegates to
+:func:`~repro.core.experiment.run`.  New code should construct scenarios
+and policies directly — every knob that used to be a ``run_experiment``
+kwarg is a Policy field, and trace runs accept the full Policy too (the
+legacy trace path could not ablate anything).
 """
 from __future__ import annotations
 
-import copy
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
-import numpy as np
-
-from .baselines import DefaultPlugin, DiktyoPlugin, ExclusivePlugin
-from .cluster import Cluster
 from .controller import StopAndWaitController
-from .framework import SchedulerPlugin, SchedulingFramework
-from .scheduler import MetronomePlugin
-from .simulator import BackgroundFlow, ClusterSimulator, SimConfig, SimResult
-from .workload import Job, Workload
+from .events import normalize_events
+from .experiment import OFFLINE, TRACE, Policy, Scenario, build_scheduler, run
+from .cluster import Cluster
+from .framework import SchedulerPlugin
+from .simulator import BackgroundFlow, SimConfig, SimResult
+from .workload import Workload
 
 SCHEDULERS = ("metronome", "default", "diktyo", "exclusive", "ideal")
 
 
 @dataclasses.dataclass
 class RunResult:
+    """Legacy result shape (prefer
+    :class:`~repro.core.results.ExperimentResult` from the new API)."""
+
     sim: SimResult
     accepted: List[str]
     rejected: List[str]
@@ -35,17 +41,34 @@ class RunResult:
 def make_plugin(name: str, controller: Optional[StopAndWaitController] = None,
                 rotation_mode: str = "intermediate",
                 rotation_joint: bool = True) -> SchedulerPlugin:
+    """Legacy plugin factory (the registry path builds plugin + controller
+    together; this keeps the old build-around-an-existing-controller shape
+    for callers that drive the framework by hand)."""
     if name == "metronome":
+        from .scheduler import MetronomePlugin
         return MetronomePlugin(controller=controller,
                                rotation_mode=rotation_mode,
                                joint=rotation_joint)
-    if name == "default":
-        return DefaultPlugin()
-    if name == "diktyo":
-        return DiktyoPlugin()
-    if name == "exclusive":
-        return ExclusivePlugin()
-    raise ValueError(f"unknown scheduler {name!r}")
+    plugin, _ = build_scheduler(Policy(scheduler=name))
+    return plugin
+
+
+def _legacy_shim(
+    mode: str,
+    cluster: Cluster,
+    workloads: Sequence[Workload],
+    config: Optional[SimConfig],
+    background: Sequence[BackgroundFlow],
+    events: Sequence,
+    traffic_changes: Sequence[Tuple[float, str, float]],
+    policy: Policy,
+) -> RunResult:
+    stream = normalize_events(events, traffic_changes)
+    scenario = Scenario(name="legacy", mode=mode,
+                        build=lambda: (cluster, workloads, background, stream))
+    res = run(scenario, policy, config or SimConfig())
+    return RunResult(res.sim, res.accepted, res.rejected, res.scheduler,
+                     res.placements)
 
 
 def run_experiment(
@@ -63,92 +86,19 @@ def run_experiment(
 ) -> RunResult:
     """Schedule all workloads with the named mechanism, then simulate.
 
+    Legacy shim over ``experiment.run`` — the kwargs map 1:1 onto
+    :class:`Policy` fields; legacy ``traffic_changes`` tuples are
+    normalized into the typed event stream at this boundary.
     ``scheduler == 'ideal'`` runs every job alone on a pristine copy of the
-    cluster (dedicated-cluster reference of the paper).  ``events`` feeds
-    the simulator's dynamic-environment stream (``core/events.py``);
-    ``reconfigure=False`` ablates the controller's reconfiguration loop
-    (capacity/background changes are then handled only by the drift
-    monitor).  ``rotation_joint=False`` ablates the fabric-wide joint
-    rotation planner: per-link solves are reconciled with the legacy
-    "uplinks take precedence" tie-break instead (bench_rotation.py).  The
-    ``'ideal'`` reference deliberately ignores ``events`` (and
-    ``background``/``traffic_changes``): it is the STATIC contention-free
-    bound, so dynamic-snapshot comparisons against it measure fluctuation
-    cost plus contention cost together.
+    cluster (dedicated-cluster reference of the paper) and deliberately
+    ignores ``events``/``background``/``traffic_changes``: it is the STATIC
+    contention-free bound.
     """
-    config = config or SimConfig()
-    if scheduler == "ideal":
-        return _run_ideal(cluster, workloads, config)
-
-    cl = cluster.copy()
-    controller = None
-    if scheduler == "metronome":
-        controller = StopAndWaitController(reconfigure=reconfigure,
-                                           joint=rotation_joint)
-    plugin = make_plugin(scheduler, controller, rotation_mode=rotation_mode,
-                         rotation_joint=rotation_joint)
-    fw = SchedulingFramework(cl, plugin)
-
-    accepted, rejected = [], []
-    jobs: List[Job] = []
-    for wl in workloads:
-        ok = fw.schedule_workload(wl)
-        for j in wl.jobs:
-            (accepted if ok else rejected).append(j.name)
-            if ok:
-                jobs.append(j)
-    if controller is not None and not skip_third_stage:
-        controller.run_offline_recalculation(fw.registry, cl)
-
-    sim = ClusterSimulator(
-        cl, jobs, config, controller=controller, background=background,
-        traffic_changes=traffic_changes, registry=fw.registry, events=events,
-    )
-    res = sim.run()
-    placements = {j.name: j.nodes_used() for j in jobs}
-    return RunResult(res, accepted, rejected, scheduler, placements)
-
-
-def _run_ideal(cluster: Cluster, workloads: Sequence[Workload],
-               config: SimConfig) -> RunResult:
-    """Each job on a dedicated cluster: no contention, no shared links."""
-    merged_durations: Dict[str, List[float]] = {}
-    per_1000: Dict[str, float] = {}
-    finish: Dict[str, float] = {}
-    iters: Dict[str, int] = {}
-    utils = []
-    gammas = []
-    placements = {}
-    for wl in workloads:
-        for job in wl.jobs:
-            cl = cluster.copy()
-            job_copy = copy.deepcopy(job)
-            job_copy.submit_time_s = 0.0
-            fw = SchedulingFramework(cl, DefaultPlugin())
-            if not fw.schedule_job(job_copy):
-                continue
-            sim = ClusterSimulator(cl, [job_copy], config)
-            res = sim.run()
-            merged_durations[job.name] = res.durations_ms[job_copy.name]
-            per_1000[job.name] = res.time_per_1000_iters_s[job_copy.name]
-            finish[job.name] = res.finish_times_ms[job_copy.name]
-            iters[job.name] = res.iterations_done[job_copy.name]
-            gammas.append(res.avg_bw_utilization)
-            placements[job.name] = job_copy.nodes_used()
-    sim_res = SimResult(
-        durations_ms=merged_durations,
-        time_per_1000_iters_s=per_1000,
-        link_utilization={},
-        avg_bw_utilization=float(np.mean(gammas)) if gammas else 0.0,
-        readjustments=0,
-        finish_times_ms=finish,
-        total_completion_ms=max(
-            (f for f in finish.values() if not np.isnan(f)), default=0.0
-        ),
-        iterations_done=iters,
-    )
-    names = list(merged_durations.keys())
-    return RunResult(sim_res, names, [], "ideal", placements)
+    policy = Policy(scheduler=scheduler, rotation_mode=rotation_mode,
+                    rotation_joint=rotation_joint, reconfigure=reconfigure,
+                    skip_third_stage=skip_third_stage)
+    return _legacy_shim(OFFLINE, cluster, workloads, config,
+                        background, events, traffic_changes, policy)
 
 
 def run_trace_experiment(
@@ -157,35 +107,31 @@ def run_trace_experiment(
     workloads: Sequence[Workload],
     config: Optional[SimConfig] = None,
     events: Sequence = (),
+    *,
+    rotation_mode: str = "intermediate",
+    reconfigure: bool = True,
+    rotation_joint: bool = True,
 ) -> RunResult:
     """Online (trace) mode: workloads arrive at their submit times, queue
     when the cluster is full, and release capacity on completion — the K8s
     behavior of the paper's 4 h trace (Fig. 10).
 
+    Legacy shim over ``experiment.run`` with a trace-mode scenario.  The
+    controller knobs (``reconfigure``/``rotation_joint``/``rotation_mode``)
+    now reach trace runs too — the pre-experiment-API version hardcoded a
+    default ``StopAndWaitController`` and silently dropped every ablation.
     ``events`` feeds the simulator's dynamic stream; the trace generator's
     event-driven truncation plugs in here (``trace_to_jobs(...,
-    open_ended=True)`` + ``trace_departure_events``): jobs then end when
-    their :class:`~repro.core.events.JobDeparture` fires — never-admitted
-    jobs depart from the queue — instead of exhausting an iteration cap."""
-    config = config or SimConfig()
-    if scheduler == "ideal":
-        return _run_ideal(cluster, workloads, config)
-    cl = cluster.copy()
-    controller = StopAndWaitController() if scheduler == "metronome" else None
-    plugin = make_plugin(scheduler, controller)
-    fw = SchedulingFramework(cl, plugin)
-    sim = ClusterSimulator(
-        cl, [], config, controller=controller, registry=fw.registry,
-        framework=fw, arrivals=list(workloads), events=events,
-    )
-    res = sim.run()
-    accepted = [n for n, st in sim.jobs.items()]
-    placements = {n: st.job.nodes_used() for n, st in sim.jobs.items()}
-    return RunResult(res, accepted, sim.pending_jobs, scheduler, placements)
+    open_ended=True)`` + ``trace_departure_events``)."""
+    policy = Policy(scheduler=scheduler, rotation_mode=rotation_mode,
+                    rotation_joint=rotation_joint, reconfigure=reconfigure)
+    return _legacy_shim(TRACE, cluster, workloads, config,
+                        (), events, (), policy)
 
 
 def priority_split(workloads: Sequence[Workload]) -> Tuple[List[str], List[str]]:
-    """Names of (high, low) priority jobs."""
+    """Names of (high, low) priority jobs.  The new API carries this split
+    on :class:`~repro.core.results.ExperimentResult` directly."""
     hi, lo = [], []
     for wl in workloads:
         for j in wl.jobs:

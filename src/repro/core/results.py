@@ -1,0 +1,337 @@
+"""Typed, serializable experiment results (DESIGN.md section 14).
+
+The paper's evaluation is a grid — snapshots x scenarios x mechanisms — so
+results are grid-shaped too:
+
+  * :class:`ExperimentResult` — one ``run(scenario, policy)`` outcome: the
+    simulator measurements plus the admission split and the priority split
+    (the latter replaces the benchmarks' old ``"_workloads"`` magic key).
+  * :class:`SweepCell` / :class:`SweepResult` — one grid cell / the whole
+    grid.  A cell that raised carries ``status="error"`` and the traceback
+    instead of poisoning its neighbours (per-cell error isolation).
+
+Everything serializes to schema-versioned JSON (``SCHEMA_VERSION``):
+benchmarks write their sweeps as ``BENCH_sweep.json`` (``to_bench_dict``)
+and CI validates the artifact with :func:`validate_bench_dict` so
+result-format drift fails the build instead of rotting silently.  NaN is
+mapped to JSON ``null`` on the way out (strict parsers choke on bare NaN)
+and restored on the way back.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import Any, Dict, List, Mapping, Optional, Sequence
+
+import numpy as np
+
+from .simulator import SimResult
+
+SCHEMA_VERSION = 1
+
+
+def _f(v: Optional[float]) -> Optional[float]:
+    """float -> JSON-safe float (NaN/inf -> None)."""
+    if v is None:
+        return None
+    v = float(v)
+    return None if not math.isfinite(v) else v
+
+
+def _unf(v: Optional[float]) -> float:
+    return math.nan if v is None else float(v)
+
+
+def _fmap(d: Mapping[str, float]) -> Dict[str, Optional[float]]:
+    return {k: _f(v) for k, v in d.items()}
+
+
+def _unfmap(d: Mapping[str, Optional[float]]) -> Dict[str, float]:
+    return {k: _unf(v) for k, v in d.items()}
+
+
+def sim_to_dict(sim: SimResult, include_durations: bool = True) -> Dict[str, Any]:
+    """JSON-safe dict of a :class:`SimResult`.
+
+    ``include_durations=False`` drops the per-iteration duration lists (the
+    bulky part) but always keeps the derived per-job mean so compact
+    artifacts stay analyzable."""
+    d: Dict[str, Any] = {
+        "time_per_1000_iters_s": _fmap(sim.time_per_1000_iters_s),
+        "link_utilization": _fmap(sim.link_utilization),
+        "avg_bw_utilization": _f(sim.avg_bw_utilization),
+        "readjustments": int(sim.readjustments),
+        "finish_times_ms": _fmap(sim.finish_times_ms),
+        "total_completion_ms": _f(sim.total_completion_ms),
+        "iterations_done": {k: int(v) for k, v in sim.iterations_done.items()},
+        "reconfigurations": int(sim.reconfigurations),
+        "mean_iter_ms": {j: _f(sim.mean_iter_ms(j)) for j in sim.durations_ms},
+    }
+    if include_durations:
+        d["durations_ms"] = {k: [_f(x) for x in v]
+                             for k, v in sim.durations_ms.items()}
+    return d
+
+
+def sim_from_dict(d: Mapping[str, Any]) -> SimResult:
+    durations = d.get("durations_ms")
+    if durations is None:  # compact artifact: jobs known, samples dropped
+        durations = {k: [] for k in d.get("iterations_done", {})}
+    return SimResult(
+        durations_ms={k: [_unf(x) for x in v] for k, v in durations.items()},
+        time_per_1000_iters_s=_unfmap(d["time_per_1000_iters_s"]),
+        link_utilization=_unfmap(d["link_utilization"]),
+        avg_bw_utilization=_unf(d["avg_bw_utilization"]),
+        readjustments=int(d["readjustments"]),
+        finish_times_ms=_unfmap(d["finish_times_ms"]),
+        total_completion_ms=_unf(d["total_completion_ms"]),
+        iterations_done={k: int(v) for k, v in d["iterations_done"].items()},
+        reconfigurations=int(d.get("reconfigurations", 0)),
+    )
+
+
+@dataclasses.dataclass
+class ExperimentResult:
+    """One ``run(scenario, policy)`` outcome.
+
+    ``high_priority`` / ``low_priority`` name every job of the scenario's
+    workloads split by priority (including rejected jobs) — the typed
+    replacement for re-deriving the split from a workload list."""
+
+    scenario: str
+    policy: str
+    scheduler: str
+    accepted: List[str]
+    rejected: List[str]
+    placements: Dict[str, List[str]]
+    high_priority: List[str]
+    low_priority: List[str]
+    sim: SimResult
+
+    # ------------------------------------------------------------ aggregates
+    def mean_s_per_1000(self, jobs: Optional[Sequence[str]] = None) -> float:
+        """Mean time-per-1000-iterations (s) over ``jobs`` (default: every
+        measured job), skipping jobs without samples."""
+        if jobs is None:
+            jobs = list(self.sim.time_per_1000_iters_s)
+        vals = [self.sim.time_per_1000_iters_s[j] for j in jobs
+                if j in self.sim.time_per_1000_iters_s
+                and not math.isnan(self.sim.time_per_1000_iters_s[j])]
+        return float(np.mean(vals)) if vals else math.nan
+
+    def mean_jct_ms(self, jobs: Optional[Sequence[str]] = None) -> float:
+        """Mean finish time (ms) over ``jobs`` that finished."""
+        if jobs is None:
+            jobs = list(self.sim.finish_times_ms)
+        vals = [self.sim.finish_times_ms[j] for j in jobs
+                if j in self.sim.finish_times_ms
+                and not math.isnan(self.sim.finish_times_ms[j])]
+        return float(np.mean(vals)) if vals else math.nan
+
+    # ----------------------------------------------------------------- (de)ser
+    def to_json_dict(self, include_durations: bool = True) -> Dict[str, Any]:
+        return {
+            "scenario": self.scenario,
+            "policy": self.policy,
+            "scheduler": self.scheduler,
+            "accepted": list(self.accepted),
+            "rejected": list(self.rejected),
+            "placements": {k: list(v) for k, v in self.placements.items()},
+            "high_priority": list(self.high_priority),
+            "low_priority": list(self.low_priority),
+            "sim": sim_to_dict(self.sim, include_durations=include_durations),
+        }
+
+    @classmethod
+    def from_json_dict(cls, d: Mapping[str, Any]) -> "ExperimentResult":
+        return cls(
+            scenario=d["scenario"],
+            policy=d["policy"],
+            scheduler=d["scheduler"],
+            accepted=list(d["accepted"]),
+            rejected=list(d["rejected"]),
+            placements={k: list(v) for k, v in d["placements"].items()},
+            high_priority=list(d["high_priority"]),
+            low_priority=list(d["low_priority"]),
+            sim=sim_from_dict(d["sim"]),
+        )
+
+
+@dataclasses.dataclass
+class SweepCell:
+    """One (scenario, policy) grid cell: a result or an isolated failure."""
+
+    scenario: str
+    policy: str
+    status: str  # "ok" | "error"
+    result: Optional[ExperimentResult] = None
+    error: Optional[str] = None  # traceback text when status == "error"
+
+    def to_json_dict(self, include_durations: bool = True) -> Dict[str, Any]:
+        d: Dict[str, Any] = {"scenario": self.scenario, "policy": self.policy,
+                             "status": self.status}
+        if self.result is not None:
+            d["result"] = self.result.to_json_dict(
+                include_durations=include_durations)
+        if self.error is not None:
+            d["error"] = self.error
+        return d
+
+    @classmethod
+    def from_json_dict(cls, d: Mapping[str, Any]) -> "SweepCell":
+        res = d.get("result")
+        return cls(scenario=d["scenario"], policy=d["policy"],
+                   status=d["status"],
+                   result=ExperimentResult.from_json_dict(res)
+                   if res is not None else None,
+                   error=d.get("error"))
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """A full scenario x policy grid (row-major over scenarios)."""
+
+    cells: List[SweepCell]
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    schema_version: int = SCHEMA_VERSION
+
+    # ------------------------------------------------------------------ access
+    def cell(self, scenario: str, policy: str) -> SweepCell:
+        for c in self.cells:
+            if c.scenario == scenario and c.policy == policy:
+                return c
+        raise KeyError(f"no cell ({scenario!r}, {policy!r}); have "
+                       f"{[(c.scenario, c.policy) for c in self.cells]}")
+
+    def get(self, scenario: str, policy: str) -> ExperimentResult:
+        """The cell's result; raises if the cell failed (use :meth:`cell`
+        to inspect the captured traceback instead)."""
+        c = self.cell(scenario, policy)
+        if c.status != "ok" or c.result is None:
+            raise RuntimeError(
+                f"cell ({scenario!r}, {policy!r}) failed:\n{c.error}")
+        return c.result
+
+    @property
+    def errors(self) -> List[SweepCell]:
+        return [c for c in self.cells if c.status != "ok"]
+
+    def scenario_results(self, scenario: str) -> Dict[str, ExperimentResult]:
+        """policy name -> result for every OK cell of one scenario."""
+        return {c.policy: c.result for c in self.cells
+                if c.scenario == scenario and c.status == "ok"
+                and c.result is not None}
+
+    # ----------------------------------------------------------------- (de)ser
+    def to_json_dict(self, include_durations: bool = True) -> Dict[str, Any]:
+        return {
+            "schema_version": self.schema_version,
+            "meta": dict(self.meta),
+            "cells": [c.to_json_dict(include_durations=include_durations)
+                      for c in self.cells],
+        }
+
+    @classmethod
+    def from_json_dict(cls, d: Mapping[str, Any]) -> "SweepResult":
+        version = int(d.get("schema_version", -1))
+        if version != SCHEMA_VERSION:
+            raise ValueError(f"sweep schema version {version} != "
+                             f"supported {SCHEMA_VERSION}")
+        return cls(cells=[SweepCell.from_json_dict(c) for c in d["cells"]],
+                   meta=dict(d.get("meta", {})),
+                   schema_version=version)
+
+    def save(self, path: str, include_durations: bool = True) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json_dict(include_durations=include_durations),
+                      f, indent=1, allow_nan=False)
+
+    @classmethod
+    def load(cls, path: str) -> "SweepResult":
+        with open(path) as f:
+            return cls.from_json_dict(json.load(f))
+
+
+# --------------------------------------------------------------- BENCH file
+def to_bench_dict(sweeps: Sequence[SweepResult], *,
+                  smoke: bool = False,
+                  include_durations: bool = False) -> Dict[str, Any]:
+    """The ``BENCH_sweep.json`` payload: every sweep the bench harness ran,
+    compact by default (per-iteration samples dropped, derived means kept)."""
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "generated_by": "benchmarks.run",
+        "smoke": bool(smoke),
+        "sweeps": [s.to_json_dict(include_durations=include_durations)
+                   for s in sweeps],
+    }
+
+
+_CELL_RESULT_KEYS = ("scenario", "policy", "scheduler", "accepted",
+                     "rejected", "placements", "high_priority",
+                     "low_priority", "sim")
+_SIM_KEYS = ("time_per_1000_iters_s", "link_utilization",
+             "avg_bw_utilization", "readjustments", "finish_times_ms",
+             "total_completion_ms", "iterations_done", "reconfigurations",
+             "mean_iter_ms")
+
+
+def validate_bench_dict(doc: Mapping[str, Any]) -> List[str]:
+    """Schema check of a ``BENCH_sweep.json`` payload.
+
+    Returns a list of human-readable problems; empty list == valid.  Used
+    by ``scripts/validate_bench.py`` in CI so format drift fails the build."""
+    problems: List[str] = []
+    if not isinstance(doc, Mapping):
+        return ["top level is not an object"]
+    if doc.get("schema_version") != SCHEMA_VERSION:
+        problems.append(f"schema_version {doc.get('schema_version')!r} != "
+                        f"{SCHEMA_VERSION}")
+    sweeps = doc.get("sweeps")
+    if not isinstance(sweeps, list):
+        problems.append("'sweeps' missing or not a list")
+        return problems
+    if not sweeps:
+        problems.append("'sweeps' is empty — no benchmark recorded a sweep")
+    for si, sw in enumerate(sweeps):
+        where = f"sweeps[{si}]"
+        if not isinstance(sw, Mapping):
+            problems.append(f"{where} is not an object")
+            continue
+        if sw.get("schema_version") != SCHEMA_VERSION:
+            problems.append(f"{where}.schema_version != {SCHEMA_VERSION}")
+        cells = sw.get("cells")
+        if not isinstance(cells, list) or not cells:
+            problems.append(f"{where}.cells missing or empty")
+            continue
+        for ci, cell in enumerate(cells):
+            cw = f"{where}.cells[{ci}]"
+            if not isinstance(cell, Mapping):
+                problems.append(f"{cw} is not an object")
+                continue
+            for key in ("scenario", "policy", "status"):
+                if not isinstance(cell.get(key), str):
+                    problems.append(f"{cw}.{key} missing or not a string")
+            status = cell.get("status")
+            if status == "ok":
+                res = cell.get("result")
+                if not isinstance(res, Mapping):
+                    problems.append(f"{cw}.result missing on an ok cell")
+                    continue
+                for key in _CELL_RESULT_KEYS:
+                    if key not in res:
+                        problems.append(f"{cw}.result.{key} missing")
+                sim = res.get("sim")
+                if isinstance(sim, Mapping):
+                    for key in _SIM_KEYS:
+                        if key not in sim:
+                            problems.append(f"{cw}.result.sim.{key} missing")
+                else:
+                    problems.append(f"{cw}.result.sim missing")
+            elif status == "error":
+                if not isinstance(cell.get("error"), str):
+                    problems.append(f"{cw}.error missing on an error cell")
+            else:
+                problems.append(f"{cw}.status {status!r} not ok|error")
+    return problems

@@ -144,6 +144,7 @@ class ClusterSimulator:
         framework=None,
         arrivals: Sequence = (),
         events: Sequence[events_mod.Event] = (),
+        offline_recalc: bool = True,
     ) -> None:
         """``events``: typed dynamic-environment events (see ``events.py``);
         ``traffic_changes`` — legacy (time_ms, job, duty_multiplier) tuples —
@@ -153,10 +154,14 @@ class ClusterSimulator:
         carry submit_time_s). Workloads are scheduled when they arrive,
         queued when the cluster is full, and their pods are evicted on
         completion (the K8s behavior the paper's trace runs under).
+        ``offline_recalc=False`` skips the controller's third-stage offline
+        recalculation after each online admission (the trace-mode analogue
+        of ``Policy.skip_third_stage``).
         """
         self.cluster = cluster
         self.config = config
         self.controller = controller
+        self.offline_recalc = offline_recalc
         self.rng = np.random.default_rng(config.seed)
         self.jobs: Dict[str, JobState] = {}
         self.registry = registry
@@ -210,7 +215,7 @@ class ClusterSimulator:
     def _try_schedule(self, wl) -> bool:
         assert self.framework is not None
         if self.framework.schedule_workload(wl):
-            if self.controller is not None:
+            if self.controller is not None and self.offline_recalc:
                 self.controller.run_offline_recalculation(
                     self.framework.registry, self.cluster)
             for job in wl.jobs:

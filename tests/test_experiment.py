@@ -1,0 +1,314 @@
+"""Scenario/Policy experiment API (DESIGN.md section 14).
+
+Three pillars:
+
+  * golden equivalence — the legacy ``run_experiment`` /
+    ``run_trace_experiment`` shims and a directly-constructed
+    Scenario+Policy ``run()`` are bit-for-bit identical on every pinned
+    snapshot family (S1–S5, F2/F4, D1/D2, J1);
+  * the trace-mode knob gap is CLOSED — reconfigure / rotation_joint /
+    skip_third_stage provably change trace runs (the legacy trace path
+    dropped them silently);
+  * results round-trip through schema-versioned JSON and sweeps isolate
+    per-cell failures.
+"""
+import dataclasses
+import json
+import math
+
+import pytest
+
+from repro.configs.metronome_testbed import (MODEL_FLEET, dynamic_scenario,
+                                             make_snapshot,
+                                             make_dynamic_snapshot,
+                                             snapshot_scenario,
+                                             trace_scenario)
+from repro.core.baselines import DefaultPlugin
+from repro.core.experiment import (Policy, Scenario, register_scheduler, run,
+                                   scheduler_names, sweep)
+from repro.core.harness import run_experiment, run_trace_experiment
+from repro.core.results import (SCHEMA_VERSION, ExperimentResult, SweepResult,
+                                to_bench_dict, validate_bench_dict)
+from repro.core.simulator import SimConfig
+from repro.core.trace import generate_trace
+
+CFG = SimConfig(duration_ms=20_000.0, seed=3, jitter_std=0.01)
+N_ITER = 30
+
+
+def _eq_float(a, b):
+    if isinstance(a, float) and isinstance(b, float):
+        return (math.isnan(a) and math.isnan(b)) or a == b
+    return a == b
+
+
+def _map_eq(a, b):
+    return set(a) == set(b) and all(_eq_float(a[k], b[k]) for k in a)
+
+
+def assert_sim_equal(a, b):
+    """Bit-for-bit SimResult equality (NaN-aware on the float maps)."""
+    assert a.durations_ms == b.durations_ms  # exact float lists
+    assert _map_eq(a.time_per_1000_iters_s, b.time_per_1000_iters_s)
+    assert _map_eq(a.link_utilization, b.link_utilization)
+    assert _eq_float(a.avg_bw_utilization, b.avg_bw_utilization)
+    assert a.readjustments == b.readjustments
+    assert _map_eq(a.finish_times_ms, b.finish_times_ms)
+    assert _eq_float(a.total_completion_ms, b.total_completion_ms)
+    assert a.iterations_done == b.iterations_done
+    assert a.reconfigurations == b.reconfigurations
+
+
+class TestGoldenEquivalence:
+    """Legacy shim == new run() on every pinned snapshot family."""
+
+    @pytest.mark.parametrize("sid", ["S1", "S2", "S3", "S4", "S5", "F2",
+                                     "F4", "J1"])
+    def test_static_snapshots_metronome(self, sid):
+        cluster, wls, bg = make_snapshot(sid, n_iterations=N_ITER)
+        legacy = run_experiment("metronome", cluster, wls, CFG,
+                                background=bg)
+        new = run(snapshot_scenario(sid, n_iterations=N_ITER),
+                  Policy("metronome"), CFG)
+        assert_sim_equal(legacy.sim, new.sim)
+        assert legacy.accepted == new.accepted
+        assert legacy.rejected == new.rejected
+        assert legacy.placements == new.placements
+
+    @pytest.mark.parametrize("sched", ["default", "diktyo", "exclusive",
+                                       "ideal"])
+    def test_s2_other_schedulers(self, sched):
+        cluster, wls, bg = make_snapshot("S2", n_iterations=N_ITER)
+        legacy = run_experiment(sched, cluster, wls, CFG, background=bg)
+        new = run(snapshot_scenario("S2", n_iterations=N_ITER),
+                  Policy(sched), CFG)
+        assert_sim_equal(legacy.sim, new.sim)
+        assert legacy.accepted == new.accepted
+
+    @pytest.mark.parametrize("sid", ["D1", "D2"])
+    def test_dynamic_snapshots(self, sid):
+        kw = dict(n_iterations=N_ITER, amplitude=0.3, t_on_ms=4_000.0,
+                  t_off_ms=12_000.0)
+        cluster, wls, bg, evs = make_dynamic_snapshot(sid, **kw)
+        legacy = run_experiment("metronome", cluster, wls, CFG,
+                                background=bg, events=evs)
+        new = run(dynamic_scenario(sid, **kw), Policy("metronome"), CFG)
+        assert_sim_equal(legacy.sim, new.sim)
+
+    def test_j1_legacy_rotation_ablation(self):
+        cluster, wls, bg = make_snapshot("J1", n_iterations=N_ITER)
+        legacy = run_experiment("metronome", cluster, wls, CFG,
+                                background=bg, rotation_joint=False)
+        new = run(snapshot_scenario("J1", n_iterations=N_ITER),
+                  Policy("metronome", rotation_joint=False), CFG)
+        assert_sim_equal(legacy.sim, new.sim)
+
+    def test_ablation_knobs(self):
+        cluster, wls, bg = make_snapshot("S2", n_iterations=N_ITER)
+        legacy = run_experiment("metronome", cluster, wls, CFG,
+                                background=bg, skip_third_stage=True,
+                                rotation_mode="compact")
+        new = run(snapshot_scenario("S2", n_iterations=N_ITER),
+                  Policy("metronome", skip_third_stage=True,
+                         rotation_mode="compact"), CFG)
+        assert_sim_equal(legacy.sim, new.sim)
+
+    def test_traffic_changes_normalized_at_boundary(self):
+        """Legacy (time, job, duty_mult) tuples == typed TrafficChange
+        events through the scenario's event stream."""
+        from repro.core.events import TrafficChange
+        tc = [(5_000.0, "vgg16-ft", 1.4)]
+        cluster, wls, bg = make_snapshot("S2", n_iterations=N_ITER)
+        legacy = run_experiment("metronome", cluster, wls, CFG,
+                                background=bg, traffic_changes=tc)
+
+        def build():
+            cl, w, b = make_snapshot("S2", n_iterations=N_ITER)
+            return cl, w, b, [TrafficChange(5_000.0, "vgg16-ft", 1.4)]
+        new = run(Scenario("S2-tc", build), Policy("metronome"), CFG)
+        assert_sim_equal(legacy.sim, new.sim)
+
+    def test_trace_shim_equivalence(self):
+        trace = generate_trace(MODEL_FLEET, duration_s=600, total_gpus=13,
+                               target_load=0.85, seed=1,
+                               job_duration_range_s=(60, 120))[:5]
+        scn = trace_scenario(trace, open_ended=True, name="t")
+        cfg = SimConfig(duration_ms=60_000, seed=0, jitter_std=0.01)
+        for sched in ("metronome", "default"):
+            cluster, wls, _, evs = scn.materialize()
+            legacy = run_trace_experiment(sched, cluster, wls, cfg,
+                                          events=evs)
+            new = run(scn, Policy(sched), cfg)
+            assert_sim_equal(legacy.sim, new.sim)
+            assert legacy.accepted == new.accepted
+            assert legacy.rejected == new.rejected
+
+
+class TestTraceKnobGap:
+    """Trace runs accept the full Policy — the legacy trace path hardcoded
+    a default controller and could not ablate anything."""
+
+    CFG = SimConfig(duration_ms=25_000.0, seed=3, jitter_std=0.01)
+
+    @staticmethod
+    def _j1_trace():
+        def build():
+            cluster, wls, bg = make_snapshot("J1", n_iterations=40)
+            return cluster, wls, bg
+        return Scenario.trace("J1-trace", build)
+
+    def test_rotation_joint_changes_trace_run(self):
+        scn = self._j1_trace()
+        joint = run(scn, Policy("metronome"), self.CFG)
+        legacy = run(scn, Policy("metronome", rotation_joint=False),
+                     self.CFG)
+        assert joint.accepted == legacy.accepted  # same admissions...
+        assert joint.sim.durations_ms != legacy.sim.durations_ms  # ...new plan
+
+    def test_reconfigure_ablation_in_trace_mode(self):
+        def build():
+            return make_dynamic_snapshot("D2", n_iterations=40,
+                                         amplitude=0.4, t_on_ms=4_000.0,
+                                         t_off_ms=12_000.0)
+        scn = Scenario.trace("D2-trace", build)
+        on = run(scn, Policy("metronome"), self.CFG)
+        off = run(scn, Policy("metronome", reconfigure=False), self.CFG)
+        assert on.sim.reconfigurations > 0
+        assert off.sim.reconfigurations == 0
+
+    def test_skip_third_stage_in_trace_mode(self):
+        scn = self._j1_trace()
+        full = run(scn, Policy("metronome"), self.CFG)
+        skipped = run(scn, Policy("metronome", skip_third_stage=True),
+                      self.CFG)
+        assert full.sim.durations_ms != skipped.sim.durations_ms
+
+
+class TestResultsSerialization:
+    def _result(self) -> ExperimentResult:
+        return run(snapshot_scenario("S2", n_iterations=20),
+                   Policy("metronome"), CFG)
+
+    def test_experiment_result_round_trip(self):
+        res = self._result()
+        payload = json.dumps(res.to_json_dict(), allow_nan=False)
+        back = ExperimentResult.from_json_dict(json.loads(payload))
+        assert back.scenario == res.scenario
+        assert back.policy == res.policy
+        assert back.scheduler == res.scheduler
+        assert back.accepted == res.accepted
+        assert back.rejected == res.rejected
+        assert back.placements == res.placements
+        assert back.high_priority == res.high_priority
+        assert back.low_priority == res.low_priority
+        assert_sim_equal(back.sim, res.sim)
+
+    def test_compact_serialization_keeps_derived_means(self):
+        res = self._result()
+        d = res.to_json_dict(include_durations=False)
+        assert "durations_ms" not in d["sim"]
+        for job, mean in d["sim"]["mean_iter_ms"].items():
+            assert mean == pytest.approx(res.sim.mean_iter_ms(job))
+        back = ExperimentResult.from_json_dict(d)  # loadable without samples
+        assert back.sim.durations_ms == {j: [] for j in res.sim.durations_ms}
+
+    def test_sweep_round_trip_and_file_io(self, tmp_path):
+        sw = sweep([snapshot_scenario("S2", n_iterations=15)],
+                   [Policy("metronome"), Policy("default")], CFG)
+        assert not sw.errors
+        path = tmp_path / "sweep.json"
+        sw.save(str(path))
+        back = SweepResult.load(str(path))
+        assert back.schema_version == SCHEMA_VERSION
+        assert [c.policy for c in back.cells] == ["metronome", "default"]
+        assert_sim_equal(back.get("S2", "metronome").sim,
+                         sw.get("S2", "metronome").sim)
+
+    def test_schema_version_mismatch_rejected(self):
+        sw = sweep([], [])
+        d = sw.to_json_dict()
+        d["schema_version"] = SCHEMA_VERSION + 1
+        with pytest.raises(ValueError, match="schema version"):
+            SweepResult.from_json_dict(d)
+
+    def test_bench_dict_validation(self):
+        sw = sweep([snapshot_scenario("S2", n_iterations=15)],
+                   [Policy("metronome")], CFG)
+        doc = json.loads(json.dumps(to_bench_dict([sw], smoke=True),
+                                    allow_nan=False))
+        assert validate_bench_dict(doc) == []
+        # drift fails loudly: drop a required sim key
+        del doc["sweeps"][0]["cells"][0]["result"]["sim"]["iterations_done"]
+        assert any("iterations_done" in p for p in validate_bench_dict(doc))
+        assert validate_bench_dict({"schema_version": 0, "sweeps": []})
+
+
+class TestSweepIsolation:
+    def test_failing_cell_is_isolated(self):
+        def boom():
+            raise RuntimeError("scenario exploded")
+        grid = sweep([snapshot_scenario("S2", n_iterations=10),
+                      Scenario("broken", boom)],
+                     [Policy("metronome")], CFG)
+        ok = grid.cell("S2", "metronome")
+        bad = grid.cell("broken", "metronome")
+        assert ok.status == "ok" and ok.result is not None
+        assert bad.status == "error" and "scenario exploded" in bad.error
+        assert [c.scenario for c in grid.errors] == ["broken"]
+        with pytest.raises(RuntimeError, match="scenario exploded"):
+            grid.get("broken", "metronome")
+
+    def test_unknown_scheduler_is_isolated_too(self):
+        grid = sweep([snapshot_scenario("S2", n_iterations=10)],
+                     [Policy("no-such-mechanism")], CFG)
+        assert grid.cells[0].status == "error"
+        assert "unknown scheduler" in grid.cells[0].error
+
+
+class TestRegistry:
+    def test_register_and_run_custom_scheduler(self):
+        name = "custom-default"
+        register_scheduler(name, lambda policy: (DefaultPlugin(), None),
+                           overwrite=True)
+        assert name in scheduler_names()
+        res = run(snapshot_scenario("S2", n_iterations=10), Policy(name),
+                  CFG)
+        baseline = run(snapshot_scenario("S2", n_iterations=10),
+                       Policy("default"), CFG)
+        assert_sim_equal(res.sim, baseline.sim)
+
+    def test_duplicate_registration_rejected(self):
+        with pytest.raises(ValueError, match="already registered"):
+            register_scheduler("metronome",
+                               lambda policy: (DefaultPlugin(), None))
+
+    def test_ideal_not_registrable(self):
+        with pytest.raises(ValueError, match="ideal"):
+            register_scheduler("ideal",
+                               lambda policy: (DefaultPlugin(), None))
+
+    def test_unknown_scheduler_message_names_registry(self):
+        with pytest.raises(ValueError, match="metronome"):
+            run(snapshot_scenario("S2", n_iterations=10), Policy("nope"),
+                CFG)
+
+
+class TestPolicyNaming:
+    def test_auto_names_encode_deviations(self):
+        assert Policy("metronome").name == "metronome"
+        assert Policy("metronome", reconfigure=False).name == \
+            "metronome-noreconf"
+        assert Policy("metronome", rotation_joint=False,
+                      skip_third_stage=True).name == "metronome-legacyrot-wo3"
+        p = Policy("metronome").with_options(a_t=1.05, o_t=3)
+        assert p.name == "metronome-a_t=1.05-o_t=3"
+        assert Policy("metronome", label="x").name == "x"
+
+    def test_scenario_mode_validated(self):
+        with pytest.raises(ValueError, match="mode"):
+            Scenario("bad", lambda: (), mode="nope")
+
+    def test_build_arity_validated(self):
+        scn = Scenario("bad", lambda: (1,))
+        with pytest.raises(ValueError, match="build"):
+            scn.materialize()
