@@ -15,7 +15,7 @@ from typing import Dict, List, Optional, Sequence
 
 from repro.configs.metronome_testbed import snapshot_scenario
 from repro.core.experiment import Policy, Scenario, sweep
-from repro.core.results import SweepResult, to_bench_dict
+from repro.core.results import SweepResult, to_bench_dict, to_timing_dict
 from repro.core.simulator import SimConfig
 
 SCHEDULER_NAMES = ("metronome", "default", "diktyo", "ideal")
@@ -31,6 +31,16 @@ SMOKE = False
 
 # every sweep any bench ran this process (run.py --sweep-out persists it)
 RECORDED_SWEEPS: List[SweepResult] = []
+
+# every emit() row any bench printed this process (run.py --bench-out
+# persists the merged record as schema-versioned BENCH_sched_time.json);
+# CURRENT_ORIGIN is maintained by run.py around each bench module
+RECORDED_EMITS: List[Dict[str, object]] = []
+CURRENT_ORIGIN = ""
+
+# parallel sweep execution (run.py --workers): run_sweep fans independent
+# grid cells over a thread pool; 1 = the historical serial path
+WORKERS = 1
 
 
 def pick(default, smoke_value):
@@ -56,8 +66,8 @@ def run_sweep(scenarios: Sequence[Scenario], policies: Sequence[Policy],
     ``strict=True`` (the bench default) re-raises after recording if any
     cell failed, so a broken bench still fails run.py loudly — the
     isolation lives in the artifact, which keeps the healthy cells."""
-    sw = sweep(scenarios, policies, cfg)
-    sw.meta.update(origin=origin, smoke=SMOKE)
+    sw = sweep(scenarios, policies, cfg, workers=WORKERS)
+    sw.meta.update(origin=origin, smoke=SMOKE, workers=WORKERS)
     RECORDED_SWEEPS.append(sw)
     if strict and sw.errors:
         bad = ", ".join(f"({c.scenario}, {c.policy})" for c in sw.errors)
@@ -94,8 +104,21 @@ def write_sweeps(path: str) -> None:
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
-    """The harness contract: ``name,us_per_call,derived`` CSV rows."""
+    """The harness contract: ``name,us_per_call,derived`` CSV rows, also
+    recorded in-process for the BENCH_sched_time.json timing artifact."""
     print(f"{name},{us_per_call:.1f},{derived}")
+    RECORDED_EMITS.append({"name": name, "us_per_call": float(us_per_call),
+                           "derived": derived, "origin": CURRENT_ORIGIN})
+
+
+def write_timings(path: str) -> None:
+    """Persist every recorded emit() row as schema-versioned timing JSON
+    (the BENCH_sched_time.json trajectory artifact)."""
+    import json
+
+    with open(path, "w") as f:
+        json.dump(to_timing_dict(RECORDED_EMITS, smoke=SMOKE), f, indent=1,
+                  allow_nan=False)
 
 
 class Timer:

@@ -41,22 +41,37 @@ def main() -> None:
                     help="write every experiment sweep the benches ran as "
                          "schema-versioned JSON (CI: BENCH_sweep.json, "
                          "validated by scripts/validate_bench.py)")
+    ap.add_argument("--bench-out", default=None, metavar="PATH",
+                    help="write every emit() timing row as schema-versioned "
+                         "JSON (CI: BENCH_sched_time.json, validated by "
+                         "scripts/validate_bench.py)")
+    ap.add_argument("--workers", type=int, default=1, metavar="N",
+                    help="fan independent sweep cells over N threads "
+                         "(results identical to serial; default 1)")
     args = ap.parse_args()
     if args.smoke:
         common.SMOKE = True
+    common.WORKERS = max(1, args.workers)
     names = args.only.split(",") if args.only else list(ALL)
     print("name,us_per_call,derived")
     failed = []
     for name in names:
+        common.CURRENT_ORIGIN = name
         try:
             ALL[name].run()
         except Exception:  # noqa: BLE001 — keep the harness going
             traceback.print_exc()
             failed.append(name)
+        finally:
+            common.CURRENT_ORIGIN = ""
     if args.sweep_out:
         common.write_sweeps(args.sweep_out)
         print(f"# wrote {len(common.RECORDED_SWEEPS)} sweeps to "
               f"{args.sweep_out}", file=sys.stderr)
+    if args.bench_out:
+        common.write_timings(args.bench_out)
+        print(f"# wrote {len(common.RECORDED_EMITS)} timing rows to "
+              f"{args.bench_out}", file=sys.stderr)
     if failed:
         print(f"# FAILED benches: {failed}", file=sys.stderr)
         sys.exit(1)

@@ -1,11 +1,15 @@
 #!/usr/bin/env python
-"""Validate a BENCH_sweep.json artifact against the result schema.
+"""Validate a BENCH_*.json artifact against its result schema.
 
 Usage:  PYTHONPATH=src python scripts/validate_bench.py BENCH_sweep.json
+        PYTHONPATH=src python scripts/validate_bench.py BENCH_sched_time.json
 
-Exit 0 when the file matches ``repro.core.results.SCHEMA_VERSION``'s
-schema; exit 1 (listing every problem) on drift — CI runs this after the
-benchmark smoke so a silently-changed result format fails the build.
+Two payload kinds are recognized: experiment sweeps (``sweeps`` key, the
+``--sweep-out`` artifact) and benchmark timing rows (``kind == "timing"``,
+the ``--bench-out`` artifact).  Exit 0 when the file matches
+``repro.core.results.SCHEMA_VERSION``'s schema; exit 1 (listing every
+problem) on drift — CI runs this after the benchmark smoke so a
+silently-changed result format fails the build.
 """
 from __future__ import annotations
 
@@ -18,16 +22,24 @@ def main(argv) -> int:
         print(__doc__, file=sys.stderr)
         return 2
     path = argv[1]
-    from repro.core.results import validate_bench_dict
+    from repro.core.results import validate_bench_dict, validate_timing_dict
 
     with open(path) as f:
         doc = json.load(f)
-    problems = validate_bench_dict(doc)
+    timing = isinstance(doc, dict) and doc.get("kind") == "timing"
+    problems = (validate_timing_dict(doc) if timing
+                else validate_bench_dict(doc))
     if problems:
         print(f"{path}: INVALID ({len(problems)} problems)", file=sys.stderr)
         for p in problems:
             print(f"  - {p}", file=sys.stderr)
         return 1
+    if timing:
+        rows = doc.get("rows", [])
+        origins = sorted({r.get("origin", "") for r in rows})
+        print(f"{path}: OK — schema v{doc['schema_version']}, timing, "
+              f"{len(rows)} rows from {origins}")
+        return 0
     n_sweeps = len(doc.get("sweeps", []))
     n_cells = sum(len(s.get("cells", [])) for s in doc.get("sweeps", []))
     n_err = sum(1 for s in doc.get("sweeps", [])

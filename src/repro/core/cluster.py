@@ -90,6 +90,17 @@ class Cluster:
         missing = set(self.node_names) - set(self.topology.leaf_of)
         if missing:
             raise ValueError(f"topology missing nodes {sorted(missing)}")
+        # monotonic mutation counter (DESIGN.md section 15): every change to
+        # scheduler-visible link state (allocations, allocatable/physical
+        # capacities, latency) advances it so epoch-scoped planner caches
+        # (repro.core.rotation.PlanCache) can invalidate soundly
+        self.epoch: int = 0
+
+    def bump_epoch(self) -> None:
+        """Advance the mutation epoch; callers mutating any Node/link state
+        the schedulers read must invoke this (the scheduling framework and
+        the simulator's event paths do)."""
+        self.epoch += 1
 
     # -- helpers -----------------------------------------------------------
     def node(self, name: str) -> Node:
@@ -135,6 +146,7 @@ class Cluster:
         i, j = self._index[a], self._index[b]
         self.latency[i, j] = ms
         self.latency[j, i] = ms
+        self.bump_epoch()
 
     def copy(self) -> "Cluster":
         nodes = [

@@ -74,15 +74,26 @@ class LinkView:
     Groupings preserve task-store iteration order (registry insertion
     order) so downstream consumers — rotation job order, networkx edge
     insertion, max-min-fair tie-breaks — are bit-for-bit reproducible.
+
+    ``epoch`` tags the snapshot this view was built from (DESIGN.md
+    section 15): :meth:`from_registry` captures the monotonic
+    ``(cluster.epoch, registry.epoch)`` mutation counters, which advance on
+    every reserve/unreserve, traffic change, and capacity/background event.
+    Downstream planner caches (:class:`repro.core.rotation.PlanCache`) key
+    on it, so reusing a result across ANY mutation is impossible by
+    construction.  Views built without an epoch (``epoch=None``) disable
+    caching entirely.
     """
 
     def __init__(self, cluster: Cluster, tasks: Sequence[Task] = (), *,
                  extra: Optional[Task] = None,
-                 extra_node: Optional[str] = None) -> None:
+                 extra_node: Optional[str] = None,
+                 epoch: Optional[Tuple[int, int]] = None) -> None:
         self.cluster = cluster
         self._tasks: List[Task] = list(tasks)
         self.extra = extra
         self.extra_node = extra_node
+        self.epoch = epoch
         self._job_nodes_cache: Optional[Dict[str, Set[str]]] = None
 
     # ------------------------------------------------------------ constructors
@@ -90,9 +101,14 @@ class LinkView:
     def from_registry(cls, cluster: Cluster, registry, *,
                       extra: Optional[Task] = None,
                       extra_node: Optional[str] = None) -> "LinkView":
-        """View over the deployed tasks of a :class:`TaskRegistry`."""
+        """View over the deployed tasks of a :class:`TaskRegistry`, tagged
+        with the current (cluster, registry) mutation epoch."""
+        reg_epoch = getattr(registry, "epoch", None)
+        cl_epoch = getattr(cluster, "epoch", None)
+        epoch = (None if reg_epoch is None or cl_epoch is None
+                 else (cl_epoch, reg_epoch))
         return cls(cluster, list(registry.tasks.values()), extra=extra,
-                   extra_node=extra_node)
+                   extra_node=extra_node, epoch=epoch)
 
     # ---------------------------------------------------------------- plumbing
     def job_tasks(self, job: str) -> List[Task]:

@@ -79,6 +79,10 @@ class StopAndWaitController:
         self.reconf_count = 0
         self.joint = joint
         self.joint_resolve_count = 0  # components re-solved jointly
+        # epoch-scoped memo for the joint re-solves of offset resolution
+        # (on_schedule replans after EVERY reserve; within one epoch the
+        # conflicted components repeat — see DESIGN.md section 15)
+        self.plan_cache = rotation.PlanCache()
         self.links: Dict[str, LinkState] = {}  # link id -> state (see LinkState)
         self.global_offsets_ms: Dict[str, float] = {}
         self.injected_ms: Dict[str, float] = {}  # per-job E_T idle injection
@@ -160,6 +164,7 @@ class StopAndWaitController:
         res = rotation.resolve(
             schemes, self._priorities, view, registry, di_pre=self.di_pre,
             mode=mode, demand=demand, joint=self.joint,
+            cache=self.plan_cache,
         )
         for lid, sch in res.schemes.items():
             if lid in self.links and sch is not schemes.get(lid):
@@ -389,6 +394,7 @@ class StopAndWaitController:
         view = LinkView.from_registry(cluster, registry)
         for t in view.job_tasks(job):
             t.traffic = dataclasses.replace(new_spec)
+        registry.bump()  # stored tasks mutated in place -> new epoch
         for node, state in self.links.items():
             if job in state.scheme.jobs:
                 # re-unify periods for this link and recalc

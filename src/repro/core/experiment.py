@@ -323,26 +323,42 @@ def _run_ideal(cluster: Cluster, workloads: Sequence[Workload],
 
 
 # --------------------------------------------------------------------- sweep
+def _run_cell(scenario: Scenario, policy: Policy,
+              sim_config: Optional[SimConfig]) -> SweepCell:
+    """One isolated grid cell: a result, or the captured traceback."""
+    try:
+        res = run(scenario, policy, sim_config)
+    except Exception:  # noqa: BLE001 — isolation is the contract
+        return SweepCell(scenario=scenario.name, policy=policy.name,
+                         status="error", error=traceback.format_exc())
+    return SweepCell(scenario=scenario.name, policy=policy.name,
+                     status="ok", result=res)
+
+
 def sweep(scenarios: Sequence[Scenario], policies: Sequence[Policy],
           sim_config: Optional[SimConfig] = None,
-          *, meta: Optional[Dict[str, Any]] = None) -> SweepResult:
+          *, meta: Optional[Dict[str, Any]] = None,
+          workers: int = 1) -> SweepResult:
     """Run the full scenario x policy grid (row-major over scenarios).
 
     Per-cell error isolation: a cell that raises records its traceback in
     its :class:`~repro.core.results.SweepCell` (``status="error"``) and the
     rest of the grid still runs.  Check ``result.errors`` (or use
-    ``SweepResult.get``, which re-raises) when failures must surface."""
-    cells: List[SweepCell] = []
-    for scenario in scenarios:
-        for policy in policies:
-            try:
-                res = run(scenario, policy, sim_config)
-            except Exception:  # noqa: BLE001 — isolation is the contract
-                cells.append(SweepCell(scenario=scenario.name,
-                                       policy=policy.name, status="error",
-                                       error=traceback.format_exc()))
-            else:
-                cells.append(SweepCell(scenario=scenario.name,
-                                       policy=policy.name, status="ok",
-                                       result=res))
+    ``SweepResult.get``, which re-raises) when failures must surface.
+
+    ``workers > 1`` fans the cells over a thread pool: every cell
+    materializes its OWN scenario (fresh cluster/jobs — nothing shared) and
+    runs a seeded, self-contained simulation, so cells are independent and
+    the result — including the row-major cell order and per-cell error
+    isolation — is identical to the serial run.  ``workers=1`` (the
+    default) keeps the historical strictly-serial execution path."""
+    grid = [(scenario, policy) for scenario in scenarios
+            for policy in policies]
+    if workers <= 1 or len(grid) <= 1:
+        cells = [_run_cell(s, p, sim_config) for s, p in grid]
+        return SweepResult(cells=cells, meta=dict(meta or {}))
+    from concurrent.futures import ThreadPoolExecutor
+    with ThreadPoolExecutor(max_workers=min(workers, len(grid))) as pool:
+        futures = [pool.submit(_run_cell, s, p, sim_config) for s, p in grid]
+        cells = [f.result() for f in futures]  # preserves row-major order
     return SweepResult(cells=cells, meta=dict(meta or {}))

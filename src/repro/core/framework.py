@@ -39,6 +39,14 @@ class SchedulerPlugin:
               node_name: str, registry: "TaskRegistry") -> float:
         return 0.0
 
+    def score_nodes(self, ctx: ScheduleContext, cluster: Cluster, pod: Task,
+                    nodes: List[str],
+                    registry: "TaskRegistry") -> Dict[str, float]:
+        """Score every feasible node of one pod.  The default simply loops
+        :meth:`score`; plugins may override to batch the per-candidate work
+        (Metronome solves all candidates' rotation problems in one pass)."""
+        return {n: self.score(ctx, cluster, pod, n, registry) for n in nodes}
+
     def normalize_scores(self, ctx: ScheduleContext, cluster: Cluster, pod: Task,
                          scores: Dict[str, float],
                          registry: "TaskRegistry") -> Dict[str, float]:
@@ -60,6 +68,16 @@ class TaskRegistry:
         self.tasks: Dict[str, Task] = {}
         self.jobs: Dict[str, Job] = {}
         self.workloads: Dict[str, Workload] = {}
+        # monotonic mutation counter: advanced on every task/job store
+        # change AND on in-place task mutations (traffic changes), so the
+        # (cluster.epoch, registry.epoch) pair tags a LinkView snapshot for
+        # sound planner-cache invalidation (DESIGN.md section 15)
+        self.epoch: int = 0
+
+    def bump(self) -> None:
+        """Advance the mutation epoch (see :class:`~repro.core.rotation.
+        PlanCache`); every mutation of stored tasks/jobs must call this."""
+        self.epoch += 1
 
     def deployed_on(self, node_name: str) -> List[Task]:
         return [t for t in self.tasks.values() if t.node == node_name]
@@ -118,10 +136,8 @@ class SchedulingFramework:
         if not feasible:
             return ScheduleOutcome(pod, None)
 
-        scores = {
-            n: self.plugin.score(ctx, self.cluster, pod, n, self.registry)
-            for n in feasible
-        }
+        scores = self.plugin.score_nodes(ctx, self.cluster, pod, feasible,
+                                         self.registry)
         scores = self.plugin.normalize_scores(ctx, self.cluster, pod, scores,
                                               self.registry)
         # deterministic tie-break on node order
@@ -131,6 +147,10 @@ class SchedulingFramework:
         self.cluster.node(node_name).allocate(pod.uid, pod.resources,
                                               pod.traffic.bw_gbps)
         self.registry.tasks[pod.uid] = pod
+        # the demand view changed: advance the epochs BEFORE Reserve so the
+        # controller's replan (and any later Score) sees a fresh snapshot
+        self.cluster.bump_epoch()
+        self.registry.bump()
         self.plugin.reserve(ctx, self.cluster, pod, node_name, self.registry)
         return ScheduleOutcome(pod, node_name, best[1])
 
@@ -148,6 +168,7 @@ class SchedulingFramework:
     # -- all-or-nothing job gate (Coscheduling; Eqs. 11-12) ------------------
     def schedule_job(self, job: Job) -> bool:
         self.registry.jobs[job.name] = job
+        self.registry.bump()
         placed: List[Task] = []
         for pod in job.tasks:
             out = self.schedule_pod(pod)
@@ -161,6 +182,7 @@ class SchedulingFramework:
 
     def schedule_workload(self, wl: Workload) -> bool:
         self.registry.workloads[wl.name] = wl
+        self.registry.bump()
         placed_jobs: List[Job] = []
         for job in wl.jobs:
             if not self.schedule_job(job):
@@ -174,11 +196,14 @@ class SchedulingFramework:
     def evict_pod(self, pod: Task) -> None:
         if pod.node is not None:
             self.cluster.node(pod.node).release(pod.uid, pod.resources)
+            self.cluster.bump_epoch()
             self.plugin.unreserve(self.cluster, pod, pod.node, self.registry)
             pod.node = None
         self.registry.tasks.pop(pod.uid, None)
+        self.registry.bump()
 
     def evict_job(self, job: Job) -> None:
         for t in job.tasks:
             self.evict_pod(t)
         self.registry.jobs.pop(job.name, None)
+        self.registry.bump()

@@ -44,6 +44,12 @@ class UnifiedPeriods:
     ok: np.ndarray
 
 
+# content-keyed memo: unification is a pure function of its inputs and the
+# scheduler re-derives the same groups for every candidate node of a pod
+_UNIFY_CACHE: dict = {}
+_UNIFY_CACHE_MAX = 512
+
+
 def unify_periods(
     periods_ms: Sequence[float],
     priorities: Optional[Sequence[int]] = None,
@@ -66,6 +72,15 @@ def unify_periods(
     never altered — Eq. 16's "reference" semantics), scanning multipliers up
     to ``max_mul``.
     """
+    key = (tuple(float(p) for p in periods_ms),
+           None if priorities is None else tuple(int(p) for p in priorities),
+           g_t_ms, e_t_frac, max_mul)
+    hit = _UNIFY_CACHE.get(key)
+    if hit is not None:
+        # arrays copied out: LinkScheme consumers rebind/slice them freely
+        return UnifiedPeriods(hit.base_ms, hit.muls.copy(),
+                              hit.periods_ms.copy(), hit.injected_ms.copy(),
+                              hit.ok.copy())
     periods = np.asarray(periods_ms, dtype=np.float64)
     n = len(periods)
     if priorities is None:
@@ -116,6 +131,11 @@ def unify_periods(
         if n_bad == 0:
             break  # smallest feasible base period found
     assert best is not None
+    if len(_UNIFY_CACHE) >= _UNIFY_CACHE_MAX:
+        _UNIFY_CACHE.clear()
+    _UNIFY_CACHE[key] = UnifiedPeriods(
+        best.base_ms, best.muls.copy(), best.periods_ms.copy(),
+        best.injected_ms.copy(), best.ok.copy())
     return best
 
 
@@ -146,13 +166,29 @@ def pattern_vector(mul: int, duty: float, n_slots: int = DI_PRE) -> np.ndarray:
     return np.minimum(pat, 1.0)
 
 
+# content-keyed memo for the (pure) pattern construction; callers treat
+# pattern matrices as read-only (they are only ever scored or rolled)
+_PATTERN_CACHE: dict = {}
+_PATTERN_CACHE_MAX = 512
+
+
 def pattern_matrix(
     muls: Sequence[int], duties: Sequence[float], n_slots: int = DI_PRE
 ) -> np.ndarray:
-    """(P, S) matrix of per-task comm indicators."""
-    return np.stack(
+    """(P, S) matrix of per-task comm indicators (read-only: cached by
+    content — the per-slot construction loops are pure Python)."""
+    key = (tuple(int(m) for m in muls), tuple(float(d) for d in duties),
+           n_slots)
+    hit = _PATTERN_CACHE.get(key)
+    if hit is not None:
+        return hit
+    out = np.stack(
         [pattern_vector(int(m), float(d), n_slots) for m, d in zip(muls, duties)]
     )
+    if len(_PATTERN_CACHE) >= _PATTERN_CACHE_MAX:
+        _PATTERN_CACHE.clear()
+    _PATTERN_CACHE[key] = out
+    return out
 
 
 def roll_patterns(patterns: np.ndarray, shifts: np.ndarray) -> np.ndarray:

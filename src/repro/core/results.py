@@ -268,6 +268,63 @@ def to_bench_dict(sweeps: Sequence[SweepResult], *,
     }
 
 
+# ------------------------------------------------------------ timing BENCH
+# The second artifact family: benchmark timing rows (``common.emit``'s
+# ``name,us_per_call,derived`` contract) persisted as schema-versioned JSON
+# (``BENCH_sched_time.json``) so scheduler-latency regressions are a
+# machine-readable trajectory instead of stdout-only CSV.
+
+def to_timing_dict(rows: Sequence[Mapping[str, Any]], *,
+                   smoke: bool = False) -> Dict[str, Any]:
+    """The ``BENCH_sched_time.json`` payload: every ``emit`` row the bench
+    harness produced, each ``{name, us_per_call, derived, origin}``."""
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "generated_by": "benchmarks.run",
+        "kind": "timing",
+        "smoke": bool(smoke),
+        "rows": [
+            {"name": str(r["name"]),
+             "us_per_call": _f(float(r["us_per_call"])),
+             "derived": str(r.get("derived", "")),
+             "origin": str(r.get("origin", ""))}
+            for r in rows
+        ],
+    }
+
+
+def validate_timing_dict(doc: Mapping[str, Any]) -> List[str]:
+    """Schema check of a timing-rows payload; empty list == valid."""
+    problems: List[str] = []
+    if not isinstance(doc, Mapping):
+        return ["top level is not an object"]
+    if doc.get("schema_version") != SCHEMA_VERSION:
+        problems.append(f"schema_version {doc.get('schema_version')!r} != "
+                        f"{SCHEMA_VERSION}")
+    if doc.get("kind") != "timing":
+        problems.append(f"kind {doc.get('kind')!r} != 'timing'")
+    rows = doc.get("rows")
+    if not isinstance(rows, list):
+        problems.append("'rows' missing or not a list")
+        return problems
+    if not rows:
+        problems.append("'rows' is empty — no benchmark emitted a timing")
+    for ri, row in enumerate(rows):
+        where = f"rows[{ri}]"
+        if not isinstance(row, Mapping):
+            problems.append(f"{where} is not an object")
+            continue
+        if not isinstance(row.get("name"), str) or not row.get("name"):
+            problems.append(f"{where}.name missing or not a string")
+        us = row.get("us_per_call")
+        if not isinstance(us, (int, float)) or isinstance(us, bool):
+            problems.append(f"{where}.us_per_call missing or not a number")
+        for key in ("derived", "origin"):
+            if not isinstance(row.get(key), str):
+                problems.append(f"{where}.{key} missing or not a string")
+    return problems
+
+
 _CELL_RESULT_KEYS = ("scenario", "policy", "scheduler", "accepted",
                      "rejected", "placements", "high_priority",
                      "low_priority", "sim")

@@ -65,6 +65,7 @@ class MetronomePlugin(SchedulerPlugin):
         di_pre: int = DI_PRE,
         rotation_mode: str = "intermediate",  # 'compact' = stage-3 ablation
         joint: bool = True,  # False = legacy per-link solve (uplink-wins)
+        memo: bool = True,  # False = ablation: re-solve per candidate
     ) -> None:
         self.controller = controller
         self.g_t_ms = g_t_ms
@@ -72,6 +73,11 @@ class MetronomePlugin(SchedulerPlugin):
         self.di_pre = di_pre
         self.rotation_mode = rotation_mode
         self.joint = joint
+        # epoch-scoped content-keyed planner memo (DESIGN.md section 15):
+        # the N candidate nodes of one Score phase share every per-link and
+        # joint solve whose numeric problem coincides; ANY cluster/registry
+        # mutation advances the epoch and drops the store
+        self.plan_cache = rotation.PlanCache() if memo else None
         self.messages: List[ReserveMessage] = []
 
     # ------------------------------------------------------------------ utils
@@ -125,7 +131,9 @@ class MetronomePlugin(SchedulerPlugin):
         # so loop-free placements always win ties (see score()).
         return True
 
-    def _dependency_loop_closure(self, view: LinkView, pod: Task
+    def _dependency_loop_closure(self, view: LinkView, pod: Task,
+                                 base_pairs: Optional[Dict[str, List[Tuple[
+                                     str, str]]]] = None
                                  ) -> Tuple[bool, List[str]]:
         """Cassini's affinity-loop filter, restricted to edges that matter.
 
@@ -139,10 +147,24 @@ class MetronomePlugin(SchedulerPlugin):
         Returns ``(loop, closure_links)``: whether such a cycle exists, and
         every link of the pod's affinity component (the links a joint solve
         must cover to give the cycle one consistent set of offsets).
+
+        ``base_pairs`` optionally carries the candidate-independent
+        contending pairs (computed WITHOUT the extra pod): the candidate
+        delta can only change the extra node's host link — and, off star
+        topologies, uplink groupings — so every other link's pairs are
+        shared across the N candidates of one Score phase.
         """
+        topo = view.cluster.topology
+        affected = {view.extra_node} if view.extra is not None else set()
+        if not topo.is_star:
+            affected.update(topo.uplink_ids)
         g = nx.Graph()
         for link_id in view.planning_links():
-            for a, b in view.contending_pairs(link_id):
+            if base_pairs is not None and link_id not in affected:
+                pairs = base_pairs[link_id]
+            else:
+                pairs = view.contending_pairs(link_id)
+            for a, b in pairs:
                 if g.has_edge(a, b):
                     g[a][b]["links"].add(link_id)
                 else:
@@ -176,6 +198,31 @@ class MetronomePlugin(SchedulerPlugin):
         return loop, closure_links
 
     # ------------------------------------------------------------------ Score
+    def _candidate_links(self, cluster: Cluster, view: LinkView, pod: Task,
+                         node_name: str) -> List[str]:
+        """Every link the candidate placement's flows would traverse."""
+        return [node_name] + [
+            cluster.topology.uplinks[leaf].id
+            for leaf in view.traversed_uplinks(pod.job)
+        ]
+
+    def _loop_closure(self, ctx: ScheduleContext, view: LinkView, pod: Task,
+                      node_name: str) -> Tuple[bool, List[str]]:
+        """Per-candidate dependency-loop closure, computed once per Score
+        phase (score_nodes pre-computes it; a direct score() call fills the
+        same per-context slot).  The candidate-independent contending pairs
+        are shared across candidates via the context."""
+        store = ctx.cache.setdefault("loop_closure", {})
+        if node_name not in store:
+            base = ctx.cache.get("base_pairs")
+            if base is None:
+                base_view = LinkView(view.cluster, view._tasks)
+                base = {l: base_view.contending_pairs(l)
+                        for l in base_view.planning_links()}
+                ctx.cache["base_pairs"] = base
+            store[node_name] = self._dependency_loop_closure(view, pod, base)
+        return store[node_name]
+
     def score(self, ctx: ScheduleContext, cluster: Cluster, pod: Task,
               node_name: str, registry: TaskRegistry) -> float:
         schemes: Dict[str, Dict[str, LinkScheme]] = ctx.cache.setdefault(
@@ -193,15 +240,12 @@ class MetronomePlugin(SchedulerPlugin):
         # jointly when the per-link solutions conflict; the node's
         # bandwidth score is the worst link score
         view = self._candidate_view(cluster, pod, node_name, registry)
-        links = [node_name] + [
-            cluster.topology.uplinks[leaf].id
-            for leaf in view.traversed_uplinks(pod.job)
-        ]
+        links = self._candidate_links(cluster, view, pod, node_name)
         plan = rotation.plan(
             view, registry, links=links, self_job=pod.job, mode="fast",
             demand="planning", di_pre=self.di_pre, g_t_ms=self.g_t_ms,
             e_t_frac=self.e_t_frac, rotation_mode=self.rotation_mode,
-            joint=self.joint,
+            joint=self.joint, cache=self.plan_cache,
         )
         link_schemes = plan.schemes
         worst = plan.score
@@ -222,7 +266,7 @@ class MetronomePlugin(SchedulerPlugin):
         # loop-free placements win ties.  The schemes keep the RAW rotation
         # scores either way: the controller's realign guard needs to know
         # whether an interleave actually exists on each link.
-        loop, closure = self._dependency_loop_closure(view, pod)
+        loop, closure = self._loop_closure(ctx, view, pod, node_name)
         if loop:
             if self.joint:
                 wanted = set(closure) | set(links)
@@ -232,7 +276,7 @@ class MetronomePlugin(SchedulerPlugin):
                     self_job=pod.job, mode="fast", demand="planning",
                     di_pre=self.di_pre, g_t_ms=self.g_t_ms,
                     e_t_frac=self.e_t_frac, rotation_mode=self.rotation_mode,
-                    joint=True,
+                    joint=True, cache=self.plan_cache,
                 )
                 if jplan.schemes:
                     link_schemes = jplan.schemes
@@ -246,6 +290,65 @@ class MetronomePlugin(SchedulerPlugin):
         # penalty only demotes the NODE choice
         rot_scores[node_name] = float(worst)
         return float(max(0.0, worst - self._rack_penalty(view, pod)))
+
+    def score_nodes(self, ctx: ScheduleContext, cluster: Cluster, pod: Task,
+                    nodes: List[str],
+                    registry: TaskRegistry) -> Dict[str, float]:
+        """Score every surviving candidate in one batched pass.
+
+        A pre-pass mirrors :meth:`score`'s planning decisions per candidate
+        — per-link solves (memoized, so a link untouched by the candidate
+        delta is solved ONCE for all N candidates) and the dependency-loop
+        closure analysis — then hands EVERY conflicted component of every
+        candidate to :func:`rotation.joint_solve_batch`, which scores each
+        problem family's whole combo space in shared batched evaluations
+        (one stacked (C, L, R, S) kernel dispatch under
+        ``backend='kernel'``).  The per-candidate :meth:`score` calls that
+        follow hit the warmed cache, so results are bit-for-bit those of
+        the sequential path."""
+        if (self.plan_cache is not None and self.joint and not pod.low_comm
+                and len(nodes) > 1):
+            self._warm_candidates(ctx, cluster, pod, nodes, registry)
+        return {n: self.score(ctx, cluster, pod, n, registry)
+                for n in nodes}
+
+    def _warm_candidates(self, ctx: ScheduleContext, cluster: Cluster,
+                         pod: Task, nodes: List[str],
+                         registry: TaskRegistry) -> None:
+        """Collect every joint problem the per-candidate Score pass will
+        solve and batch-solve them into the plan cache."""
+        specs = []
+        for node_name in nodes:
+            view = self._candidate_view(cluster, pod, node_name, registry)
+            links = self._candidate_links(cluster, view, pod, node_name)
+            loop, closure = self._loop_closure(ctx, view, pod, node_name)
+            if not loop:
+                continue
+            wanted = set(closure) | set(links)
+            plan_links = [l for l in view.planning_links() if l in wanted]
+            schemes: Dict[str, LinkScheme] = {}
+            for lid in plan_links:
+                _score, scheme = rotation.solve_link(
+                    view, registry, lid, self_job=pod.job, mode="fast",
+                    demand="planning", di_pre=self.di_pre,
+                    g_t_ms=self.g_t_ms, e_t_frac=self.e_t_frac,
+                    rotation_mode=self.rotation_mode, cache=self.plan_cache,
+                )
+                if scheme is not None:
+                    schemes[lid] = scheme
+            if len(schemes) < 2:
+                continue  # plan() will not resolve, nothing joint to warm
+            for comp_links, conflicted in rotation.conflicted_components(
+                    schemes, self.di_pre):
+                if conflicted:
+                    specs.append((view, comp_links))
+        if specs:
+            rotation.joint_solve_batch(
+                specs, registry, mode="fast", demand="planning",
+                rotation_mode=self.rotation_mode, di_pre=self.di_pre,
+                g_t_ms=self.g_t_ms, e_t_frac=self.e_t_frac,
+                cache=self.plan_cache,
+            )
 
     def _rack_penalty(self, view: LinkView, pod: Task) -> float:
         """Rack-locality Score bonus (inverted as a penalty): demote

@@ -384,6 +384,7 @@ class ClusterSimulator:
             kept.append(BackgroundFlow(node=node, rate_gbps=ev.rate_gbps,
                                        link=ev.link))
         self.background = kept
+        self.cluster.bump_epoch()  # background conditions changed
         if ev.adjust_allocatable:
             # NodeBandwidth-CR path (section III-A): the manager lowers the
             # allocatable share by the observed unregulated rate
@@ -413,6 +414,7 @@ class ClusterSimulator:
         if (target.allocatable_gbps is not None
                 and target.allocatable_gbps > getattr(target, cap_field)):
             target.allocatable_gbps = float(getattr(target, cap_field))
+        self.cluster.bump_epoch()  # invalidate epoch-scoped planner caches
         self._reconfigure_links([ev.link])
 
     def _apply_departure(self, ev: events_mod.JobDeparture) -> None:
@@ -447,13 +449,16 @@ class ClusterSimulator:
                 continue
             if t.node in self.cluster.nodes:
                 self.cluster.node(t.node).release(t.uid, t.resources)
+                self.cluster.bump_epoch()
             if self.controller is not None:
                 self.controller.on_evict(t.node, t, registry=self.registry,
                                          cluster=self.cluster)
             if self.registry is not None:
                 self.registry.tasks.pop(t.uid, None)
+                self.registry.bump()
         if self.registry is not None:
             self.registry.jobs.pop(ev.job, None)
+            self.registry.bump()
 
     def _set_allocatable(self, link_id: str, alloc: float) -> None:
         if link_id in self.cluster.nodes:
@@ -462,6 +467,7 @@ class ClusterSimulator:
             link = self.cluster.topology.link(link_id)
             if link is not None:
                 link.allocatable_gbps = alloc
+        self.cluster.bump_epoch()  # invalidate epoch-scoped planner caches
 
     def _reconfigure_links(self, link_ids: Sequence[str]) -> None:
         """The reconfiguration loop (paper section III-C): tell the
@@ -488,6 +494,8 @@ class ClusterSimulator:
         )
         for t in st.job.tasks:
             t.traffic = dataclasses.replace(new_spec)
+        if self.registry is not None:
+            self.registry.bump()  # stored tasks' traffic changed in place
         if self.controller is not None and self.registry is not None:
             self.controller.report_traffic_change(
                 self.registry, self.cluster, jname, new_spec

@@ -112,6 +112,75 @@ def _multilink_kernel(caps_ref, base_ref, bank_a_ref, bank_b_ref, out_ref, *,
     out_ref[...] = score.astype(out_ref.dtype)
 
 
+def _multilink_batch_kernel(caps_ref, base_ref, bank_a_ref, bank_b_ref,
+                            out_ref, *, n_slots: int):
+    caps = caps_ref[...][0]        # (L, LANE) — one candidate's capacities
+    base = base_ref[...][0]        # (L, 1, S_pad)
+    bank_a = bank_a_ref[...][0]    # (L, block_a, S_pad)
+    bank_b = bank_b_ref[...][0]    # (L, Rb, S_pad)
+    cap_col = caps[:, :1]          # (L, 1)
+    total = (base[:, :, None, :] + bank_a[:, :, None, :]
+             + bank_b[:, None, :, :])  # (L, block_a, Rb, S_pad)
+    excess = jnp.maximum(total - cap_col[:, None, :, None], 0.0)
+    ex = jnp.sum(excess, axis=-1)  # (L, block_a, Rb)
+    frac = ex / (cap_col[:, None, :] * n_slots)
+    worst = jnp.max(frac, axis=0)  # (block_a, Rb)
+    score = jnp.maximum(0.0, 100.0 * (1.0 - worst))
+    out_ref[...] = score[None].astype(out_ref.dtype)
+
+
+def metronome_score_multilink_batch(
+    base_demand: jax.Array,  # (C, L, S) fixed demand per candidate and link
+    bank_a: jax.Array,  # (C, L, Ra, S)
+    bank_b: jax.Array,  # (C, L, Rb, S)
+    capacities: jax.Array,  # (C, L)
+    *,
+    block_a: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """Joint scores (C, Ra, Rb) for EVERY candidate in one dispatch.
+
+    The Score phase's one-shot batched evaluation: each of the C surviving
+    candidate placements of a pod contributes its own stacked per-link
+    demand banks and capacities, and the grid walks (candidate, Ra-block)
+    pairs so a single kernel launch replaces the historical per-candidate
+    ``metronome_score_multilink`` calls.  Candidates with fewer links are
+    padded with zero-demand unit-capacity links, which score a constant 100
+    and cannot change the min-over-links."""
+    c, l, s = base_demand.shape
+    ra, rb = bank_a.shape[2], bank_b.shape[2]
+    s_pad = -(-s // LANE) * LANE
+    ra_pad = -(-ra // block_a) * block_a
+
+    def pad(x, rows):
+        out = jnp.zeros((c, l, rows, s_pad), jnp.float32)
+        return out.at[:, :, : x.shape[2], :s].set(x.astype(jnp.float32))
+
+    base = pad(base_demand[:, :, None, :], 1)
+    a = pad(bank_a, ra_pad)
+    b = pad(bank_b, rb)
+    caps = jnp.broadcast_to(
+        jnp.asarray(capacities, jnp.float32)[:, :, None], (c, l, LANE))
+
+    kernel = functools.partial(_multilink_batch_kernel, n_slots=s)
+    out = pl.pallas_call(
+        kernel,
+        grid=(c, ra_pad // block_a),
+        in_specs=[
+            pl.BlockSpec((1, l, LANE), lambda ci, i: (ci, 0, 0)),
+            pl.BlockSpec((1, l, 1, s_pad), lambda ci, i: (ci, 0, 0, 0)),
+            pl.BlockSpec((1, l, block_a, s_pad), lambda ci, i: (ci, 0, i, 0)),
+            pl.BlockSpec((1, l, rb, s_pad), lambda ci, i: (ci, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_a, rb), lambda ci, i: (ci, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, ra_pad, rb), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(caps, base, a, b)
+    return out[:, :ra, :rb]
+
+
 def metronome_score_multilink(
     base_demand: jax.Array,  # (L, S) fixed demand per link
     bank_a: jax.Array,  # (L, Ra, S)

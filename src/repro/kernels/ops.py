@@ -16,7 +16,9 @@ import numpy as np
 
 from . import ref
 from .flash_attention import flash_attention_fwd
-from .metronome_score import metronome_score_multilink, metronome_score_pairwise
+from .metronome_score import (metronome_score_multilink,
+                              metronome_score_multilink_batch,
+                              metronome_score_pairwise)
 from .rg_lru import rg_lru_pallas
 
 
@@ -92,6 +94,34 @@ def score_multilink(base_demand, bank_a, bank_b, capacities,
             jnp.asarray(bank_b), jnp.asarray(capacities), interpret=False)
     else:
         out = _score_multilink_jit(
+            jnp.asarray(base_demand), jnp.asarray(bank_a),
+            jnp.asarray(bank_b), jnp.asarray(capacities))
+    return np.asarray(out)
+
+
+_score_multilink_batch_jit = jax.jit(ref.metronome_score_multilink_batch_ref)
+
+
+def score_multilink_batch(base_demand, bank_a, bank_b, capacities,
+                          interpret: Optional[bool] = None) -> np.ndarray:
+    """Candidate-batched joint Eq. 18 scores: ONE dispatch over stacked
+    (C, L, R, S) banks returning (C, Ra, Rb) — the Score phase's surviving
+    candidates evaluated together instead of one kernel launch each.
+
+    Dispatch mirrors :func:`score_multilink`: real TPU -> compiled Pallas
+    batch kernel; anything else -> the jit'd jnp reference;
+    ``interpret=True`` forces the Pallas kernel in interpret mode (parity
+    tests only)."""
+    if interpret:
+        out = metronome_score_multilink_batch(
+            jnp.asarray(base_demand), jnp.asarray(bank_a),
+            jnp.asarray(bank_b), jnp.asarray(capacities), interpret=True)
+    elif _on_tpu():
+        out = metronome_score_multilink_batch(
+            jnp.asarray(base_demand), jnp.asarray(bank_a),
+            jnp.asarray(bank_b), jnp.asarray(capacities), interpret=False)
+    else:
+        out = _score_multilink_batch_jit(
             jnp.asarray(base_demand), jnp.asarray(bank_a),
             jnp.asarray(bank_b), jnp.asarray(capacities))
     return np.asarray(out)

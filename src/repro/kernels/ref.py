@@ -72,6 +72,32 @@ def metronome_score_multilink_ref(base_demand, bank_a, bank_b,
     return jnp.maximum(0.0, 100.0 * (1.0 - jnp.max(frac, axis=0)))
 
 
+def metronome_score_multilink_batch_ref(base_demand, bank_a, bank_b,
+                                        capacities) -> jnp.ndarray:
+    """Candidate-batched multi-link joint rotation-score oracle (jnp).
+
+    base_demand: (C, L, S) fixed demand per candidate placement and link.
+    bank_a:      (C, L, Ra, S) free job A's demand bank per candidate/link.
+    bank_b:      (C, L, Rb, S) free job B's demand bank per candidate/link.
+    capacities:  (C, L) per-candidate per-link allocatable bandwidth.
+    Returns (C, Ra, Rb): per candidate, the min over its links of the
+    per-link Eq. 18 score — one batched invocation covering every surviving
+    candidate of a pod's Score phase.  Zero-demand padding links (see the
+    kernel) score exactly 100 and never change the min.
+    """
+    base = jnp.asarray(base_demand, jnp.float32)
+    a = jnp.asarray(bank_a, jnp.float32)
+    b = jnp.asarray(bank_b, jnp.float32)
+    caps = jnp.asarray(capacities, jnp.float32)
+    s = base.shape[-1]
+    total = (base[:, :, None, None, :] + a[:, :, :, None, :]
+             + b[:, :, None, :, :])  # (C, L, Ra, Rb, S)
+    excess = jnp.maximum(
+        total - caps[:, :, None, None, None], 0.0).sum(axis=-1)
+    frac = excess / (caps[:, :, None, None] * s)
+    return jnp.maximum(0.0, 100.0 * (1.0 - jnp.max(frac, axis=1)))
+
+
 def rg_lru_ref(a: jax.Array, x: jax.Array, h0: Optional[jax.Array] = None
                ) -> jax.Array:
     """Linear recurrence oracle: y_t = a_t * y_{t-1} + x_t. (B, S, W)."""
