@@ -1,0 +1,114 @@
+"""Content-keyed sweep-result cache for the nightly benchmark job.
+
+The nightly CI run executes the NON-smoke benchmark grid, which is minutes
+per bench.  Most nights nothing that feeds a given sweep has changed, so
+``run.py --cache-dir .bench_cache`` lets :func:`benchmarks.common.run_sweep`
+skip cells whose inputs are byte-identical to a previous night:
+
+  * The key is a sha256 over the *materialized scenario content* — cluster
+    (nodes, host/uplink capacities, latency, topology), every job's traffic
+    spec, the background/event streams, the policy names, and the resolved
+    ``SimConfig`` — plus ``results.SCHEMA_VERSION``.  Renaming a builder
+    does not invalidate; changing any input that can alter a result does.
+    (Code changes inside the simulator are covered by the CI cache key,
+    which hashes ``src/**`` — see .github/workflows/ci.yml.)
+  * The value is the full ``SweepResult.to_json_dict(include_durations=
+    True)`` payload, so a cache hit restores bit-identical artifacts.
+
+Corrupt or schema-drifted entries are treated as misses, never errors.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Any, Optional, Sequence
+
+import numpy as np
+
+from repro.core.experiment import Policy, Scenario
+from repro.core.results import SCHEMA_VERSION, SweepResult
+from repro.core.simulator import SimConfig
+
+
+def _canon(obj: Any) -> Any:
+    """JSON-serializable canonical form of arbitrary scenario content."""
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return {"__dc__": type(obj).__name__,
+                **{f.name: _canon(getattr(obj, f.name))
+                   for f in dataclasses.fields(obj)}}
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    if isinstance(obj, (np.floating, np.integer)):
+        return obj.item()
+    if isinstance(obj, dict):
+        return {str(k): _canon(v) for k, v in sorted(obj.items(),
+                                                     key=lambda kv: str(kv[0]))}
+    if isinstance(obj, (list, tuple)):
+        return [_canon(v) for v in obj]
+    if isinstance(obj, (str, int, float, bool)) or obj is None:
+        return obj
+    return repr(obj)  # last resort: stable for value-ish objects
+
+
+def _cluster_canon(cluster) -> Any:
+    topo = cluster.topology
+    return {
+        "nodes": [_canon(cluster.nodes[n]) for n in cluster.node_names],
+        "latency": cluster.latency.tolist(),
+        "leaf_of": _canon(topo.leaf_of),
+        "uplinks": _canon(topo.uplinks),
+    }
+
+
+def fingerprint(scenario: Scenario, policies: Sequence[Policy],
+                cfg: Optional[SimConfig]) -> str:
+    """sha256 over the sweep cell inputs (materialized, not by name)."""
+    cluster, workloads, background, events = scenario.materialize()
+    doc = {
+        "schema_version": SCHEMA_VERSION,
+        "mode": scenario.mode,
+        "cluster": _cluster_canon(cluster),
+        "workloads": _canon(workloads),
+        "background": _canon(background),
+        "events": _canon(events),
+        "policies": [p.name for p in policies],
+        "sim_config": _canon(cfg) if cfg is not None else None,
+        "scenario_sim_config": (_canon(scenario.sim_config)
+                                if scenario.sim_config is not None else None),
+    }
+    blob = json.dumps(doc, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def fingerprint_grid(scenarios: Sequence[Scenario],
+                     policies: Sequence[Policy],
+                     cfg: Optional[SimConfig]) -> str:
+    """Key of a whole ``run_sweep`` grid: the per-scenario fingerprints
+    concatenated (order matters — cells are recorded row-major)."""
+    blob = "|".join(fingerprint(s, policies, cfg) for s in scenarios)
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def load(cache_dir: str, key: str) -> Optional[SweepResult]:
+    """Cached SweepResult for ``key``, or None (miss / corrupt / drifted)."""
+    path = os.path.join(cache_dir, f"{key}.json")
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+        if doc.get("schema_version") != SCHEMA_VERSION:
+            return None
+        return SweepResult.from_json_dict(doc)
+    except (OSError, ValueError, KeyError, TypeError):
+        return None
+
+
+def store(cache_dir: str, key: str, sweep: SweepResult) -> None:
+    os.makedirs(cache_dir, exist_ok=True)
+    path = os.path.join(cache_dir, f"{key}.json")
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(sweep.to_json_dict(include_durations=True), f,
+                  allow_nan=False)
+    os.replace(tmp, path)

@@ -15,7 +15,8 @@ from typing import Dict, List, Optional, Sequence
 
 from repro.configs.metronome_testbed import snapshot_scenario
 from repro.core.experiment import Policy, Scenario, sweep
-from repro.core.results import SweepResult, to_bench_dict, to_timing_dict
+from repro.core.results import (SweepResult, to_bench_dict, to_timing_dict,
+                                to_trace_throughput_dict)
 from repro.core.simulator import SimConfig
 
 SCHEDULER_NAMES = ("metronome", "default", "diktyo", "ideal")
@@ -38,9 +39,20 @@ RECORDED_SWEEPS: List[SweepResult] = []
 RECORDED_EMITS: List[Dict[str, object]] = []
 CURRENT_ORIGIN = ""
 
-# parallel sweep execution (run.py --workers): run_sweep fans independent
-# grid cells over a thread pool; 1 = the historical serial path
+# every trace-throughput row bench_trace_throughput recorded this process
+# (run.py --trace-out persists the merged record as schema-versioned
+# BENCH_trace_throughput.json)
+RECORDED_TRACE_ROWS: List[Dict[str, object]] = []
+
+# parallel sweep execution (run.py --workers / --worker-mode): run_sweep
+# fans independent grid cells over a thread or process pool; 1/thread =
+# the historical serial path
 WORKERS = 1
+WORKER_MODE = "thread"
+
+# content-keyed sweep cache (run.py --cache-dir, the nightly CI job):
+# run_sweep consults/updates it when set; None = always compute
+CACHE_DIR: Optional[str] = None
 
 
 def pick(default, smoke_value):
@@ -65,9 +77,32 @@ def run_sweep(scenarios: Sequence[Scenario], policies: Sequence[Policy],
 
     ``strict=True`` (the bench default) re-raises after recording if any
     cell failed, so a broken bench still fails run.py loudly — the
-    isolation lives in the artifact, which keeps the healthy cells."""
-    sw = sweep(scenarios, policies, cfg, workers=WORKERS)
+    isolation lives in the artifact, which keeps the healthy cells.
+
+    With ``CACHE_DIR`` set (run.py --cache-dir, the nightly CI job) the
+    grid is keyed on its *materialized content* (``benchmarks.cache``) and
+    an unchanged grid is restored from disk instead of re-simulated."""
+    key = None
+    if CACHE_DIR is not None:
+        from . import cache as _cache
+
+        key = "sweep-" + _cache.fingerprint_grid(scenarios, policies, cfg)
+        hit = _cache.load(CACHE_DIR, key)
+        if hit is not None:
+            hit.meta.update(origin=origin, smoke=SMOKE, cache="hit")
+            RECORDED_SWEEPS.append(hit)
+            if strict and hit.errors:
+                bad = ", ".join(f"({c.scenario}, {c.policy})"
+                                for c in hit.errors)
+                raise RuntimeError(f"sweep cells failed in {origin}: {bad}")
+            return hit
+    sw = sweep(scenarios, policies, cfg, workers=WORKERS, mode=WORKER_MODE)
     sw.meta.update(origin=origin, smoke=SMOKE, workers=WORKERS)
+    if key is not None and not sw.errors:
+        from . import cache as _cache
+
+        sw.meta.update(cache="miss")
+        _cache.store(CACHE_DIR, key, sw)
     RECORDED_SWEEPS.append(sw)
     if strict and sw.errors:
         bad = ", ".join(f"({c.scenario}, {c.policy})" for c in sw.errors)
@@ -119,6 +154,24 @@ def write_timings(path: str) -> None:
     with open(path, "w") as f:
         json.dump(to_timing_dict(RECORDED_EMITS, smoke=SMOKE), f, indent=1,
                   allow_nan=False)
+
+
+def record_trace_row(**row: object) -> None:
+    """Record one trace-throughput row (see
+    ``results.to_trace_throughput_dict`` for the field contract); run.py
+    ``--trace-out`` persists the merged record."""
+    row.setdefault("origin", CURRENT_ORIGIN)
+    RECORDED_TRACE_ROWS.append(row)
+
+
+def write_trace_throughput(path: str) -> None:
+    """Persist every recorded trace-throughput row as schema-versioned
+    JSON (the BENCH_trace_throughput.json artifact)."""
+    import json
+
+    with open(path, "w") as f:
+        json.dump(to_trace_throughput_dict(RECORDED_TRACE_ROWS, smoke=SMOKE),
+                  f, indent=1, allow_nan=False)
 
 
 class Timer:

@@ -12,7 +12,7 @@ import traceback
 from . import (bench_ablation, bench_dynamic, bench_fabric, bench_kernels,
                bench_param_variation, bench_persistence, bench_roofline,
                bench_rotation, bench_sched_time, bench_snapshots, bench_tct,
-               bench_thresholds, common)
+               bench_thresholds, bench_trace_throughput, common)
 
 ALL = {
     "snapshots": bench_snapshots,     # Fig. 7/8 + Table V
@@ -27,6 +27,7 @@ ALL = {
     "sched_time": bench_sched_time,   # Fig. 16
     "kernels": bench_kernels,         # kernel micro-benches
     "roofline": bench_roofline,       # dry-run roofline summary
+    "trace_throughput": bench_trace_throughput,  # fluid-engine backends @ 10k jobs
 }
 
 
@@ -45,13 +46,29 @@ def main() -> None:
                     help="write every emit() timing row as schema-versioned "
                          "JSON (CI: BENCH_sched_time.json, validated by "
                          "scripts/validate_bench.py)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the fluid-engine trace-throughput rows as "
+                         "schema-versioned JSON (CI nightly: "
+                         "BENCH_trace_throughput.json)")
     ap.add_argument("--workers", type=int, default=1, metavar="N",
-                    help="fan independent sweep cells over N threads "
+                    help="fan independent sweep cells over N workers "
                          "(results identical to serial; default 1)")
+    ap.add_argument("--worker-mode", default="thread",
+                    choices=("thread", "process"),
+                    help="worker pool flavor for --workers > 1: threads "
+                         "(default) or spawned processes (sidesteps the "
+                         "GIL for CPU-bound grids; scenario builders are "
+                         "picklable dataclasses so cells ship cleanly)")
+    ap.add_argument("--cache-dir", default=None, metavar="DIR",
+                    help="content-keyed sweep-result cache (nightly CI): "
+                         "grids whose materialized inputs are unchanged "
+                         "restore from DIR instead of re-simulating")
     args = ap.parse_args()
     if args.smoke:
         common.SMOKE = True
     common.WORKERS = max(1, args.workers)
+    common.WORKER_MODE = args.worker_mode
+    common.CACHE_DIR = args.cache_dir
     names = args.only.split(",") if args.only else list(ALL)
     print("name,us_per_call,derived")
     failed = []
@@ -72,6 +89,10 @@ def main() -> None:
         common.write_timings(args.bench_out)
         print(f"# wrote {len(common.RECORDED_EMITS)} timing rows to "
               f"{args.bench_out}", file=sys.stderr)
+    if args.trace_out:
+        common.write_trace_throughput(args.trace_out)
+        print(f"# wrote {len(common.RECORDED_TRACE_ROWS)} trace-throughput "
+              f"rows to {args.trace_out}", file=sys.stderr)
     if failed:
         print(f"# FAILED benches: {failed}", file=sys.stderr)
         sys.exit(1)

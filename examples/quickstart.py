@@ -67,6 +67,19 @@ def main():
     print(f"JSON round-trip: policy={back.policy!r}, "
           f"placements={back.placements}")
 
+    # sim_backend swaps the simulator's fluid rate engine per cell
+    # (DESIGN.md section 16): the default 'python' is the bit-for-bit
+    # seed path; 'jnp' / 'kernel' solve the (flows x links) fixed point
+    # vectorized — same rates to float32 tolerance, and the only way to
+    # push 10k-job production traces (benchmarks/bench_trace_throughput).
+    # The knob encodes itself in the cell name, so ablation grids stay
+    # collision-free.
+    vec = Policy("metronome", sim_backend="jnp")
+    rv = sweep([scenario], [vec], cfg).get(scenario.name, vec.name)
+    print(f"{vec.name}: lo s/1000 = "
+          f"{rv.mean_s_per_1000(rv.low_priority):.2f} (vs "
+          f"{me.mean_s_per_1000(me.low_priority):.2f} under 'python')")
+
 
 if __name__ == "__main__":
     main()

@@ -4,9 +4,11 @@
 Usage:  PYTHONPATH=src python scripts/validate_bench.py BENCH_sweep.json
         PYTHONPATH=src python scripts/validate_bench.py BENCH_sched_time.json
 
-Two payload kinds are recognized: experiment sweeps (``sweeps`` key, the
-``--sweep-out`` artifact) and benchmark timing rows (``kind == "timing"``,
-the ``--bench-out`` artifact).  Exit 0 when the file matches
+Three payload kinds are recognized: experiment sweeps (``sweeps`` key,
+the ``--sweep-out`` artifact), benchmark timing rows (``kind == "timing"``,
+the ``--bench-out`` artifact), and fluid-engine trace-throughput rows
+(``kind == "trace_throughput"``, the ``--trace-out`` artifact).  Exit 0
+when the file matches
 ``repro.core.results.SCHEMA_VERSION``'s schema; exit 1 (listing every
 problem) on drift — CI runs this after the benchmark smoke so a
 silently-changed result format fails the build.
@@ -22,23 +24,37 @@ def main(argv) -> int:
         print(__doc__, file=sys.stderr)
         return 2
     path = argv[1]
-    from repro.core.results import validate_bench_dict, validate_timing_dict
+    from repro.core.results import (validate_bench_dict,
+                                    validate_timing_dict,
+                                    validate_trace_throughput_dict)
 
     with open(path) as f:
         doc = json.load(f)
-    timing = isinstance(doc, dict) and doc.get("kind") == "timing"
-    problems = (validate_timing_dict(doc) if timing
-                else validate_bench_dict(doc))
+    kind = doc.get("kind") if isinstance(doc, dict) else None
+    if kind == "timing":
+        problems = validate_timing_dict(doc)
+    elif kind == "trace_throughput":
+        problems = validate_trace_throughput_dict(doc)
+    else:
+        problems = validate_bench_dict(doc)
     if problems:
         print(f"{path}: INVALID ({len(problems)} problems)", file=sys.stderr)
         for p in problems:
             print(f"  - {p}", file=sys.stderr)
         return 1
-    if timing:
+    if kind == "timing":
         rows = doc.get("rows", [])
         origins = sorted({r.get("origin", "") for r in rows})
         print(f"{path}: OK — schema v{doc['schema_version']}, timing, "
               f"{len(rows)} rows from {origins}")
+        return 0
+    if kind == "trace_throughput":
+        rows = doc.get("rows", [])
+        best = max((r.get("speedup_vs_python") or 0.0 for r in rows),
+                   default=0.0)
+        print(f"{path}: OK — schema v{doc['schema_version']}, "
+              f"trace_throughput, {len(rows)} rows, best speedup "
+              f"{best:.1f}x")
         return 0
     n_sweeps = len(doc.get("sweeps", []))
     n_cells = sum(len(s.get("cells", [])) for s in doc.get("sweeps", []))

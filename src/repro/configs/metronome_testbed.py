@@ -16,6 +16,7 @@ training on 25 GbE (duty cycles 0.2-0.6, bandwidth demand 8-24 Gbps).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.cluster import Cluster, make_fabric_cluster, make_testbed_cluster
@@ -260,15 +261,80 @@ def make_dynamic_snapshot(
 # materialization — exactly what the benchmarks' per-scheduler regeneration
 # loop used to do by hand.
 
+# The build callables are module-level dataclass instances, not closures:
+# process-mode sweeps (``experiment.sweep(mode='process')``) pickle each
+# cell's Scenario into spawned workers, and a closure cannot cross that
+# boundary.  ``__call__`` keeps them drop-in where a plain function went.
+
+@dataclasses.dataclass(frozen=True)
+class SnapshotBuild:
+    """Picklable ``Scenario.build`` of one Table IV / fabric snapshot."""
+
+    sid: str
+    n_iterations: int = 400
+
+    def __call__(self):
+        cluster, wls, bg = make_snapshot(self.sid,
+                                         n_iterations=self.n_iterations)
+        return cluster, wls, bg
+
+
+@dataclasses.dataclass(frozen=True)
+class DynamicBuild:
+    """Picklable ``Scenario.build`` of one dynamic snapshot (D1/D2)."""
+
+    sid: str
+    n_iterations: int = 400
+    amplitude: float = 0.3
+    t_on_ms: float = 15_000.0
+    t_off_ms: float = 45_000.0
+
+    def __call__(self):
+        return make_dynamic_snapshot(
+            self.sid, n_iterations=self.n_iterations,
+            amplitude=self.amplitude, t_on_ms=self.t_on_ms,
+            t_off_ms=self.t_off_ms)
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceBuild:
+    """Picklable ``Scenario.build`` of a Gavel-style trace scenario.
+
+    ``cluster_factory=None`` means the testbed cluster; a non-None factory
+    must itself be picklable (a module-level function or dataclass) for
+    process-mode sweeps."""
+
+    trace: Tuple[TraceJobSpec, ...]
+    time_scale: float = 1.0
+    open_ended: bool = True
+    cluster_factory: Optional[Callable[[], Cluster]] = None
+
+    def __call__(self):
+        cluster = (self.cluster_factory()
+                   if self.cluster_factory is not None
+                   else make_testbed_cluster())
+        jobs = trace_to_jobs(list(self.trace), MODEL_FLEET,
+                             time_scale=self.time_scale,
+                             open_ended=self.open_ended)
+        wls = []
+        for j in jobs:
+            wl = Workload(name=j.name, jobs=[j])
+            j.workload = wl.name
+            for t in j.tasks:
+                t.workload = wl.name
+            wls.append(wl)
+        events = (trace_departure_events(list(self.trace),
+                                         time_scale=self.time_scale)
+                  if self.open_ended else ())
+        return cluster, wls, (), events
+
+
 def snapshot_scenario(sid: str, n_iterations: int = 400,
                       sim_config: Optional[SimConfig] = None) -> Scenario:
     """The Table IV snapshot (or fabric/joint snapshot) ``sid`` as an
     offline Scenario."""
-
-    def build():
-        cluster, wls, bg = make_snapshot(sid, n_iterations=n_iterations)
-        return cluster, wls, bg
-    return Scenario(name=sid, build=build, sim_config=sim_config)
+    return Scenario(name=sid, build=SnapshotBuild(sid, n_iterations),
+                    sim_config=sim_config)
 
 
 def dynamic_scenario(sid: str, n_iterations: int = 400,
@@ -277,12 +343,10 @@ def dynamic_scenario(sid: str, n_iterations: int = 400,
                      sim_config: Optional[SimConfig] = None) -> Scenario:
     """Dynamic snapshot ``sid`` (D1/D2) with its fluctuation event stream as
     an offline Scenario (the events fire mid-run on the simulator clock)."""
-
-    def build():
-        return make_dynamic_snapshot(sid, n_iterations=n_iterations,
-                                     amplitude=amplitude, t_on_ms=t_on_ms,
-                                     t_off_ms=t_off_ms)
-    return Scenario(name=sid, build=build, sim_config=sim_config)
+    return Scenario(
+        name=sid,
+        build=DynamicBuild(sid, n_iterations, amplitude, t_on_ms, t_off_ms),
+        sim_config=sim_config)
 
 
 def trace_scenario(trace: List[TraceJobSpec], *, time_scale: float = 1.0,
@@ -298,23 +362,12 @@ def trace_scenario(trace: List[TraceJobSpec], *, time_scale: float = 1.0,
     its window; never-admitted jobs depart from the pending queue).  Use
     ``open_ended=False`` for the 'ideal' reference, which ignores the event
     stream and needs the static iteration caps."""
-
-    def build():
-        cluster = (cluster_factory() if cluster_factory is not None
-                   else make_testbed_cluster())
-        jobs = trace_to_jobs(trace, MODEL_FLEET, time_scale=time_scale,
-                             open_ended=open_ended)
-        wls = []
-        for j in jobs:
-            wl = Workload(name=j.name, jobs=[j])
-            j.workload = wl.name
-            for t in j.tasks:
-                t.workload = wl.name
-            wls.append(wl)
-        events = (trace_departure_events(trace, time_scale=time_scale)
-                  if open_ended else ())
-        return cluster, wls, (), events
-    return Scenario.trace(name=name, build=build, sim_config=sim_config)
+    return Scenario.trace(
+        name=name,
+        build=TraceBuild(tuple(trace), time_scale=time_scale,
+                         open_ended=open_ended,
+                         cluster_factory=cluster_factory),
+        sim_config=sim_config)
 
 
 SNAPSHOTS = ("S1", "S2", "S3", "S4", "S5")

@@ -250,6 +250,27 @@ class LinkView:
         return [FlowSpec(n, bw, topo.flow_links(n, nodes))
                 for n, bw in agg.items()]
 
+    def fill_problem(self, jobs: Sequence[Job]):
+        """The (flows x links) fill-problem inputs of the fluid engine
+        (``core/fluid.py``) for the given jobs' placements: per-flow demands
+        and link paths from :meth:`flows_for`, plus the allocatable capacity
+        of every link any path crosses.  Returns ``(demands, paths, caps)``
+        ready for ``fluid.fill_python`` / ``fluid.problem_matrix`` — the
+        construction path of the production-trace throughput benchmark and
+        the backend-parity tests."""
+        demands: List[float] = []
+        paths: List[Tuple[str, ...]] = []
+        for job in jobs:
+            for fs in self.flows_for(job):
+                demands.append(fs.demand_gbps)
+                paths.append(fs.links)
+        caps: Dict[str, float] = {}
+        for p in paths:
+            for l in p:
+                if l not in caps:
+                    caps[l] = self.cluster.link_alloc(l)
+        return demands, paths, caps
+
     # -------------------------------------------------- controller recalc inputs
     def recalc_traffic(self, link_id: str, jobs: Sequence[str],
                        muls, base_ms: float

@@ -117,6 +117,10 @@ class Policy:
     skip_third_stage: bool = False  # True = no offline recalculation
     options: Tuple[Tuple[str, Any], ...] = ()
     label: Optional[str] = None
+    # fluid-engine rate-sharing backend for the simulation: None inherits
+    # the SimConfig default ('python', the bit-for-bit seed path);
+    # 'jnp'/'kernel' swap in the vectorized fill (core/fluid.py)
+    sim_backend: Optional[str] = None
 
     @property
     def name(self) -> str:
@@ -133,6 +137,8 @@ class Policy:
             parts.append("noreconf")
         if self.skip_third_stage:
             parts.append("wo3")
+        if self.sim_backend is not None:
+            parts.append(f"fluid={self.sim_backend}")
         parts.extend(f"{k}={v}" for k, v in self.options)
         return "-".join(parts)
 
@@ -234,6 +240,10 @@ def run(scenario: Scenario, policy: Policy,
     deliberately ignored.
     """
     config = sim_config or scenario.sim_config or SimConfig()
+    if (policy.sim_backend is not None
+            and config.fluid_backend != policy.sim_backend):
+        config = dataclasses.replace(config,
+                                     fluid_backend=policy.sim_backend)
     cluster, workloads, background, events = scenario.materialize()
     hi, lo = _priority_split(workloads)
 
@@ -338,7 +348,7 @@ def _run_cell(scenario: Scenario, policy: Policy,
 def sweep(scenarios: Sequence[Scenario], policies: Sequence[Policy],
           sim_config: Optional[SimConfig] = None,
           *, meta: Optional[Dict[str, Any]] = None,
-          workers: int = 1) -> SweepResult:
+          workers: int = 1, mode: str = "thread") -> SweepResult:
     """Run the full scenario x policy grid (row-major over scenarios).
 
     Per-cell error isolation: a cell that raises records its traceback in
@@ -346,16 +356,38 @@ def sweep(scenarios: Sequence[Scenario], policies: Sequence[Policy],
     rest of the grid still runs.  Check ``result.errors`` (or use
     ``SweepResult.get``, which re-raises) when failures must surface.
 
-    ``workers > 1`` fans the cells over a thread pool: every cell
-    materializes its OWN scenario (fresh cluster/jobs — nothing shared) and
-    runs a seeded, self-contained simulation, so cells are independent and
-    the result — including the row-major cell order and per-cell error
-    isolation — is identical to the serial run.  ``workers=1`` (the
-    default) keeps the historical strictly-serial execution path."""
+    ``workers > 1`` fans the cells over a pool: every cell materializes its
+    OWN scenario (fresh cluster/jobs — nothing shared) and runs a seeded,
+    self-contained simulation, so cells are independent and the result —
+    including the row-major cell order and per-cell error isolation — is
+    identical to the serial run.  ``workers=1`` (the default) keeps the
+    historical strictly-serial execution path.
+
+    ``mode='thread'`` (default) uses a thread pool; ``mode='process'``
+    fans cells over spawned worker processes — true parallelism for
+    CPU-bound grids (10k-job production traces).  Process mode requires
+    picklable scenarios/policies: use module-level build callables (the
+    ``configs.metronome_testbed`` builders are dataclass instances for
+    exactly this) and schedulers registered at import time of their
+    defining module."""
+    if mode not in ("thread", "process"):
+        raise ValueError(f"mode must be 'thread' or 'process', got {mode!r}")
     grid = [(scenario, policy) for scenario in scenarios
             for policy in policies]
     if workers <= 1 or len(grid) <= 1:
         cells = [_run_cell(s, p, sim_config) for s, p in grid]
+        return SweepResult(cells=cells, meta=dict(meta or {}))
+    if mode == "process":
+        import multiprocessing
+        from concurrent.futures import ProcessPoolExecutor
+        # spawn, not fork: workers re-import repro cleanly (no inherited
+        # jax/BLAS state), matching how a fresh serial run would behave
+        ctx = multiprocessing.get_context("spawn")
+        with ProcessPoolExecutor(max_workers=min(workers, len(grid)),
+                                 mp_context=ctx) as pool:
+            futures = [pool.submit(_run_cell, s, p, sim_config)
+                       for s, p in grid]
+            cells = [f.result() for f in futures]  # row-major order
         return SweepResult(cells=cells, meta=dict(meta or {}))
     from concurrent.futures import ThreadPoolExecutor
     with ThreadPoolExecutor(max_workers=min(workers, len(grid))) as pool:

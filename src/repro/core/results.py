@@ -325,6 +325,74 @@ def validate_timing_dict(doc: Mapping[str, Any]) -> List[str]:
     return problems
 
 
+def to_trace_throughput_dict(rows: Sequence[Mapping[str, Any]], *,
+                             smoke: bool = False) -> Dict[str, Any]:
+    """The ``BENCH_trace_throughput.json`` payload: one row per fluid-rate
+    backend timed over the production-trace fill-problem corpus
+    (``benchmarks/bench_trace_throughput.py``).  ``speedup_vs_python`` on
+    the vectorized rows is the acceptance metric the CI gate reads."""
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "generated_by": "benchmarks.run",
+        "kind": "trace_throughput",
+        "smoke": bool(smoke),
+        "rows": [
+            {"name": str(r["name"]),
+             "backend": str(r["backend"]),
+             "n_jobs": int(r["n_jobs"]),
+             "n_problems": int(r["n_problems"]),
+             "n_flows": int(r["n_flows"]),
+             "seconds": _f(float(r["seconds"])),
+             "problems_per_s": _f(float(r["problems_per_s"])),
+             "flows_per_s": _f(float(r["flows_per_s"])),
+             "speedup_vs_python": _f(float(r["speedup_vs_python"])),
+             "max_abs_err_vs_python": _f(float(r["max_abs_err_vs_python"])),
+             "origin": str(r.get("origin", ""))}
+            for r in rows
+        ],
+    }
+
+
+def validate_trace_throughput_dict(doc: Mapping[str, Any]) -> List[str]:
+    """Schema check of a trace-throughput payload; empty list == valid."""
+    problems: List[str] = []
+    if not isinstance(doc, Mapping):
+        return ["top level is not an object"]
+    if doc.get("schema_version") != SCHEMA_VERSION:
+        problems.append(f"schema_version {doc.get('schema_version')!r} != "
+                        f"{SCHEMA_VERSION}")
+    if doc.get("kind") != "trace_throughput":
+        problems.append(f"kind {doc.get('kind')!r} != 'trace_throughput'")
+    rows = doc.get("rows")
+    if not isinstance(rows, list):
+        problems.append("'rows' missing or not a list")
+        return problems
+    if not rows:
+        problems.append("'rows' is empty — no backend was benchmarked")
+    backends = set()
+    for ri, row in enumerate(rows):
+        where = f"rows[{ri}]"
+        if not isinstance(row, Mapping):
+            problems.append(f"{where} is not an object")
+            continue
+        for key in ("name", "backend", "origin"):
+            if not isinstance(row.get(key), str) or row.get(key) is None:
+                problems.append(f"{where}.{key} missing or not a string")
+        for key in ("n_jobs", "n_problems", "n_flows"):
+            v = row.get(key)
+            if not isinstance(v, int) or isinstance(v, bool):
+                problems.append(f"{where}.{key} missing or not an int")
+        for key in ("seconds", "problems_per_s", "flows_per_s",
+                    "speedup_vs_python", "max_abs_err_vs_python"):
+            v = row.get(key)
+            if not isinstance(v, (int, float)) or isinstance(v, bool):
+                problems.append(f"{where}.{key} missing or not a number")
+        backends.add(row.get("backend"))
+    if rows and "python" not in backends:
+        problems.append("no 'python' baseline row — speedups are unanchored")
+    return problems
+
+
 _CELL_RESULT_KEYS = ("scenario", "policy", "scheduler", "accepted",
                      "rejected", "placements", "high_priority",
                      "low_priority", "sim")

@@ -623,6 +623,182 @@ def solve_link(
     return float(result.score), scheme
 
 
+@dataclasses.dataclass
+class _LinkProblem:
+    """One past-the-early-returns per-link solve (solve_link's core)."""
+
+    jobs: List[str]
+    bws: np.ndarray
+    cap: float
+    unified: object  # geometry.UnifiedPeriods
+    comms: List[float]
+    patterns: np.ndarray
+    ranges: Tuple[int, ...]
+
+
+def _link_scheme_of(prob: _LinkProblem, result: RotationResult,
+                    ref_index: int = 0) -> Tuple[float, LinkScheme]:
+    """solve_link's epilogue: wrap a RotationResult as a LinkScheme."""
+    scheme = LinkScheme(
+        jobs=prob.jobs,
+        shifts_slots=result.shifts,
+        base_ms=prob.unified.base_ms,
+        muls=prob.unified.muls,
+        score=float(result.score),
+        early_return=False,
+        injected_ms={j: float(prob.unified.injected_ms[i])
+                     for i, j in enumerate(prob.jobs)},
+        ref_job=prob.jobs[ref_index],
+    )
+    return float(result.score), scheme
+
+
+def solve_link_batch(
+    specs: Sequence[Tuple[LinkView, str]],
+    registry,
+    *,
+    self_job: Optional[str] = None,
+    mode: str = "fast",
+    demand: str = "planning",
+    di_pre: int = DI_PRE,
+    g_t_ms: float = 5.0,
+    e_t_frac: float = 0.10,
+    rotation_mode: str = "intermediate",
+    max_exhaustive: int = 1 << 22,
+    chunk: int = 8192,
+    cache: Optional[PlanCache] = None,
+) -> List[Tuple[float, Optional[LinkScheme]]]:
+    """Solve MANY per-link rotation problems (one per ``(view, link_id)``
+    spec) with one shared enumeration pass per problem family.
+
+    The Score phase raises one per-link solve for every link of every
+    surviving candidate; candidates share the link's job set away from the
+    candidate delta, so most problems repeat the same ``(patterns,
+    ranges)`` and differ only in the demand row.  Mirroring
+    :func:`joint_solve_batch`: cache hits and content-key duplicates are
+    filtered first, the remainder group into families, and each family
+    scores every chunk of its combo space for all members in one stacked
+    :func:`_score_chunks` evaluation — each member's run scan consumes its
+    own row, which is bit-for-bit the result :func:`solve_link` would
+    produce for it individually.  Singleton families, ``mode='optimal'``
+    and past-``max_exhaustive`` spaces take the historical per-problem
+    path.  Results land in ``cache`` (when given), so the per-candidate
+    ``plan()`` pass that follows hits instead of re-solving."""
+    n = len(specs)
+    results: List[Optional[Tuple[float, Optional[LinkScheme]]]] = [None] * n
+    probs: List[Optional[_LinkProblem]] = [None] * n
+    keys: List[Optional[Tuple]] = [None] * n
+    epochs = [view.epoch for view, _ in specs]
+    seen_keys: Dict[Tuple, int] = {}
+    todo: Dict[Tuple, List[int]] = {}
+
+    for i, (view, link_id) in enumerate(specs):
+        groups = view.link_groups(link_id)
+        cap = view.cluster.link_alloc(link_id)
+        total_bw = sum(group_demand_gbps(ts) for ts in groups.values())
+        only_self = (self_job is not None
+                     and list(groups.keys()) == [self_job])
+        if not groups or only_self or total_bw <= cap:
+            results[i] = (PERFECT, None)
+            continue
+        jobs = priority_order(registry, groups.keys())
+        periods, comms, prios = [], [], []
+        for j in jobs:
+            spec = groups[j][0].traffic
+            periods.append(spec.period_ms)
+            comms.append(spec.comm_ms)
+            job = registry.jobs.get(j)
+            prios.append(job.priority if job else 0)
+        bws = _link_demands(view, link_id, jobs, demand)
+        key = ("link", tuple(jobs), tuple(periods), tuple(comms),
+               tuple(prios), tuple(bws), cap, mode, demand, rotation_mode,
+               di_pre, g_t_ms, e_t_frac)
+        keys[i] = key
+        if cache is not None:
+            hit = cache.get(epochs[i], key)
+            if hit is not None:
+                score, scheme = hit
+                results[i] = (score, _copy_scheme(scheme))
+                continue
+        if key in seen_keys:
+            continue  # duplicate: filled from the first solve below
+        seen_keys[key] = i
+        unified = geometry.unify_periods(periods, prios, g_t_ms=g_t_ms,
+                                         e_t_frac=e_t_frac)
+        duties = [min(1.0, comms[idx] / unified.periods_ms[idx])
+                  for idx in range(len(jobs))]
+        patterns = geometry.pattern_matrix(unified.muls, duties, di_pre)
+        ranges = tuple(scoring.shift_ranges(unified.muls, 0, di_pre))
+        probs[i] = _LinkProblem(jobs=jobs, bws=np.asarray(bws, np.float64),
+                                cap=float(cap), unified=unified, comms=comms,
+                                patterns=patterns, ranges=ranges)
+        n_total = scoring.total_combos(ranges)
+        fam = (patterns.tobytes(), ranges, n_total)
+        todo.setdefault(fam, []).append(i)
+
+    for fam, members in todo.items():
+        group = [probs[i] for i in members]
+        n_total = fam[2]
+        if (len(group) == 1 or mode == "optimal"
+                or n_total > max_exhaustive):
+            for i in members:
+                p = probs[i]
+                if mode == "optimal":
+                    result = find_optimal_rotation(
+                        p.patterns, p.bws, p.cap, p.unified.muls, 0, di_pre)
+                else:
+                    result = find_feasible_rotation(
+                        p.patterns, p.bws, p.cap, p.unified.muls, 0, di_pre,
+                        chunk=chunk, max_exhaustive=max_exhaustive,
+                        mode=rotation_mode)
+                results[i] = _link_scheme_of(p, result)
+            continue
+        base = group[0]
+        bank = scoring.rolled_bank(base.patterns, base.ranges)
+        scans = []
+        for p in group:
+            def psi_of(shifts, _p=p):
+                return scoring.scheme_psi(_p.patterns, _p.bws, _p.cap,
+                                          _p.unified.muls, shifts, di_pre)
+            scans.append(_RunScan(base.ranges, n_total, mode="fast",
+                                  rotation_mode=rotation_mode,
+                                  psi_of=psi_of))
+        bw_rows = np.stack([p.bws for p in group])
+        caps = np.asarray([p.cap for p in group], dtype=np.float64)
+        # per-chunk combo budget shrinks with the stacked row count (the
+        # scan is chunk-invariant); the minor-product floor keeps the
+        # gather-free block path usable
+        fam_chunk = max(scoring.minor_product(base.ranges),
+                        int(chunk) // len(group))
+        pending = set(range(len(group)))
+        for pos, block in _score_chunks(base.patterns, bw_rows, caps,
+                                        base.ranges, bank, fam_chunk):
+            for pi in list(pending):
+                if scans[pi].feed(pos, block[pi]):
+                    pending.discard(pi)
+            if not pending:
+                break
+        for i, p, scan in zip(members, group, scans):
+            results[i] = _link_scheme_of(p, scan.finish())
+
+    # propagate duplicates and fill the cache
+    for i in range(n):
+        if results[i] is not None or keys[i] is None:
+            continue
+        src = seen_keys.get(keys[i])
+        if src is not None and results[src] is not None:
+            score, scheme = results[src]
+            results[i] = (score, _copy_scheme(scheme))
+    if cache is not None:
+        for i in range(n):
+            if keys[i] is not None and results[i] is not None:
+                score, scheme = results[i]
+                if scheme is not None:
+                    cache.put(epochs[i], keys[i],
+                              (score, _copy_scheme(scheme)))
+    return [r if r is not None else (PERFECT, None) for r in results]
+
+
 def replan_link(view: LinkView, link_id: str, scheme: LinkScheme,
                 capacity: float, di_pre: int = DI_PRE) -> RotationResult:
     """Offline 3rd-stage re-solve of one EXISTING scheme (the controller's

@@ -315,9 +315,17 @@ class MetronomePlugin(SchedulerPlugin):
     def _warm_candidates(self, ctx: ScheduleContext, cluster: Cluster,
                          pod: Task, nodes: List[str],
                          registry: TaskRegistry) -> None:
-        """Collect every joint problem the per-candidate Score pass will
-        solve and batch-solve them into the plan cache."""
-        specs = []
+        """Collect every per-link AND joint problem the per-candidate Score
+        pass will solve and batch-solve them into the plan cache.
+
+        Stage 1 gathers the per-link solves of every loop candidate and
+        hands them to :func:`rotation.solve_link_batch` — one shared
+        enumeration pass per problem family (candidates repeat the same
+        link problems away from their delta, so families are large).
+        Stage 2 walks the solved schemes' conflicted components into
+        :func:`rotation.joint_solve_batch` exactly as before."""
+        cand = []
+        link_specs = []
         for node_name in nodes:
             view = self._candidate_view(cluster, pod, node_name, registry)
             links = self._candidate_links(cluster, view, pod, node_name)
@@ -326,14 +334,23 @@ class MetronomePlugin(SchedulerPlugin):
                 continue
             wanted = set(closure) | set(links)
             plan_links = [l for l in view.planning_links() if l in wanted]
+            cand.append((view, plan_links))
+            link_specs.extend((view, lid) for lid in plan_links)
+        if not cand:
+            return
+        solved = rotation.solve_link_batch(
+            link_specs, registry, self_job=pod.job, mode="fast",
+            demand="planning", di_pre=self.di_pre, g_t_ms=self.g_t_ms,
+            e_t_frac=self.e_t_frac, rotation_mode=self.rotation_mode,
+            cache=self.plan_cache,
+        )
+        specs = []
+        pos = 0
+        for view, plan_links in cand:
             schemes: Dict[str, LinkScheme] = {}
             for lid in plan_links:
-                _score, scheme = rotation.solve_link(
-                    view, registry, lid, self_job=pod.job, mode="fast",
-                    demand="planning", di_pre=self.di_pre,
-                    g_t_ms=self.g_t_ms, e_t_frac=self.e_t_frac,
-                    rotation_mode=self.rotation_mode, cache=self.plan_cache,
-                )
+                _score, scheme = solved[pos]
+                pos += 1
                 if scheme is not None:
                     schemes[lid] = scheme
             if len(schemes) < 2:

@@ -35,6 +35,10 @@ from . import topology
 from .cluster import Cluster
 from .contention import LinkView
 from .controller import StopAndWaitController
+from .fluid import FluidEngine
+# rate-sharing primitives live in the backend-swappable fluid engine now;
+# re-exported here because they are part of the simulator's historical API
+from .fluid import _max_min_fair, _progressive_fill  # noqa: F401
 from .framework import SchedulingFramework
 from .workload import HIGH, Job, Task
 
@@ -69,6 +73,13 @@ class SimConfig:
     seed: int = 0
     sample_interval_ms: float = 1000.0
     monitor: bool = True  # enable the continuous monitoring mechanism
+    # rate-sharing backend of the fluid engine (core/fluid.py):
+    # 'python' (the bit-for-bit seed path), 'jnp', or 'kernel'
+    fluid_backend: str = "python"
+    # None picks the backend default (off for python, on for vectorized);
+    # True memoizes per affinity component so events re-fill only the
+    # component they touch
+    fluid_incremental: Optional[bool] = None
 
 
 @dataclasses.dataclass
@@ -170,6 +181,13 @@ class ClusterSimulator:
         # unified demand/flow view (contention layer); flows_for reads the
         # live Job objects, so one instance serves the whole run
         self._link_view = LinkView(cluster)
+        # backend-swappable rate-sharing core; the allocatable-capacity map
+        # is cached per cluster epoch (every capacity/background mutation
+        # bumps it), so steady-state iterations skip the rebuild
+        self.fluid = FluidEngine(backend=config.fluid_backend,
+                                 incremental=config.fluid_incremental)
+        self._caps_fn: Optional[Callable[[str], float]] = None
+        self._caps_epoch: int = -1
         self._events = collections.deque(
             events_mod.normalize_events(events, traffic_changes))
         self.delivered_gb: Dict[str, float] = {l: 0.0 for l in cluster.link_ids}
@@ -270,9 +288,34 @@ class ClusterSimulator:
         return self.config.latency_penalty_ms_per_tau * max(0.0, worst - 1.0)
 
     # ----------------------------------------------------------- rate sharing
+    def _allocatable(self) -> Callable[[str], float]:
+        """Per-link allocatable capacity (physical minus background),
+        rebuilt only when the cluster epoch advances — every mutation path
+        (capacity events, background ramps, allocations) bumps it."""
+        epoch = self.cluster.epoch
+        if self._caps_fn is None or self._caps_epoch != epoch:
+            bg_by_link: Dict[str, float] = {}
+            for bg in self.background:
+                bg_by_link[bg.link_id] = (bg_by_link.get(bg.link_id, 0.0)
+                                          + bg.rate_gbps)
+            cache: Dict[str, float] = {}
+
+            def cap_of(link_id: str) -> float:
+                cap = cache.get(link_id)
+                if cap is None:
+                    cap = max(0.0, self.cluster.link_capacity(link_id)
+                              - bg_by_link.get(link_id, 0.0))
+                    cache[link_id] = cap
+                return cap
+
+            self._caps_fn = cap_of
+            self._caps_epoch = epoch
+        return self._caps_fn
+
     def _assign_rates(self) -> None:
         """Max-min fair share over each flow's link path, capped at r^BW.
 
+        Delegates to the backend-swappable fluid engine (``core/fluid.py``).
         Star topology (every path a single host link): per-link water
         filling, numerically identical to the seed. Multi-link paths
         (fabric uplinks): progressive filling with per-link bottlenecks.
@@ -281,29 +324,7 @@ class ClusterSimulator:
                   if f.remaining_gb > EPS]
         if not active:
             return
-        bg_by_link: Dict[str, float] = {}
-        for bg in self.background:
-            bg_by_link[bg.link_id] = bg_by_link.get(bg.link_id, 0.0) + bg.rate_gbps
-
-        def cap_of(link_id: str) -> float:
-            return max(0.0, self.cluster.link_capacity(link_id)
-                       - bg_by_link.get(link_id, 0.0))
-
-        if all(len(f.links) == 1 for f in active):
-            by_link: Dict[str, List[FlowState]] = {}
-            for f in active:
-                by_link.setdefault(f.node, []).append(f)
-            for node_name, flows in by_link.items():
-                demands = np.array([f.demand_gbps for f in flows])
-                rates = _max_min_fair(demands, cap_of(node_name))
-                for f, r in zip(flows, rates):
-                    f.rate_gbps = float(r)
-            return
-        caps = {l: cap_of(l) for f in active for l in f.links}
-        demands = np.array([f.demand_gbps for f in active])
-        rates = _progressive_fill(demands, [f.links for f in active], caps)
-        for f, r in zip(active, rates):
-            f.rate_gbps = float(r)
+        self.fluid.assign(active, self._allocatable())
 
     # ------------------------------------------------------------- main loop
     def run(self) -> SimResult:
@@ -654,66 +675,3 @@ class ClusterSimulator:
         )
 
 
-def _progressive_fill(
-    demands: np.ndarray,
-    paths: Sequence[Sequence[str]],
-    caps: Dict[str, float],
-) -> np.ndarray:
-    """Progressive-filling max-min fairness over multi-link flow paths.
-
-    All unfrozen flows grow at the same rate; a flow freezes when it reaches
-    its demand or when any link on its path saturates (that link becomes its
-    bottleneck). Reduces to per-link water filling when every path is a
-    single link. Runs in O((flows + links) * flows).
-    """
-    n = len(demands)
-    rates = np.zeros(n)
-    if n == 0:
-        return rates
-    remaining = dict(caps)
-    active = [i for i in range(n) if demands[i] > EPS]
-    # flows on a zero-capacity link can never send
-    while active:
-        counts: Dict[str, int] = {}
-        for i in active:
-            for l in paths[i]:
-                counts[l] = counts.get(l, 0) + 1
-        inc = min(demands[i] - rates[i] for i in active)
-        for l, c in counts.items():
-            inc = min(inc, remaining[l] / c)
-        inc = max(0.0, inc)
-        for i in active:
-            rates[i] += inc
-        for l, c in counts.items():
-            remaining[l] -= inc * c
-        nxt = []
-        for i in active:
-            if rates[i] >= demands[i] - EPS:
-                continue  # demand met
-            if any(remaining[l] <= EPS for l in paths[i]):
-                continue  # bottleneck link saturated
-            nxt.append(i)
-        if len(nxt) == len(active):  # pragma: no cover — defensive
-            break
-        active = nxt
-    return rates
-
-
-def _max_min_fair(demands: np.ndarray, capacity: float) -> np.ndarray:
-    """Water-filling max-min fair allocation, each flow capped at its demand."""
-    n = len(demands)
-    if n == 0:
-        return demands
-    if demands.sum() <= capacity:
-        return demands.copy()
-    rates = np.zeros(n)
-    remaining = capacity
-    order = np.argsort(demands)
-    left = n
-    for idx in order:
-        fair = remaining / left
-        give = min(demands[idx], fair)
-        rates[idx] = give
-        remaining -= give
-        left -= 1
-    return rates

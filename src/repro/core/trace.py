@@ -86,6 +86,83 @@ def generate_trace(
     return jobs
 
 
+def generate_production_trace(
+    model_fleet: Dict[str, dict],
+    *,
+    n_jobs: int = 10_000,
+    duration_s: float = 24 * 3600.0,
+    seed: int = 0,
+    diurnal_amplitude: float = 0.6,
+    peak_hour: float = 14.0,
+    day_s: float = 24 * 3600.0,
+    median_duration_s: float = 1200.0,
+    duration_sigma: float = 1.2,
+    duration_clip_s: Sequence[float] = (60.0, 6 * 3600.0),
+    high_priority_frac: float = 0.3,
+    task_multipliers: Sequence[int] = (1, 2, 4),
+    task_weights: Sequence[float] = (0.7, 0.2, 0.1),
+) -> List[TraceJobSpec]:
+    """Synthetic production trace: diurnal arrivals, heavy-tailed sizes,
+    mixed priorities — the 10k-job scale the fluid-engine benchmark and the
+    roadmap's learning-to-schedule corpus need (production cluster traces
+    look like this; Gavel's constant-rate Poisson does not).
+
+      * Arrivals: a nonhomogeneous Poisson process via thinning with rate
+        ``lam(t) = base * (1 + A * cos(2*pi*(t - peak)/day))`` — a diurnal
+        sinusoid peaking at ``peak_hour``; ``base`` is sized so the window
+        yields ~``n_jobs`` arrivals, then the sequence is clipped/extended
+        to exactly ``n_jobs``.
+      * Durations: lognormal around ``median_duration_s`` with shape
+        ``duration_sigma`` (heavy right tail — most jobs are minutes, a few
+        run hours), clipped to ``duration_clip_s``.
+      * Sizes: the fleet model's ``n_tasks`` times a multiplier drawn from
+        ``task_multipliers``/``task_weights`` (mostly small, few big).
+      * Priorities: Bernoulli(``high_priority_frac``).
+
+    Deterministic per seed; entries are sorted by submit time."""
+    rng = np.random.default_rng(seed)
+    names = sorted(model_fleet.keys())
+    amp = min(max(float(diurnal_amplitude), 0.0), 1.0)
+    base_rate = n_jobs / duration_s
+    lam_max = base_rate * (1.0 + amp)
+    peak_s = peak_hour * 3600.0
+    lo, hi = duration_clip_s
+    weights = np.asarray(task_weights, dtype=float)
+    weights = weights / weights.sum()
+
+    jobs: List[TraceJobSpec] = []
+    t = 0.0
+    while len(jobs) < n_jobs:
+        t += float(rng.exponential(1.0 / lam_max))
+        if t >= duration_s:
+            # sparse tail (rounding of the thinning acceptance): wrap into
+            # the next day so the trace always reaches n_jobs entries
+            duration_s += day_s
+        lam_t = base_rate * (
+            1.0 + amp * np.cos(2.0 * np.pi * (t - peak_s) / day_s))
+        if rng.random() * lam_max > lam_t:
+            continue  # thinned: off-peak candidate rejected
+        model = names[int(rng.integers(len(names)))]
+        dur = float(np.clip(
+            median_duration_s * np.exp(duration_sigma * rng.standard_normal()),
+            lo, hi))
+        mult = int(rng.choice(np.asarray(task_multipliers), p=weights))
+        jobs.append(TraceJobSpec(
+            model=model,
+            submit_time_s=t,
+            duration_s=dur,
+            priority=HIGH if rng.random() < high_priority_frac else LOW,
+            n_tasks=int(model_fleet[model].get("n_tasks", 2)) * mult,
+        ))
+    return jobs
+
+
+def active_jobs_at(trace: Sequence[TraceJobSpec], t_s: float) -> List[int]:
+    """Indices of trace entries live at ``t_s`` (submitted, not departed)."""
+    return [i for i, spec in enumerate(trace)
+            if spec.submit_time_s <= t_s < spec.submit_time_s + spec.duration_s]
+
+
 def trace_to_jobs(trace: List[TraceJobSpec], model_fleet: Dict[str, dict],
                   time_scale: float = 1.0, *,
                   open_ended: bool = False) -> List[Job]:

@@ -16,6 +16,7 @@ import numpy as np
 
 from . import ref
 from .flash_attention import flash_attention_fwd
+from .metronome_fill import metronome_fill
 from .metronome_score import (metronome_score_multilink,
                               metronome_score_multilink_batch,
                               metronome_score_pairwise)
@@ -124,6 +125,42 @@ def score_multilink_batch(base_demand, bank_a, bank_b, capacities,
         out = _score_multilink_batch_jit(
             jnp.asarray(base_demand), jnp.asarray(bank_a),
             jnp.asarray(bank_b), jnp.asarray(capacities))
+    return np.asarray(out)
+
+
+# ---------------------------------------------------------------------------
+# progressive-filling fluid solve
+# ---------------------------------------------------------------------------
+
+_progressive_fill_jit = jax.jit(ref.progressive_fill_ref)
+
+
+def progressive_fill_ref(demands, routes, caps) -> np.ndarray:
+    """The jit'd jnp fixed-point fill — the fluid engine's ``backend='jnp'``
+    path, always the vectorized reference regardless of platform."""
+    return np.asarray(_progressive_fill_jit(
+        jnp.asarray(demands), jnp.asarray(routes), jnp.asarray(caps)))
+
+
+def progressive_fill(demands, routes, caps,
+                     interpret: Optional[bool] = None) -> np.ndarray:
+    """Batched progressive-fill rates (B, F) over (B, F, L) route matrices.
+
+    Dispatch mirrors :func:`score_multilink`: real TPU -> compiled Pallas
+    fill kernel; anything else -> the jit'd jnp reference;
+    ``interpret=True`` forces the Pallas kernel in interpret mode (parity
+    tests only — far slower than the jnp path)."""
+    if interpret:
+        out = metronome_fill(
+            jnp.asarray(demands), jnp.asarray(routes), jnp.asarray(caps),
+            interpret=True)
+    elif _on_tpu():
+        out = metronome_fill(
+            jnp.asarray(demands), jnp.asarray(routes), jnp.asarray(caps),
+            interpret=False)
+    else:
+        out = _progressive_fill_jit(
+            jnp.asarray(demands), jnp.asarray(routes), jnp.asarray(caps))
     return np.asarray(out)
 
 

@@ -98,6 +98,63 @@ def metronome_score_multilink_batch_ref(base_demand, bank_a, bank_b,
     return jnp.maximum(0.0, 100.0 * (1.0 - jnp.max(frac, axis=1)))
 
 
+# float32 analogue of the fluid engine's 1e-9 freeze threshold: link
+# capacities are O(25-200) Gbps where the f32 ulp is ~1.5e-5, so a 1e-4
+# saturation band keeps every "link just drained" round from ping-ponging
+# on rounding residue (core/fluid.py keeps 1e-9 under float64)
+FILL_EPS = 1e-4
+_FILL_INF = 1e30
+
+
+def progressive_fill_ref(demands, routes, caps) -> jnp.ndarray:
+    """Batched progressive-filling max-min fairness oracle (jnp; jit-able).
+
+    demands: (B, F) per-flow demand caps.
+    routes:  (B, F, L) 0/1 route matrix — flow f crosses link l.
+    caps:    (B, L) per-link capacity.
+    Returns rates (B, F).
+
+    Mirrors the per-flow loop of ``core/fluid.py`` round for round: every
+    unfrozen flow grows by the common increment (the min over per-flow
+    headroom and per-link remaining/active-count), then flows freeze on
+    demand met or a saturated path link.  Each round freezes at least one
+    flow per unfinished problem, so F rounds always suffice; the while_loop
+    exits as soon as every problem in the batch has drained.  Padding
+    discipline: zero-demand flows never activate, zero-route unit-capacity
+    links never saturate — both are excess-neutral (see the fill kernel).
+    """
+    d = jnp.asarray(demands, jnp.float32)
+    r = jnp.asarray(routes, jnp.float32)
+    c = jnp.asarray(caps, jnp.float32)
+    b, f = d.shape
+    act0 = (d > FILL_EPS).astype(jnp.float32)
+    state0 = (jnp.zeros_like(d), c, act0, jnp.int32(0))
+
+    def cond(state):
+        _, _, act, i = state
+        return jnp.logical_and(jnp.any(act > 0.5), i < f + 1)
+
+    def body(state):
+        rates, rem, act, i = state
+        counts = jnp.einsum("bfl,bf->bl", r, act)  # (B, L)
+        ratio = jnp.where(counts > 0.5,
+                          rem / jnp.maximum(counts, 1.0), _FILL_INF)
+        inc_link = jnp.min(ratio, axis=1)  # (B,)
+        head = jnp.where(act > 0.5, d - rates, _FILL_INF)
+        inc = jnp.maximum(jnp.minimum(inc_link, jnp.min(head, axis=1)), 0.0)
+        inc = jnp.where(jnp.any(act > 0.5, axis=1), inc, 0.0)  # drained rows
+        rates = rates + inc[:, None] * act
+        rem = rem - inc[:, None] * counts
+        sat = (rem <= FILL_EPS).astype(jnp.float32)  # (B, L)
+        blocked = jnp.einsum("bfl,bl->bf", r, sat) > 0.5
+        met = rates >= d - FILL_EPS
+        act = jnp.where(jnp.logical_or(met, blocked), 0.0, act)
+        return rates, rem, act, i + 1
+
+    rates, _, _, _ = jax.lax.while_loop(cond, body, state0)
+    return rates
+
+
 def rg_lru_ref(a: jax.Array, x: jax.Array, h0: Optional[jax.Array] = None
                ) -> jax.Array:
     """Linear recurrence oracle: y_t = a_t * y_{t-1} + x_t. (B, S, W)."""
