@@ -15,7 +15,8 @@ from typing import Dict, List, Optional, Sequence
 
 from repro.configs.metronome_testbed import snapshot_scenario
 from repro.core.experiment import Policy, Scenario, sweep
-from repro.core.results import (SweepResult, to_bench_dict, to_timing_dict,
+from repro.core.results import (SweepResult, to_bench_dict,
+                                to_dynamic_throughput_dict, to_timing_dict,
                                 to_trace_throughput_dict)
 from repro.core.simulator import SimConfig
 
@@ -43,6 +44,11 @@ CURRENT_ORIGIN = ""
 # (run.py --trace-out persists the merged record as schema-versioned
 # BENCH_trace_throughput.json)
 RECORDED_TRACE_ROWS: List[Dict[str, object]] = []
+
+# every dynamic-throughput row bench_dynamic_throughput recorded this
+# process (run.py --dynamic-out persists the merged record as
+# schema-versioned BENCH_dynamic_throughput.json)
+RECORDED_DYNAMIC_ROWS: List[Dict[str, object]] = []
 
 # parallel sweep execution (run.py --workers / --worker-mode): run_sweep
 # fans independent grid cells over a thread or process pool; 1/thread =
@@ -172,6 +178,25 @@ def write_trace_throughput(path: str) -> None:
     with open(path, "w") as f:
         json.dump(to_trace_throughput_dict(RECORDED_TRACE_ROWS, smoke=SMOKE),
                   f, indent=1, allow_nan=False)
+
+
+def record_dynamic_row(**row: object) -> None:
+    """Record one dynamic-throughput row (see
+    ``results.to_dynamic_throughput_dict`` for the field contract); run.py
+    ``--dynamic-out`` persists the merged record."""
+    row.setdefault("origin", CURRENT_ORIGIN)
+    RECORDED_DYNAMIC_ROWS.append(row)
+
+
+def write_dynamic_throughput(path: str) -> None:
+    """Persist every recorded dynamic-throughput row as schema-versioned
+    JSON (the BENCH_dynamic_throughput.json artifact)."""
+    import json
+
+    with open(path, "w") as f:
+        json.dump(
+            to_dynamic_throughput_dict(RECORDED_DYNAMIC_ROWS, smoke=SMOKE),
+            f, indent=1, allow_nan=False)
 
 
 class Timer:

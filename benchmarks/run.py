@@ -9,9 +9,10 @@ import argparse
 import sys
 import traceback
 
-from . import (bench_ablation, bench_dynamic, bench_fabric, bench_kernels,
-               bench_param_variation, bench_persistence, bench_roofline,
-               bench_rotation, bench_sched_time, bench_snapshots, bench_tct,
+from . import (bench_ablation, bench_dynamic, bench_dynamic_throughput,
+               bench_fabric, bench_kernels, bench_param_variation,
+               bench_persistence, bench_roofline, bench_rotation,
+               bench_sched_time, bench_snapshots, bench_tct,
                bench_thresholds, bench_trace_throughput, common)
 
 ALL = {
@@ -28,6 +29,7 @@ ALL = {
     "kernels": bench_kernels,         # kernel micro-benches
     "roofline": bench_roofline,       # dry-run roofline summary
     "trace_throughput": bench_trace_throughput,  # fluid-engine backends @ 10k jobs
+    "dynamic_throughput": bench_dynamic_throughput,  # event loops @ 10k-job trace
 }
 
 
@@ -50,6 +52,10 @@ def main() -> None:
                     help="write the fluid-engine trace-throughput rows as "
                          "schema-versioned JSON (CI nightly: "
                          "BENCH_trace_throughput.json)")
+    ap.add_argument("--dynamic-out", default=None, metavar="PATH",
+                    help="write the event-loop dynamic-throughput rows as "
+                         "schema-versioned JSON (CI nightly: "
+                         "BENCH_dynamic_throughput.json)")
     ap.add_argument("--workers", type=int, default=1, metavar="N",
                     help="fan independent sweep cells over N workers "
                          "(results identical to serial; default 1)")
@@ -93,6 +99,11 @@ def main() -> None:
         common.write_trace_throughput(args.trace_out)
         print(f"# wrote {len(common.RECORDED_TRACE_ROWS)} trace-throughput "
               f"rows to {args.trace_out}", file=sys.stderr)
+    if args.dynamic_out:
+        common.write_dynamic_throughput(args.dynamic_out)
+        print(f"# wrote {len(common.RECORDED_DYNAMIC_ROWS)} "
+              f"dynamic-throughput rows to {args.dynamic_out}",
+              file=sys.stderr)
     if failed:
         print(f"# FAILED benches: {failed}", file=sys.stderr)
         sys.exit(1)

@@ -25,6 +25,12 @@ Gates per payload kind (sniffed from the files, which must match):
     backends must keep ``speedup_vs_python >= --min-speedup`` (default 10
     — the committed artifact records ~70x, the acceptance floor is 50x on
     dedicated hardware; CI runners are slower and noisier).
+  * dynamic throughput (``BENCH_dynamic_throughput.json``): the
+    ``array``/``python`` event-loop row must keep ``speedup_vs_legacy >=
+    --min-dyn-speedup`` (default 0.5: the smoke trace is too small for the
+    quadratic legacy cost to show; the nightly full-trace job raises it),
+    and every row's ``max_abs_err_vs_oracle`` must stay within
+    ``--max-abs-err`` (default 1e-6).
 
 Exit 0 = no regression, 1 = regression(s) listed on stderr, 2 = usage.
 """
@@ -38,7 +44,8 @@ from typing import Any, Dict, Iterator, List, Tuple
 
 def _kind(doc: Any) -> str:
     if isinstance(doc, dict):
-        if doc.get("kind") in ("timing", "trace_throughput"):
+        if doc.get("kind") in ("timing", "trace_throughput",
+                               "dynamic_throughput"):
             return doc["kind"]
         if "sweeps" in doc:
             return "sweeps"
@@ -136,6 +143,25 @@ def diff_trace(base: Dict, cur: Dict, min_speedup: float) -> List[str]:
     return problems
 
 
+def diff_dynamic(base: Dict, cur: Dict, min_speedup: float,
+                 max_err: float) -> List[str]:
+    problems = []
+    names_cur = {r["name"] for r in cur.get("rows", [])}
+    for r in base.get("rows", []):
+        if r["name"] not in names_cur:
+            problems.append(f"dynamic row {r['name']!r} present in "
+                            f"baseline, missing now")
+    for r in cur.get("rows", []):
+        if r.get("loop") == "array" and r.get("backend") == "python" and \
+                (r.get("speedup_vs_legacy") or 0.0) < min_speedup:
+            problems.append(f"dynamic row {r['name']!r}: speedup "
+                            f"{r.get('speedup_vs_legacy')} < {min_speedup}x")
+        if (r.get("max_abs_err_vs_oracle") or 0.0) > max_err:
+            problems.append(f"dynamic row {r['name']!r}: max_abs_err "
+                            f"{r.get('max_abs_err_vs_oracle')} > {max_err}")
+    return problems
+
+
 def main(argv: List[str]) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("baseline")
@@ -148,6 +174,13 @@ def main(argv: List[str]) -> int:
     ap.add_argument("--min-speedup", type=float, default=10.0,
                     help="minimum speedup_vs_python for vectorized "
                          "trace-throughput rows")
+    ap.add_argument("--min-dyn-speedup", type=float, default=0.5,
+                    help="minimum speedup_vs_legacy for the array/python "
+                         "dynamic-throughput row (nightly full-trace CI "
+                         "raises this to the 10x acceptance floor)")
+    ap.add_argument("--max-abs-err", type=float, default=1e-6,
+                    help="maximum max_abs_err_vs_oracle for "
+                         "dynamic-throughput rows")
     args = ap.parse_args(argv[1:])
 
     with open(args.baseline) as f:
@@ -167,6 +200,9 @@ def main(argv: List[str]) -> int:
         problems = diff_sweeps(base, cur, args.rel_tol)
     elif kb == "timing":
         problems = diff_timings(base, cur, args.timing_ratio)
+    elif kb == "dynamic_throughput":
+        problems = diff_dynamic(base, cur, args.min_dyn_speedup,
+                                args.max_abs_err)
     else:
         problems = diff_trace(base, cur, args.min_speedup)
     if problems:

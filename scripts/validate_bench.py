@@ -4,11 +4,12 @@
 Usage:  PYTHONPATH=src python scripts/validate_bench.py BENCH_sweep.json
         PYTHONPATH=src python scripts/validate_bench.py BENCH_sched_time.json
 
-Three payload kinds are recognized: experiment sweeps (``sweeps`` key,
+Four payload kinds are recognized: experiment sweeps (``sweeps`` key,
 the ``--sweep-out`` artifact), benchmark timing rows (``kind == "timing"``,
-the ``--bench-out`` artifact), and fluid-engine trace-throughput rows
-(``kind == "trace_throughput"``, the ``--trace-out`` artifact).  Exit 0
-when the file matches
+the ``--bench-out`` artifact), fluid-engine trace-throughput rows
+(``kind == "trace_throughput"``, the ``--trace-out`` artifact), and
+event-loop dynamic-throughput rows (``kind == "dynamic_throughput"``,
+the ``--dynamic-out`` artifact).  Exit 0 when the file matches
 ``repro.core.results.SCHEMA_VERSION``'s schema; exit 1 (listing every
 problem) on drift — CI runs this after the benchmark smoke so a
 silently-changed result format fails the build.
@@ -25,6 +26,7 @@ def main(argv) -> int:
         return 2
     path = argv[1]
     from repro.core.results import (validate_bench_dict,
+                                    validate_dynamic_throughput_dict,
                                     validate_timing_dict,
                                     validate_trace_throughput_dict)
 
@@ -35,6 +37,8 @@ def main(argv) -> int:
         problems = validate_timing_dict(doc)
     elif kind == "trace_throughput":
         problems = validate_trace_throughput_dict(doc)
+    elif kind == "dynamic_throughput":
+        problems = validate_dynamic_throughput_dict(doc)
     else:
         problems = validate_bench_dict(doc)
     if problems:
@@ -54,6 +58,14 @@ def main(argv) -> int:
                    default=0.0)
         print(f"{path}: OK — schema v{doc['schema_version']}, "
               f"trace_throughput, {len(rows)} rows, best speedup "
+              f"{best:.1f}x")
+        return 0
+    if kind == "dynamic_throughput":
+        rows = doc.get("rows", [])
+        best = max((r.get("speedup_vs_legacy") or 0.0 for r in rows
+                    if r.get("loop") == "array"), default=0.0)
+        print(f"{path}: OK — schema v{doc['schema_version']}, "
+              f"dynamic_throughput, {len(rows)} rows, best array speedup "
               f"{best:.1f}x")
         return 0
     n_sweeps = len(doc.get("sweeps", []))

@@ -95,6 +95,8 @@ class LinkView:
         self.extra_node = extra_node
         self.epoch = epoch
         self._job_nodes_cache: Optional[Dict[str, Set[str]]] = None
+        # flows_for(cache_epoch=...) memo: job name -> (epoch, specs)
+        self._flows_cache: Dict[str, Tuple[int, List["FlowSpec"]]] = {}
 
     # ------------------------------------------------------------ constructors
     @classmethod
@@ -233,11 +235,30 @@ class LinkView:
                       & set(topo.uplinks.keys()))
 
     # ---------------------------------------------------------------- flow view
-    def flows_for(self, job: Job) -> List[FlowSpec]:
+    def flows_for(self, job: Job, *,
+                  cache_epoch: Optional[int] = None) -> List[FlowSpec]:
         """The fluid simulator's flow construction: one flow per used host
         link (aggregate of the job's pods there); the path extends over the
         source leaf's uplink when the job spans leaves.  Single-node jobs
-        synchronize over localhost and place no link traffic."""
+        synchronize over localhost and place no link traffic.
+
+        ``cache_epoch`` (the simulator's event loop passes ``cluster.epoch``)
+        memoizes the specs per job until the epoch advances: a job's flow
+        set depends only on its own placements and per-task bandwidths, and
+        every mutation of either — reserve/release, departures — bumps the
+        cluster epoch, so the steady-state COMM entries of a long trace skip
+        the per-task rebuild.  Duty-cycle traffic changes alter volumes (the
+        caller's ``comm_ms``), never these demands/paths."""
+        if cache_epoch is not None:
+            hit = self._flows_cache.get(job.name)
+            if hit is not None and hit[0] == cache_epoch:
+                return hit[1]
+        specs = self._flows_for_uncached(job)
+        if cache_epoch is not None:
+            self._flows_cache[job.name] = (cache_epoch, specs)
+        return specs
+
+    def _flows_for_uncached(self, job: Job) -> List[FlowSpec]:
         nodes = job.nodes_used()
         if len(nodes) <= 1:
             return []

@@ -29,6 +29,25 @@ import dataclasses
 from typing import List, Optional, Sequence, Tuple
 
 
+class UnknownEventTargetWarning(UserWarning):
+    """An event named a link/job the simulator does not know.
+
+    The event is ignored (the seed behavior), but silently dropping a
+    mistyped link id in a long trace makes experiments quietly wrong — so
+    the simulator emits this structured warning ONCE per (kind, name)
+    offender.  ``kind`` is ``'link'`` or ``'job'``; ``name`` the unknown
+    target; ``time_ms`` the first offending event's firing time."""
+
+    def __init__(self, kind: str, name: str, time_ms: float) -> None:
+        self.kind = kind
+        self.name = name
+        self.time_ms = time_ms
+        super().__init__(
+            f"ignoring event for unknown {kind} {name!r} "
+            f"(first at t={time_ms:.3f}ms); further events for this "
+            f"{kind} are dropped silently")
+
+
 @dataclasses.dataclass(frozen=True)
 class Event:
     """Base: anything with a firing time on the simulator clock."""

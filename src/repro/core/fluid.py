@@ -171,11 +171,53 @@ def problem_matrix(
     return d, routes, cap_vec, link_ids
 
 
+@dataclasses.dataclass
+class CorpusStats:
+    """Bucket occupancy / padding waste of batched corpus fills.
+
+    Every :func:`fill_corpus` call with ``stats=`` accumulates how many
+    (flow, link) matrix slots it actually dispatched versus how many were
+    real problem content, so batching losses are visible per run instead of
+    silent (ISSUE 7 satellite): ``occupancy`` near 1.0 means the buckets are
+    tight; a low value means shape rounding / batch padding dominates."""
+
+    calls: int = 0      # fill_corpus invocations
+    problems: int = 0   # real problems solved (excl. batch-padding dummies)
+    buckets: int = 0    # batched dispatches (fill_many calls)
+    flow_used: int = 0  # real flow slots across all problems
+    flow_slots: int = 0  # dispatched flow slots (B_pad x F_pad summed)
+    link_used: int = 0
+    link_slots: int = 0
+
+    @property
+    def flow_occupancy(self) -> float:
+        return self.flow_used / self.flow_slots if self.flow_slots else 1.0
+
+    @property
+    def link_occupancy(self) -> float:
+        return self.link_used / self.link_slots if self.link_slots else 1.0
+
+    def as_dict(self) -> Dict[str, float]:
+        d = dataclasses.asdict(self)
+        d["flow_occupancy"] = self.flow_occupancy
+        d["link_occupancy"] = self.link_occupancy
+        return d
+
+
+def _round_pow2(n: int, floor: int = 4) -> int:
+    """Smallest power of two >= max(n, floor) (jit-cache shape bucketing)."""
+    p = floor
+    while p < n:
+        p <<= 1
+    return p
+
+
 def fill_many(
     problems: Sequence[Tuple[np.ndarray, np.ndarray, np.ndarray]],
     *,
     backend: str = "jnp",
     interpret: Optional[bool] = None,
+    pad_to: Optional[Tuple[int, int]] = None,
 ) -> List[np.ndarray]:
     """Solve many fill problems in ONE batched dispatch.
 
@@ -185,6 +227,10 @@ def fill_many(
     zero-route unit-capacity links never saturate, so padding is neutral —
     and solved by the vectorized backend in a single call.  Returns the
     unpadded per-problem rate vectors.
+
+    ``pad_to=(F, L)`` raises the pad shape beyond the batch maximum so
+    repeated calls with similar problems land on a fixed set of jit-compiled
+    shapes (the event-loop steady state) instead of recompiling per tick.
 
     This is the production-trace throughput path: thousands of active-set
     snapshots of a 10k-job trace fill together instead of one per-flow
@@ -196,11 +242,14 @@ def fill_many(
     from repro.kernels import ops as kops  # deferred: core stays jax-free
 
     b = len(problems)
-    f_max = max(p[0].shape[0] for p in problems)
-    l_max = max(p[2].shape[0] for p in problems)
-    d = np.zeros((b, max(f_max, 1)), dtype=np.float32)
-    routes = np.zeros((b, max(f_max, 1), max(l_max, 1)), dtype=np.float32)
-    caps = np.ones((b, max(l_max, 1)), dtype=np.float32)
+    f_max = max(max(p[0].shape[0] for p in problems), 1)
+    l_max = max(max(p[2].shape[0] for p in problems), 1)
+    if pad_to is not None:
+        f_max = max(f_max, int(pad_to[0]))
+        l_max = max(l_max, int(pad_to[1]))
+    d = np.zeros((b, f_max), dtype=np.float32)
+    routes = np.zeros((b, f_max, l_max), dtype=np.float32)
+    caps = np.ones((b, l_max), dtype=np.float32)
     for i, (di, ri, ci) in enumerate(problems):
         fi, li = ri.shape
         d[i, :fi] = di
@@ -220,6 +269,8 @@ def fill_corpus(
     backend: str = "jnp",
     interpret: Optional[bool] = None,
     chunk: int = 64,
+    bucket_shapes: bool = False,
+    stats: Optional[CorpusStats] = None,
 ) -> List[np.ndarray]:
     """Solve a large, ragged fill-problem corpus with size-bucketed batches.
 
@@ -229,15 +280,48 @@ def fill_corpus(
     dispatched in ``chunk``-sized buckets (each padded only to its own
     maximum), which keeps the padding waste near zero on diurnal traces
     where the active set swings several-fold.  Results come back in the
-    caller's order."""
+    caller's order.
+
+    ``bucket_shapes=True`` additionally rounds every bucket's (B, F, L) up
+    to fixed sizes (full ``chunk`` batches, power-of-two flow/link counts)
+    so a long-lived caller — the simulator's event loop re-solving dirty
+    components every tick — cycles through a handful of compiled shapes
+    instead of jit-recompiling whenever the active set grows by one flow.
+    Batch padding uses neutral dummy problems (one zero-demand flow).
+
+    ``stats`` (a :class:`CorpusStats`) accumulates bucket occupancy /
+    padding waste so the batching losses are observable per run."""
     if not problems:
         return []
     order = sorted(range(len(problems)), key=lambda i: problems[i][0].shape[0])
     out: List[Optional[np.ndarray]] = [None] * len(problems)
-    for s in range(0, len(order), max(1, int(chunk))):
-        idx = order[s:s + max(1, int(chunk))]
-        rates = fill_many([problems[i] for i in idx], backend=backend,
-                          interpret=interpret)
+    chunk = max(1, int(chunk))
+    if stats is not None:
+        stats.calls += 1
+        stats.problems += len(problems)
+        stats.flow_used += sum(p[0].shape[0] for p in problems)
+        stats.link_used += sum(p[2].shape[0] for p in problems)
+    dummy = (np.zeros(1, dtype=np.float32),
+             np.zeros((1, 1), dtype=np.float32),
+             np.ones(1, dtype=np.float32))
+    for s in range(0, len(order), chunk):
+        idx = order[s:s + chunk]
+        batch = [problems[i] for i in idx]
+        pad_to = None
+        if bucket_shapes:
+            pad_to = (_round_pow2(max(p[0].shape[0] for p in batch)),
+                      _round_pow2(max(p[2].shape[0] for p in batch)))
+            batch = batch + [dummy] * (chunk - len(batch))
+        rates = fill_many(batch, backend=backend, interpret=interpret,
+                          pad_to=pad_to)
+        if stats is not None:
+            stats.buckets += 1
+            f_pad = pad_to[0] if pad_to else max(
+                max(p[0].shape[0] for p in batch), 1)
+            l_pad = pad_to[1] if pad_to else max(
+                max(p[2].shape[0] for p in batch), 1)
+            stats.flow_slots += len(batch) * f_pad
+            stats.link_slots += len(batch) * l_pad
         for i, r in zip(idx, rates):
             out[i] = r
     return out  # type: ignore[return-value]
@@ -246,6 +330,19 @@ def fill_corpus(
 # ---------------------------------------------------------------------------
 # affinity components (incremental re-fill)
 # ---------------------------------------------------------------------------
+
+def _first_seen_links(paths: Sequence[Tuple[str, ...]]) -> List[str]:
+    """Link ids in first-appearance order over the flows' paths (the
+    deterministic link ordering of memo keys and problem matrices)."""
+    seen = set()
+    out: List[str] = []
+    for p in paths:
+        for l in p:
+            if l not in seen:
+                seen.add(l)
+                out.append(l)
+    return out
+
 
 def affinity_components(paths: Sequence[Tuple[str, ...]]) -> List[List[int]]:
     """Partition flows into link-connected components (union-find over the
@@ -314,6 +411,14 @@ class FluidEngine:
         self.memo_max = int(memo_max)
         self._memo: Dict[tuple, np.ndarray] = {}
         self.stats = FluidStats()
+        self.corpus_stats = CorpusStats()
+        # oracle-parity sampling (bench_dynamic_throughput): with
+        # sample_stride > 0 every stride-th solve_batch problem is kept as
+        # (demands, paths, caps, rates) for offline fill_python comparison
+        self.sample_stride = 0
+        self.sample_max = 512
+        self.samples: List[tuple] = []
+        self._sample_seen = 0
 
     # ------------------------------------------------------------- public API
     def assign(self, flows: Sequence, cap_of: Callable[[str], float]) -> None:
@@ -332,6 +437,59 @@ class FluidEngine:
             return fill_python(np.asarray(demands, dtype=float), paths, caps)
         d, routes, cap_vec, _ = problem_matrix(demands, paths, caps)
         return fill_many([(d, routes, cap_vec)], backend=self.backend)[0]
+
+    def solve_batch(self, problems: Sequence[tuple]) -> List[np.ndarray]:
+        """Solve many ``(demands, paths, caps)`` problems in ONE dispatch.
+
+        The array event loop's dirty-component path: every dirty affinity
+        component of one tick arrives here together; memoized components
+        (content key: demands, paths, link capacities) return instantly,
+        and ALL misses go through a single shape-bucketed
+        :func:`fill_corpus` batch — one jit dispatch per tick instead of
+        one per component.  Returns per-problem rate vectors in caller
+        order.  Returned arrays are shared with the memo: treat as
+        read-only."""
+        out: List[Optional[np.ndarray]] = [None] * len(problems)
+        keys: List[Optional[tuple]] = [None] * len(problems)
+        miss: List[int] = []
+        for i, (demands, paths, caps) in enumerate(problems):
+            if self.incremental:
+                key = (self.backend,
+                       tuple((float(d), tuple(p))
+                             for d, p in zip(demands, paths)),
+                       tuple(caps[l] for l in _first_seen_links(paths)))
+                keys[i] = key
+                hit = self._memo.get(key)
+                if hit is not None:
+                    self.stats.hits += 1
+                    out[i] = hit
+                    continue
+            miss.append(i)
+        if miss:
+            self.stats.misses += len(miss)
+            if self.backend == "python":
+                for i in miss:
+                    d, p, c = problems[i]
+                    out[i] = fill_python(np.asarray(d, dtype=float), p, c)
+            else:
+                mats = [problem_matrix(*problems[i])[:3] for i in miss]
+                rates = fill_corpus(mats, backend=self.backend,
+                                    bucket_shapes=True,
+                                    stats=self.corpus_stats)
+                for i, r in zip(miss, rates):
+                    out[i] = r
+            if self.incremental:
+                for i in miss:
+                    if len(self._memo) >= self.memo_max:
+                        self._memo.clear()
+                    self._memo[keys[i]] = out[i]
+        if self.sample_stride > 0:
+            for i, prob in enumerate(problems):
+                self._sample_seen += 1
+                if (self._sample_seen % self.sample_stride == 0
+                        and len(self.samples) < self.sample_max):
+                    self.samples.append((*prob, out[i]))
+        return out  # type: ignore[return-value]
 
     # --------------------------------------------------------------- internals
     def _assign_full(self, flows: Sequence,

@@ -173,9 +173,15 @@ class SchedulingFramework:
         for pod in job.tasks:
             out = self.schedule_pod(pod)
             if out.node is None:
-                # roll back the whole job (all-or-nothing)
+                # roll back the whole job (all-or-nothing), registry entry
+                # included — a failed attempt must leave no phantom job
+                # behind, or every scorer that walks registry.jobs pays for
+                # it on all later admissions (and a retried online queue
+                # leaks one phantom per failed attempt)
                 for t in placed:
                     self.evict_pod(t)
+                self.registry.jobs.pop(job.name, None)
+                self.registry.bump()
                 return False
             placed.append(pod)
         return True
@@ -188,6 +194,8 @@ class SchedulingFramework:
             if not self.schedule_job(job):
                 for j in placed_jobs:
                     self.evict_job(j)
+                self.registry.workloads.pop(wl.name, None)
+                self.registry.bump()
                 return False
             placed_jobs.append(job)
         return True

@@ -393,6 +393,93 @@ def validate_trace_throughput_dict(doc: Mapping[str, Any]) -> List[str]:
     return problems
 
 
+def to_dynamic_throughput_dict(rows: Sequence[Mapping[str, Any]], *,
+                               smoke: bool = False) -> Dict[str, Any]:
+    """The ``BENCH_dynamic_throughput.json`` payload: one row per
+    (event-loop, fluid-backend) combination driving the full dynamic event
+    loop over the 10k-job production trace
+    (``benchmarks/bench_dynamic_throughput.py``).
+
+    ``speedup_vs_legacy`` on the array rows is the acceptance metric the
+    CI gate reads (>= 10x end-to-end on the non-smoke trace);
+    ``max_abs_err_vs_oracle`` audits sampled in-loop solves of vectorized
+    backends against ``fill_python`` re-solves (0 for the python oracle,
+    which is instead bit-for-bit by construction — pinned in
+    ``tests/test_event_loop.py``).  ``profile`` carries the per-phase
+    counters/timings of ``SimConfig.profile``; ``corpus`` the
+    ``fluid.CorpusStats`` bucket occupancy, so batch-padding waste is in
+    the artifact rather than silent."""
+    out = []
+    for r in rows:
+        profile = r.get("profile")
+        corpus = r.get("corpus")
+        out.append(
+            {"name": str(r["name"]),
+             "loop": str(r["loop"]),
+             "backend": str(r["backend"]),
+             "n_jobs": int(r["n_jobs"]),
+             "n_events": int(r["n_events"]),
+             "ticks": int(r["ticks"]),
+             "seconds": _f(float(r["seconds"])),
+             "speedup_vs_legacy": _f(float(r["speedup_vs_legacy"])),
+             "max_abs_err_vs_oracle": _f(float(r["max_abs_err_vs_oracle"])),
+             "profile": dict(profile) if profile is not None else None,
+             "corpus": dict(corpus) if corpus is not None else None,
+             "origin": str(r.get("origin", ""))})
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "generated_by": "benchmarks.run",
+        "kind": "dynamic_throughput",
+        "smoke": bool(smoke),
+        "rows": out,
+    }
+
+
+def validate_dynamic_throughput_dict(doc: Mapping[str, Any]) -> List[str]:
+    """Schema check of a dynamic-throughput payload; empty list == valid."""
+    problems: List[str] = []
+    if not isinstance(doc, Mapping):
+        return ["top level is not an object"]
+    if doc.get("schema_version") != SCHEMA_VERSION:
+        problems.append(f"schema_version {doc.get('schema_version')!r} != "
+                        f"{SCHEMA_VERSION}")
+    if doc.get("kind") != "dynamic_throughput":
+        problems.append(f"kind {doc.get('kind')!r} != 'dynamic_throughput'")
+    rows = doc.get("rows")
+    if not isinstance(rows, list):
+        problems.append("'rows' missing or not a list")
+        return problems
+    if not rows:
+        problems.append("'rows' is empty — no loop/backend was benchmarked")
+    loops = set()
+    for ri, row in enumerate(rows):
+        where = f"rows[{ri}]"
+        if not isinstance(row, Mapping):
+            problems.append(f"{where} is not an object")
+            continue
+        for key in ("name", "loop", "backend", "origin"):
+            if not isinstance(row.get(key), str):
+                problems.append(f"{where}.{key} missing or not a string")
+        for key in ("n_jobs", "n_events", "ticks"):
+            v = row.get(key)
+            if not isinstance(v, int) or isinstance(v, bool):
+                problems.append(f"{where}.{key} missing or not an int")
+        for key in ("seconds", "speedup_vs_legacy", "max_abs_err_vs_oracle"):
+            v = row.get(key)
+            if not isinstance(v, (int, float)) or isinstance(v, bool):
+                problems.append(f"{where}.{key} missing or not a number")
+        for key in ("profile", "corpus"):
+            v = row.get(key)
+            if v is not None and not isinstance(v, Mapping):
+                problems.append(f"{where}.{key} neither null nor an object")
+        loops.add(row.get("loop"))
+    if rows and "legacy" not in loops:
+        problems.append("no 'legacy' baseline row — speedups are unanchored")
+    if rows and "array" not in loops:
+        problems.append("no 'array' row — the optimized loop was not timed")
+    return problems
+
+
 _CELL_RESULT_KEYS = ("scenario", "policy", "scheduler", "accepted",
                      "rejected", "placements", "high_priority",
                      "low_priority", "sim")

@@ -26,6 +26,8 @@ from __future__ import annotations
 import collections
 import dataclasses
 import math
+import time
+import warnings
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -80,6 +82,45 @@ class SimConfig:
     # True memoizes per affinity component so events re-fill only the
     # component they touch
     fluid_incremental: Optional[bool] = None
+    # event-loop implementation (DESIGN.md section 17): 'array' keeps flow
+    # state in contiguous arrays with dirty-link rate invalidation (the
+    # production hot path, bit-for-bit equal to the seed on the python
+    # backend); 'legacy' is the pre-array per-object loop, retained as the
+    # parity oracle and the benchmark's pre-optimization reference
+    event_loop: str = "array"
+    # collect per-phase counters/timings into SimResult.profile
+    profile: bool = False
+
+
+@dataclasses.dataclass
+class SimProfile:
+    """Per-phase counters/timings of one run (``SimConfig.profile``).
+
+    Wall-clock seconds per event-loop phase plus work counters; attached to
+    ``SimResult.profile`` and surfaced as rows of the dynamic-throughput
+    bench artifact.  ``solves`` counts rate re-solves actually performed,
+    ``skipped_assigns`` ticks where nothing was dirty — their ratio is the
+    dirty-tracking win."""
+
+    loop: str = ""
+    ticks: int = 0
+    assign_s: float = 0.0
+    next_event_s: float = 0.0
+    advance_s: float = 0.0
+    events_s: float = 0.0
+    step_s: float = 0.0
+    events_applied: int = 0
+    steps: int = 0
+    solves: int = 0
+    skipped_assigns: int = 0
+
+    def as_dict(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+    def phase_seconds(self) -> Dict[str, float]:
+        return {"assign": self.assign_s, "next_event": self.next_event_s,
+                "advance": self.advance_s, "events": self.events_s,
+                "step": self.step_s}
 
 
 @dataclasses.dataclass
@@ -113,6 +154,10 @@ class JobState:
     start_time: float = 0.0
     finish_time: Optional[float] = None
     comm_extra_ms: float = 0.0  # latency penalty tail of the comm phase
+    # array event loop: position in the simulator's job arrays (admission
+    # order) and the flow-table slots of the current comm phase
+    index: int = -1
+    flow_slots: Optional[np.ndarray] = None
 
     @property
     def name(self) -> str:
@@ -130,6 +175,7 @@ class SimResult:
     total_completion_ms: float
     iterations_done: Dict[str, int]
     reconfigurations: int = 0  # controller reconfiguration ops (section III-C)
+    profile: Optional[SimProfile] = None  # set when SimConfig.profile
 
     def mean_iter_ms(self, job: str) -> float:
         d = self.durations_ms.get(job, [])
@@ -140,6 +186,88 @@ class SimResult:
         """Utilization of spine uplinks only (empty on star topologies)."""
         return {k: v for k, v in self.link_utilization.items()
                 if topology.is_uplink(k)}
+
+
+_PHASE_CODE = {WAITING: 0, COMPUTE: 1, PAUSED: 2, COMM: 3, DONE: 4}
+_COMM_CODE = _PHASE_CODE[COMM]
+
+
+class _FlowTable:
+    """Array-resident flow state (struct-of-arrays with a free list).
+
+    The array event loop's single source of truth for per-flow state:
+    ``demand``/``remaining``/``rate`` are float64 (the oracle's precision),
+    ``job``/``pos`` key each slot to (job admission index, position inside
+    the job's flow list) — the seed's iteration order, which every
+    order-sensitive float reduction must replay — and the link incidence
+    lives twice: as int rows of ``links`` (``-1``-padded, for vectorized
+    delivered-GB scatters and component labeling) and as the original link
+    id tuples in ``paths`` (for solver inputs and dirty marking).  Slots
+    are recycled through a free list; capacity doubles on demand."""
+
+    def __init__(self, link_index: Dict[str, int], cap: int = 64) -> None:
+        self.link_index = link_index
+        self.cap = cap
+        self.maxp = 2
+        self.demand = np.zeros(cap)
+        self.remaining = np.zeros(cap)
+        self.rate = np.zeros(cap)
+        self.job = np.full(cap, -1, dtype=np.int64)
+        self.pos = np.zeros(cap, dtype=np.int64)
+        self.alive = np.zeros(cap, dtype=bool)
+        self.links = np.full((cap, self.maxp), -1, dtype=np.int64)
+        self.paths: List[Optional[Tuple[str, ...]]] = [None] * cap
+        self._free = list(range(cap - 1, -1, -1))
+
+    def _grow(self) -> None:
+        old, new = self.cap, self.cap * 2
+        for name in ("demand", "remaining", "rate"):
+            arr = np.zeros(new)
+            arr[:old] = getattr(self, name)
+            setattr(self, name, arr)
+        job = np.full(new, -1, dtype=np.int64)
+        job[:old] = self.job
+        self.job = job
+        pos = np.zeros(new, dtype=np.int64)
+        pos[:old] = self.pos
+        self.pos = pos
+        alive = np.zeros(new, dtype=bool)
+        alive[:old] = self.alive
+        self.alive = alive
+        links = np.full((new, self.maxp), -1, dtype=np.int64)
+        links[:old] = self.links
+        self.links = links
+        self.paths.extend([None] * old)
+        self._free.extend(range(new - 1, old - 1, -1))
+        self.cap = new
+
+    def add(self, job_idx: int, pos: int, demand: float, remaining: float,
+            path: Tuple[str, ...]) -> int:
+        if not self._free:
+            self._grow()
+        if len(path) > self.maxp:
+            wider = np.full((self.cap, len(path)), -1, dtype=np.int64)
+            wider[:, : self.maxp] = self.links
+            self.links = wider
+            self.maxp = len(path)
+        s = self._free.pop()
+        self.demand[s] = demand
+        self.remaining[s] = remaining
+        self.rate[s] = 0.0
+        self.job[s] = job_idx
+        self.pos[s] = pos
+        self.alive[s] = True
+        self.links[s, :] = -1
+        for k, l in enumerate(path):
+            self.links[s, k] = self.link_index[l]
+        self.paths[s] = path
+        return s
+
+    def free(self, s: int) -> None:
+        self.alive[s] = False
+        self.job[s] = -1
+        self.paths[s] = None
+        self._free.append(s)
 
 
 class ClusterSimulator:
@@ -193,6 +321,40 @@ class ClusterSimulator:
         self.delivered_gb: Dict[str, float] = {l: 0.0 for l in cluster.link_ids}
         self.now = 0.0
         self.rejected: List[str] = []
+        if config.event_loop not in ("array", "legacy"):
+            raise ValueError(
+                f"unknown event_loop {config.event_loop!r}; "
+                "expected 'array' or 'legacy'")
+        self._array_mode = config.event_loop == "array"
+        self.profile: Optional[SimProfile] = (
+            SimProfile(loop=config.event_loop) if config.profile else None)
+        # ---- array-resident state (DESIGN.md section 17) ----
+        # link registry: contiguous delivered-GB vector aligned with the
+        # cluster's link ids (the dict above stays the external view and is
+        # synced at _result time in array mode)
+        self._link_ids: List[str] = list(cluster.link_ids)
+        self._link_index: Dict[str, int] = {
+            l: i for i, l in enumerate(self._link_ids)}
+        self._delivered_vec = np.zeros(len(self._link_ids))
+        self._flows = _FlowTable(self._link_index)
+        # job mirrors (index = admission order == jobs-dict order; entries
+        # are never removed, matching the dict): phase code, next timed
+        # event (inf when the phase has none), comm-flow bookkeeping
+        self._jobs_list: List[JobState] = []
+        self._jp = np.zeros(64, dtype=np.int8)
+        self._jnext = np.full(64, math.inf)
+        self._jhasflows = np.zeros(64, dtype=bool)
+        self._junfin = np.zeros(64, dtype=np.int64)
+        # dirty-link rate invalidation (component-granular refills)
+        self._dirty_links: set = set()
+        self._all_dirty = True
+        self._last_fill_mode: Optional[str] = None
+        # cached (job, pos)-ordered active slots + flattened path incidence
+        self._order_stale = True
+        self._act = np.empty(0, dtype=np.int64)
+        self._flat_links = np.empty(0, dtype=np.int64)
+        self._flat_rows = np.empty(0, dtype=np.int64)
+        self._warned: set = set()
         # (arrival_ms, workload) queue for online scheduling
         self._arrivals = collections.deque(sorted(
             ((min(j.submit_time_s for j in wl.jobs) * 1e3, i, wl)
@@ -228,6 +390,7 @@ class ClusterSimulator:
         st.phase = WAITING
         st.phase_end = st.start_time
         self.jobs[job.name] = st
+        self._register_job(st)
 
     # ------------------------------------------------------- online arrivals
     def _try_schedule(self, wl) -> bool:
@@ -275,7 +438,7 @@ class ClusterSimulator:
         return [
             FlowState(job.name, fs.node, fs.demand_gbps,
                       fs.demand_gbps * spec.comm_ms / 1e3, links=fs.links)
-            for fs in self._link_view.flows_for(job)
+            for fs in self._flow_specs(job)
         ]
 
     def _latency_penalty(self, job: Job) -> float:
@@ -326,11 +489,140 @@ class ClusterSimulator:
             return
         self.fluid.assign(active, self._allocatable())
 
+    # ------------------------------------------------- array-resident state
+    def _register_job(self, st: JobState) -> None:
+        """Mirror a newly admitted job into the flat job arrays."""
+        st.index = len(self._jobs_list)
+        self._jobs_list.append(st)
+        n = self._jp.shape[0]
+        if st.index >= n:
+            self._jp = np.concatenate([self._jp, np.zeros(n, dtype=np.int8)])
+            self._jnext = np.concatenate([self._jnext, np.full(n, math.inf)])
+            self._jhasflows = np.concatenate(
+                [self._jhasflows, np.zeros(n, dtype=bool)])
+            self._junfin = np.concatenate(
+                [self._junfin, np.zeros(n, dtype=np.int64)])
+        self._sync_job(st)
+
+    def _sync_job(self, st: JobState) -> None:
+        """Re-mirror one job's phase/phase_end after any transition.
+
+        Invariant (DESIGN.md section 17): ``_jnext[i]`` is the job's next
+        timed event — ``phase_end`` for WAITING/COMPUTE/PAUSED and for a
+        flowless COMM phase (single-node sync or latency tail), ``inf``
+        otherwise — so the array loop's next-event reduction is one min."""
+        i = st.index
+        code = _PHASE_CODE[st.phase]
+        self._jp[i] = code
+        if code <= 2 or (code == _COMM_CODE and not self._jhasflows[i]):
+            self._jnext[i] = st.phase_end
+        else:
+            self._jnext[i] = math.inf
+
+    def _flow_specs(self, job: Job):
+        return self._link_view.flows_for(job, cache_epoch=self.cluster.epoch)
+
+    def _start_comm_flows(self, st: JobState, spec) -> bool:
+        """Create the job's comm-phase flows; False for single-node jobs.
+
+        Array mode registers table slots keyed (job index, spec position) —
+        the seed's flow iteration order — and marks the touched links dirty;
+        legacy mode builds the historical FlowState objects."""
+        if not self._array_mode:
+            st.flows = self._make_flows(st.job, spec)
+            return bool(st.flows)
+        specs = self._flow_specs(st.job)
+        if not specs:
+            return False
+        tbl = self._flows
+        slots = np.empty(len(specs), dtype=np.int64)
+        unfinished = 0
+        for k, fs in enumerate(specs):
+            remaining = fs.demand_gbps * spec.comm_ms / 1e3
+            slots[k] = tbl.add(st.index, k, fs.demand_gbps, remaining,
+                               fs.links)
+            if remaining > EPS:
+                unfinished += 1
+            self._dirty_links.update(fs.links)
+        st.flow_slots = slots
+        self._jhasflows[st.index] = True
+        self._junfin[st.index] = unfinished
+        self._order_stale = True
+        return True
+
+    def _clear_flows(self, st: JobState) -> None:
+        """Release the job's flows (comm end / departure); still-active
+        flows leave their links, so those links' rates are invalidated."""
+        if not self._array_mode:
+            st.flows = []
+            return
+        if st.flow_slots is not None:
+            tbl = self._flows
+            for s in st.flow_slots:
+                if tbl.remaining[s] > EPS:
+                    self._dirty_links.update(tbl.paths[s])
+                tbl.free(s)
+            self._order_stale = True
+        st.flow_slots = None
+        self._jhasflows[st.index] = False
+        self._junfin[st.index] = 0
+
+    def _job_has_flows(self, st: JobState) -> bool:
+        if self._array_mode:
+            return bool(self._jhasflows[st.index])
+        return bool(st.flows)
+
+    def _job_flows_done(self, st: JobState) -> bool:
+        if self._array_mode:
+            return self._junfin[st.index] == 0
+        return all(f.remaining_gb <= EPS for f in st.flows)
+
+    def _active_slots(self) -> np.ndarray:
+        """Alive flows with volume left, in (job index, position) order —
+        the seed's iteration order, which the order-sensitive float
+        reductions (delivered-GB accumulation, per-link grouping) replay
+        exactly.  Rebuilt only when flow membership changes; alongside it
+        the flattened (slot row, path link) incidence used by the
+        delivered-GB scatter-add."""
+        if self._order_stale:
+            tbl = self._flows
+            alive = np.nonzero(tbl.alive)[0]
+            act = alive[tbl.remaining[alive] > EPS]
+            if act.size:
+                act = act[np.lexsort((tbl.pos[act], tbl.job[act]))]
+                sub = tbl.links[act]
+                mask = sub >= 0
+                rows, _ = np.nonzero(mask)
+                self._flat_links = sub[mask]
+                self._flat_rows = rows
+            else:
+                self._flat_links = np.empty(0, dtype=np.int64)
+                self._flat_rows = np.empty(0, dtype=np.int64)
+            self._act = act
+            self._order_stale = False
+        return self._act
+
     # ------------------------------------------------------------- main loop
     def run(self) -> SimResult:
+        if self._array_mode:
+            return self._run_array()
+        return self._run_legacy()
+
+    def _run_legacy(self) -> SimResult:
+        """The pre-array per-object event loop, preserved verbatim: the
+        parity oracle of the array loop (pinned bit-for-bit by
+        ``tests/test_event_loop.py``) and the ``bench_dynamic_throughput``
+        pre-optimization reference."""
         cfg = self.config
+        prof = self.profile
+        perf = time.perf_counter
         while self.now < cfg.duration_ms:
+            t0 = perf() if prof is not None else 0.0
             self._assign_rates()
+            if prof is not None:
+                t1 = perf()
+                prof.assign_s += t1 - t0
+                prof.solves += 1
             # next event time
             nxt = cfg.duration_ms
             for st in self.jobs.values():
@@ -349,6 +641,9 @@ class ClusterSimulator:
                 nxt = min(nxt, self._arrivals[0][0])
             nxt = max(nxt, self.now)  # no time travel
             dt = nxt - self.now
+            if prof is not None:
+                t2 = perf()
+                prof.next_event_s += t2 - t1
 
             # advance flows and accounting
             if dt > 0:
@@ -362,6 +657,10 @@ class ClusterSimulator:
                 for bg in self.background:
                     self.delivered_gb[bg.link_id] += bg.rate_gbps * dt / 1e3
             self.now = nxt
+            if prof is not None:
+                t3 = perf()
+                prof.advance_s += t3 - t2
+                prof.ticks += 1
             if self.now >= cfg.duration_ms:
                 break
 
@@ -369,9 +668,14 @@ class ClusterSimulator:
             # departures), in timestamp order
             while self._events and self._events[0].time_ms <= self.now + EPS:
                 self._apply_event(self._events.popleft())
+                if prof is not None:
+                    prof.events_applied += 1
 
             # online arrivals (may add jobs)
             self._process_arrivals()
+            if prof is not None:
+                t4 = perf()
+                prof.events_s += t4 - t3
 
             # job phase transitions
             done_before = {n for n, s in self.jobs.items() if s.phase == DONE}
@@ -380,7 +684,227 @@ class ClusterSimulator:
             for name, st in list(self.jobs.items()):
                 if st.phase == DONE and name not in done_before:
                     self._on_job_done(st)
+            if prof is not None:
+                prof.step_s += perf() - t4
+                prof.steps += len(self.jobs)
         return self._result()
+
+    def _run_array(self) -> SimResult:
+        """The array event loop: identical tick structure to the legacy
+        loop, but every per-job/per-flow scan is a vectorized reduction
+        over the flat mirrors and rates re-solve only when dirty.  With
+        ``fluid_backend='python'`` the outputs are bit-for-bit equal to
+        ``_run_legacy`` (the oracle-parity contract, DESIGN.md section
+        17)."""
+        cfg = self.config
+        duration = cfg.duration_ms
+        prof = self.profile
+        perf = time.perf_counter
+        tbl = self._flows
+        dv = self._delivered_vec
+        link_index = self._link_index
+        while self.now < duration:
+            t0 = perf() if prof is not None else 0.0
+            self._assign_rates_array()
+            if prof is not None:
+                t1 = perf()
+                prof.assign_s += t1 - t0
+
+            # next event time: one min over job mirrors + one over flows
+            nxt = duration
+            n = len(self._jobs_list)
+            if n:
+                m = self._jnext[:n].min()
+                if m < nxt:
+                    nxt = float(m)
+            act = self._active_slots()
+            if act.size:
+                r = tbl.rate[act]
+                mask = r > EPS
+                if mask.any():
+                    m = (self.now + tbl.remaining[act[mask]] / r[mask] * 1e3).min()
+                    if m < nxt:
+                        nxt = float(m)
+            if self._events:
+                nxt = min(nxt, self._events[0].time_ms)
+            if self._arrivals:
+                nxt = min(nxt, self._arrivals[0][0])
+            nxt = max(nxt, self.now)  # no time travel
+            dt = nxt - self.now
+            if prof is not None:
+                t2 = perf()
+                prof.next_event_s += t2 - t1
+
+            # advance flows; delivered-GB scatter replays the seed's
+            # (job, flow, path-link) accumulation order, then background
+            if dt > 0:
+                if act.size:
+                    rem = tbl.remaining[act]
+                    moved = np.minimum(rem, tbl.rate[act] * dt / 1e3)
+                    new_rem = rem - moved
+                    tbl.remaining[act] = new_rem
+                    np.add.at(dv, self._flat_links, moved[self._flat_rows])
+                    fin = new_rem <= EPS
+                    if fin.any():
+                        done_slots = act[fin]
+                        for s in done_slots:
+                            self._dirty_links.update(tbl.paths[s])
+                        np.subtract.at(self._junfin, tbl.job[done_slots], 1)
+                        self._order_stale = True
+                for bg in self.background:
+                    dv[link_index[bg.link_id]] += bg.rate_gbps * dt / 1e3
+            self.now = nxt
+            if prof is not None:
+                t3 = perf()
+                prof.advance_s += t3 - t2
+                prof.ticks += 1
+            if self.now >= duration:
+                break
+
+            # dynamic-environment events, in timestamp order
+            while self._events and self._events[0].time_ms <= self.now + EPS:
+                self._apply_event(self._events.popleft())
+                if prof is not None:
+                    prof.events_applied += 1
+
+            # online arrivals (may add jobs)
+            self._process_arrivals()
+            if prof is not None:
+                t4 = perf()
+                prof.events_s += t4 - t3
+
+            # job phase transitions: only DUE jobs step (the seed steps
+            # every job every tick, but _step_job is a strict no-op unless
+            # due — pinned by the oracle-parity tests), in admission order
+            n = len(self._jobs_list)
+            thresh = self.now + EPS
+            due_mask = self._jnext[:n] <= thresh
+            due_mask |= ((self._jp[:n] == _COMM_CODE)
+                         & self._jhasflows[:n] & (self._junfin[:n] == 0))
+            newly_done: List[JobState] = []
+            due = np.nonzero(due_mask)[0]
+            for i in due:
+                st = self._jobs_list[i]
+                self._step_job(st)
+                if st.phase == DONE:
+                    newly_done.append(st)
+            for st in newly_done:
+                self._on_job_done(st)
+            if prof is not None:
+                prof.step_s += perf() - t4
+                prof.steps += int(due.size)
+        return self._result()
+
+    # ------------------------------------------- dirty-component rate solves
+    def _assign_rates_array(self) -> None:
+        """Re-solve rates only where invalidated (DESIGN.md section 17).
+
+        Dirty marks come from flow creation/finish/removal (their links),
+        capacity/background events (the event's link), and fill-mode
+        transitions (everything).  Clean links keep their stored rates —
+        bitwise-identical to the seed re-solving them, because the solve is
+        deterministic in inputs that have not changed.
+
+        python backend: all-single-link active sets refill per dirty link
+        with the seed's ``_max_min_fair`` (groups in (job, pos) order);
+        any multi-link path forces the seed's one global progressive fill.
+        Vectorized backends: dirty affinity components are batched through
+        one memo-aware ``fluid.solve_batch`` per tick."""
+        act = self._active_slots()
+        if act.size == 0:
+            return
+        if not self._dirty_links and not self._all_dirty:
+            if self.profile is not None:
+                self.profile.skipped_assigns += 1
+            return
+        tbl = self._flows
+        link0 = tbl.links[act, 0]
+        single = bool((tbl.links[act, 1:] < 0).all())
+        mode = "single" if single else "multi"
+        if mode != self._last_fill_mode:
+            # per-link and global fills agree mathematically but not
+            # bitwise; a mode flip invalidates every stored rate
+            self._all_dirty = True
+        self._last_fill_mode = mode
+        cap_of = self._allocatable()
+        if self.profile is not None:
+            self.profile.solves += 1
+        if self.fluid.backend == "python":
+            if single:
+                if self._all_dirty:
+                    targets = np.unique(link0)
+                else:
+                    targets = sorted(self._link_index[l]
+                                     for l in self._dirty_links)
+                for li in targets:
+                    grp = act[link0 == li]
+                    if grp.size == 0:
+                        continue
+                    demands = tbl.demand[grp]
+                    rates = _max_min_fair(demands, cap_of(self._link_ids[li]))
+                    tbl.rate[grp] = rates
+            else:
+                demands = tbl.demand[act]
+                paths = [tbl.paths[s] for s in act]
+                caps = {l: cap_of(l) for p in paths for l in p}
+                tbl.rate[act] = _progressive_fill(demands, paths, caps)
+        else:
+            self._assign_vectorized(act, cap_of)
+        self._dirty_links.clear()
+        self._all_dirty = False
+
+    def _assign_vectorized(self, act: np.ndarray,
+                           cap_of: Callable[[str], float]) -> None:
+        """Batch every dirty affinity component through ONE memo-aware
+        ``fluid.solve_batch`` call (= at most one shape-bucketed
+        ``fill_corpus`` dispatch per tick)."""
+        tbl = self._flows
+        comps = self._components(act)
+        dirty_vec = None
+        if not self._all_dirty:
+            dirty_vec = np.zeros(len(self._link_ids), dtype=bool)
+            for l in self._dirty_links:
+                dirty_vec[self._link_index[l]] = True
+        problems = []
+        targets = []
+        for comp in comps:
+            if dirty_vec is not None:
+                sub = tbl.links[comp]
+                if not dirty_vec[sub[sub >= 0]].any():
+                    continue  # untouched component: stored rates stand
+            paths = [tbl.paths[s] for s in comp]
+            caps = {l: cap_of(l) for p in paths for l in p}
+            problems.append((tbl.demand[comp], paths, caps))
+            targets.append(comp)
+        if problems:
+            for comp, rates in zip(targets, self.fluid.solve_batch(problems)):
+                tbl.rate[comp] = rates
+
+    def _components(self, act: np.ndarray) -> List[np.ndarray]:
+        """Affinity components of the active flows (flows connected when
+        their paths share a link) by vectorized label propagation over the
+        flow x link incidence — no per-flow Python union-find in the hot
+        path.  Components keep (job, pos) flow order; ordered by first
+        flow."""
+        tbl = self._flows
+        sub = tbl.links[act]
+        mask = sub >= 0
+        rows, _ = np.nonzero(mask)
+        flat = sub[mask]
+        lab = np.arange(len(self._link_ids), dtype=np.int64)
+        n = act.size
+        while True:
+            flow_lab = np.full(n, np.iinfo(np.int64).max)
+            np.minimum.at(flow_lab, rows, lab[flat])
+            new_lab = lab.copy()
+            np.minimum.at(new_lab, flat, flow_lab[rows])
+            if (new_lab == lab).all():
+                break
+            lab = new_lab
+        comps: Dict[int, List[int]] = {}
+        for i in range(n):
+            comps.setdefault(int(flow_lab[i]), []).append(int(act[i]))
+        return [np.asarray(v, dtype=np.int64) for v in comps.values()]
 
     # -------------------------------------------------------- dynamic events
     def _apply_event(self, ev: events_mod.Event) -> None:
@@ -395,10 +919,24 @@ class ClusterSimulator:
         else:  # pragma: no cover — defensive
             raise TypeError(f"unknown event {ev!r}")
 
+    def _warn_unknown(self, kind: str, name: str) -> None:
+        """Structured once-per-offender warning for events that name a
+        link/job the simulator does not know (the event itself is still
+        ignored, the seed behavior)."""
+        key = (kind, name)
+        if key in self._warned:
+            return
+        self._warned.add(key)
+        warnings.warn(
+            events_mod.UnknownEventTargetWarning(kind, name, self.now),
+            stacklevel=2)
+
     def _apply_bg_change(self, ev: events_mod.BackgroundFlowChange) -> None:
         """Unregulated traffic on one link starts / ramps / stops."""
         if ev.link not in self.delivered_gb:
+            self._warn_unknown("link", ev.link)
             return  # unknown link: ignore (mirrors unknown-job traffic change)
+        self._dirty_links.add(ev.link)  # allocatable share changes
         kept = [bg for bg in self.background if bg.link_id != ev.link]
         if ev.rate_gbps > EPS:
             node = ev.link if ev.link in self.cluster.nodes else ""
@@ -426,8 +964,10 @@ class ClusterSimulator:
         else:
             target = self.cluster.topology.link(ev.link)
             if target is None:
+                self._warn_unknown("link", ev.link)
                 return
             cap_field = "capacity_gbps"
+        self._dirty_links.add(ev.link)
         if ev.capacity_gbps is not None:
             setattr(target, cap_field, float(ev.capacity_gbps))
         if ev.allocatable_gbps is not None:
@@ -456,9 +996,10 @@ class ClusterSimulator:
             return
         if st.phase == DONE:
             return
-        st.flows = []
+        self._clear_flows(st)
         st.phase = DONE
         st.finish_time = self.now
+        self._sync_job(st)
         if self.framework is not None:
             self._on_job_done(st)
             return
@@ -482,6 +1023,7 @@ class ClusterSimulator:
             self.registry.bump()
 
     def _set_allocatable(self, link_id: str, alloc: float) -> None:
+        self._dirty_links.add(link_id)
         if link_id in self.cluster.nodes:
             self.cluster.node(link_id).allocatable_gbps = alloc
         else:
@@ -507,6 +1049,7 @@ class ClusterSimulator:
     def _apply_traffic_change(self, jname: str, duty_mult: float) -> None:
         st = self.jobs.get(jname)
         if st is None:
+            self._warn_unknown("job", jname)
             return
         spec = st.job.traffic
         new_comm = min(spec.period_ms, spec.comm_ms * duty_mult)
@@ -546,25 +1089,27 @@ class ClusterSimulator:
                             job.name, err, period_eff):
                         self._apply_realign(act.job)
             # start synchronized communication
-            st.flows = self._make_flows(job, spec)
+            has_flows = self._start_comm_flows(st, spec)
             st.comm_extra_ms = self._latency_penalty(job)
             st.phase = COMM
-            if not st.flows:
+            if not has_flows:
                 # single-node job: loopback sync takes the ideal comm time
                 st.phase_end = self.now + spec.comm_ms + st.comm_extra_ms
             else:
                 st.phase_end = math.inf
+            self._sync_job(st)
             return
         if st.phase == COMM:
-            if st.flows:
-                if all(f.remaining_gb <= EPS for f in st.flows):
+            if self._job_has_flows(st):
+                if self._job_flows_done(st):
                     # flows done -> latency tail, then iteration completes
                     if st.comm_extra_ms > 0:
-                        st.flows = []
+                        self._clear_flows(st)
                         st.phase_end = self.now + st.comm_extra_ms
                         st.comm_extra_ms = 0.0
+                        self._sync_job(st)
                         return
-                    st.flows = []
+                    self._clear_flows(st)
                     self._complete_iteration(st, inject)
             else:
                 if self.now + EPS >= st.phase_end:
@@ -587,6 +1132,7 @@ class ClusterSimulator:
             st.realign_pending = False
         st.phase = COMPUTE
         st.phase_end = self.now + dur
+        self._sync_job(st)
 
     def _complete_iteration(self, st: JobState, inject: float) -> None:
         dur = self.now - st.iter_start
@@ -605,6 +1151,7 @@ class ClusterSimulator:
         if st.iter_index >= job.n_iterations:
             st.phase = DONE
             st.finish_time = self.now
+            self._sync_job(st)
             return
         st.iter_start = self.now
         self._enter_compute(st, inject)
@@ -625,12 +1172,18 @@ class ClusterSimulator:
             st.phase_end += pause
             st.pause_in_iter_ms += pause
             st.phase = PAUSED
+            self._sync_job(st)
         else:
             # mid-comm: realign when the next compute phase begins
             st.realign_pending = True
 
     # ---------------------------------------------------------------- metrics
     def _result(self) -> SimResult:
+        if self._array_mode:
+            # delivered-GB lived in the float64 vector during the run (same
+            # addition sequence as the legacy dict); publish it back
+            for l, i in self._link_index.items():
+                self.delivered_gb[l] = float(self._delivered_vec[i])
         elapsed = max(self.now, 1.0)
         link_ids = self.cluster.link_ids
         link_util = {}
@@ -672,6 +1225,7 @@ class ClusterSimulator:
             iterations_done=iters,
             reconfigurations=(self.controller.reconf_count
                               if self.controller else 0),
+            profile=self.profile,
         )
 
 
