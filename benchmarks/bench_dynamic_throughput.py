@@ -31,7 +31,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
-from typing import List, Optional, Tuple
+from typing import List, Tuple
 
 import numpy as np
 

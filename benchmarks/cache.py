@@ -73,7 +73,9 @@ def fingerprint(scenario: Scenario, policies: Sequence[Policy],
         "workloads": _canon(workloads),
         "background": _canon(background),
         "events": _canon(events),
-        "policies": [p.name for p in policies],
+        # full knob content, not p.name: a custom label would otherwise
+        # make two different policies share a cache key
+        "policies": [_canon(p) for p in policies],
         "sim_config": _canon(cfg) if cfg is not None else None,
         "scenario_sim_config": (_canon(scenario.sim_config)
                                 if scenario.sim_config is not None else None),

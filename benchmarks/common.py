@@ -10,6 +10,7 @@ artifact instead of stdout-only CSV rows.
 from __future__ import annotations
 
 import sys
+import threading
 import time
 from typing import Dict, List, Optional, Sequence
 
@@ -30,6 +31,11 @@ BENCH_CFG = SimConfig(duration_ms=150_000.0, seed=3, jitter_std=0.01)
 # cannot rot silently.  The flag is set BEFORE any run() executes; benches
 # read it at call time via pick().
 SMOKE = False
+
+# guards every RECORDED_* recorder below: benches running cells on a
+# thread pool (run.py --workers N) record from worker threads, and the
+# emit()/record_*_row() read-modify-write patterns interleave without it
+_RECORD_LOCK = threading.Lock()
 
 # every sweep any bench ran this process (run.py --sweep-out persists it)
 RECORDED_SWEEPS: List[SweepResult] = []
@@ -96,7 +102,8 @@ def run_sweep(scenarios: Sequence[Scenario], policies: Sequence[Policy],
         hit = _cache.load(CACHE_DIR, key)
         if hit is not None:
             hit.meta.update(origin=origin, smoke=SMOKE, cache="hit")
-            RECORDED_SWEEPS.append(hit)
+            with _RECORD_LOCK:
+                RECORDED_SWEEPS.append(hit)
             if strict and hit.errors:
                 bad = ", ".join(f"({c.scenario}, {c.policy})"
                                 for c in hit.errors)
@@ -109,7 +116,8 @@ def run_sweep(scenarios: Sequence[Scenario], policies: Sequence[Policy],
 
         sw.meta.update(cache="miss")
         _cache.store(CACHE_DIR, key, sw)
-    RECORDED_SWEEPS.append(sw)
+    with _RECORD_LOCK:
+        RECORDED_SWEEPS.append(sw)
     if strict and sw.errors:
         bad = ", ".join(f"({c.scenario}, {c.policy})" for c in sw.errors)
         for c in sw.errors:
@@ -148,8 +156,10 @@ def emit(name: str, us_per_call: float, derived: str) -> None:
     """The harness contract: ``name,us_per_call,derived`` CSV rows, also
     recorded in-process for the BENCH_sched_time.json timing artifact."""
     print(f"{name},{us_per_call:.1f},{derived}")
-    RECORDED_EMITS.append({"name": name, "us_per_call": float(us_per_call),
-                           "derived": derived, "origin": CURRENT_ORIGIN})
+    with _RECORD_LOCK:
+        RECORDED_EMITS.append(
+            {"name": name, "us_per_call": float(us_per_call),
+             "derived": derived, "origin": CURRENT_ORIGIN})
 
 
 def write_timings(path: str) -> None:
@@ -167,7 +177,8 @@ def record_trace_row(**row: object) -> None:
     ``results.to_trace_throughput_dict`` for the field contract); run.py
     ``--trace-out`` persists the merged record."""
     row.setdefault("origin", CURRENT_ORIGIN)
-    RECORDED_TRACE_ROWS.append(row)
+    with _RECORD_LOCK:
+        RECORDED_TRACE_ROWS.append(row)
 
 
 def write_trace_throughput(path: str) -> None:
@@ -185,7 +196,8 @@ def record_dynamic_row(**row: object) -> None:
     ``results.to_dynamic_throughput_dict`` for the field contract); run.py
     ``--dynamic-out`` persists the merged record."""
     row.setdefault("origin", CURRENT_ORIGIN)
-    RECORDED_DYNAMIC_ROWS.append(row)
+    with _RECORD_LOCK:
+        RECORDED_DYNAMIC_ROWS.append(row)
 
 
 def write_dynamic_throughput(path: str) -> None:

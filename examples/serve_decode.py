@@ -11,8 +11,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.configs import ARCHS, get_smoke_config
-from repro.models import decode_step, init_model, prefill
+from repro.configs import get_smoke_config
+from repro.models import init_model, prefill
 from repro.runtime.steps import build_serve_step
 
 

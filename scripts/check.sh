@@ -1,6 +1,30 @@
 #!/usr/bin/env bash
-# Tier-1 verify (see ROADMAP.md): run the test suite against src/.
+# Tier-1 verify (see ROADMAP.md): static gates, then the test suite.
 # Usage: scripts/check.sh [extra pytest args]
+#
+# metrolint (repo-specific invariant checks, src/repro/analysis) always
+# runs — it is stdlib-only.  ruff/mypy run only when installed: the
+# reference container does not ship them, so locally they are best-effort
+# while CI (which pip-installs both) enforces them unconditionally.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+echo "== metrolint =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.analysis --root .
+
+if command -v ruff >/dev/null 2>&1; then
+  echo "== ruff =="
+  ruff check .
+else
+  echo "== ruff not installed; skipping (CI enforces it) =="
+fi
+
+if command -v mypy >/dev/null 2>&1; then
+  echo "== mypy =="
+  mypy --config-file pyproject.toml
+else
+  echo "== mypy not installed; skipping (CI enforces it) =="
+fi
+
+echo "== pytest =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

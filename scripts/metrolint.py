@@ -1,0 +1,19 @@
+#!/usr/bin/env python3
+"""Run metrolint without needing PYTHONPATH=src pre-set.
+
+Equivalent to ``PYTHONPATH=src python -m repro.analysis --root .`` from the
+repo root; any CLI flags pass straight through.
+"""
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.analysis.cli import main  # noqa: E402
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if not any(a.startswith("--root") for a in argv):
+        argv = ["--root", str(REPO)] + argv
+    sys.exit(main(argv))

@@ -1,6 +1,5 @@
 """Render the roofline/dry-run tables of EXPERIMENTS.md from results/*.json."""
 import json
-import sys
 
 d = json.load(open("results/dryrun.json"))
 

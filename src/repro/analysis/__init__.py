@@ -1,0 +1,31 @@
+"""metrolint — repo-specific static invariant checks (DESIGN.md section 18).
+
+PRs 5-7 made correctness hinge on contracts nothing enforced mechanically:
+epoch counters that must advance on every demand/capacity mutation, Pallas
+kernels that must keep a ``ref.py`` oracle and an interpret-parity test,
+modules the test suite pins bit-for-bit that must stay free of
+nondeterminism hazards, content-keyed caches whose key functions must cover
+every input field, and module-level state reachable from ``sweep(workers=
+N)`` worker threads.  This package machine-checks those invariants on every
+commit (``scripts/check.sh`` and CI run ``python -m repro.analysis``).
+
+Deliberate deviations are recorded in ``metrolint.baseline.json`` at the
+repo root; every suppression carries a reason and the CLI fails on any
+finding not in the baseline (and on baseline entries that no longer match
+anything, so the file cannot rot).
+"""
+from .core import (Finding, Repo, all_checks, apply_baseline, load_baseline,
+                   run_checks, write_baseline)
+
+# the check modules self-register on import
+from . import checks as _checks  # noqa: F401  (import-time registration)
+
+__all__ = [
+    "Finding",
+    "Repo",
+    "all_checks",
+    "apply_baseline",
+    "load_baseline",
+    "run_checks",
+    "write_baseline",
+]

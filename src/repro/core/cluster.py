@@ -17,7 +17,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from .topology import Link, Topology
+from .topology import Topology
 
 
 @dataclasses.dataclass

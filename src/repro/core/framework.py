@@ -8,7 +8,7 @@ Coscheduling (all-or-nothing, Eqs. 11-12) gate at the job level.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 from .cluster import Cluster
 from .workload import Job, Task, Workload

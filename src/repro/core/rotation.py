@@ -44,7 +44,6 @@ capacity, which is exactly the stacked ``(L, R, S)`` layout of the
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import networkx as nx
@@ -83,8 +82,8 @@ class PlanCache:
 
     def __init__(self, maxsize: int = 512) -> None:
         self.maxsize = maxsize
-        self._epoch = None
-        self._store: Dict = {}
+        self._epoch: Optional[Tuple] = None
+        self._store: Dict[Tuple, Tuple] = {}
         self.hits = 0
         self.misses = 0
 
@@ -773,7 +772,7 @@ def solve_link_batch(
         pending = set(range(len(group)))
         for pos, block in _score_chunks(base.patterns, bw_rows, caps,
                                         base.ranges, bank, fam_chunk):
-            for pi in list(pending):
+            for pi in sorted(pending):
                 if scans[pi].feed(pos, block[pi]):
                     pending.discard(pi)
             if not pending:
@@ -1215,7 +1214,7 @@ def _solve_joint_family(probs: List[JointProblem], *, mode: str,
     pending = set(range(len(probs)))
     for pos, block in _score_chunks(base.patterns, bw_rows, cap_rows,
                                     ranges, banks, chunk):
-        for pi in list(pending):
+        for pi in sorted(pending):
             lo, hi = row_of[pi]
             js = np.minimum.reduce(block[lo:hi], axis=0)
             if scans[pi].feed(pos, js):

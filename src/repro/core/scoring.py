@@ -9,7 +9,6 @@ joint solve, and global-offset resolution — lives in
 """
 from __future__ import annotations
 
-import math
 from typing import List, Optional, Sequence
 
 import numpy as np

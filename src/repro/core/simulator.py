@@ -28,7 +28,7 @@ import dataclasses
 import math
 import time
 import warnings
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -41,8 +41,7 @@ from .fluid import FluidEngine
 # rate-sharing primitives live in the backend-swappable fluid engine now;
 # re-exported here because they are part of the simulator's historical API
 from .fluid import _max_min_fair, _progressive_fill  # noqa: F401
-from .framework import SchedulingFramework
-from .workload import HIGH, Job, Task
+from .workload import HIGH, Job
 
 EPS = 1e-9
 
@@ -346,7 +345,7 @@ class ClusterSimulator:
         self._jhasflows = np.zeros(64, dtype=bool)
         self._junfin = np.zeros(64, dtype=np.int64)
         # dirty-link rate invalidation (component-granular refills)
-        self._dirty_links: set = set()
+        self._dirty_links: Set[str] = set()
         self._all_dirty = True
         self._last_fill_mode: Optional[str] = None
         # cached (job, pos)-ordered active slots + flattened path incidence
@@ -354,7 +353,7 @@ class ClusterSimulator:
         self._act = np.empty(0, dtype=np.int64)
         self._flat_links = np.empty(0, dtype=np.int64)
         self._flat_rows = np.empty(0, dtype=np.int64)
-        self._warned: set = set()
+        self._warned: Set[Tuple[str, str]] = set()
         # (arrival_ms, workload) queue for online scheduling
         self._arrivals = collections.deque(sorted(
             ((min(j.submit_time_s for j in wl.jobs) * 1e3, i, wl)

@@ -18,7 +18,7 @@ holding its GPUs longer) and feeds ``harness.run_trace_experiment`` via its
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Sequence
 
 import numpy as np
 

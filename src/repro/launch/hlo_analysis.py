@@ -19,9 +19,8 @@ Unresolvable trips fall back to 1 and are reported in ``warnings``.
 from __future__ import annotations
 
 import dataclasses
-import math
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,

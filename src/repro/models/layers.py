@@ -6,7 +6,6 @@ tuples consumed by repro.sharding.
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from typing import Any, Dict, Optional, Tuple
 

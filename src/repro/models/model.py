@@ -16,7 +16,6 @@ block body so compiled HLO stays small and activation memory is bounded.
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import Any, Dict, Optional, Tuple
 
@@ -28,7 +27,7 @@ from repro.sharding import logical_shard
 from . import layers as L
 from . import moe as MOE
 from . import recurrent as R
-from .config import ATTN, MLSTM, RGLRU, SLSTM, ModelConfig
+from .config import ATTN, RGLRU, ModelConfig
 
 _is_spec = lambda x: isinstance(x, tuple)
 

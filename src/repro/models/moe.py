@@ -15,7 +15,7 @@ Design notes (DESIGN.md section 4):
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -10,17 +10,16 @@ under ``sharding.use_rules(mesh)``.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.models import decode_step, init_cache, init_model, loss_fn, prefill
+from repro.models import decode_step, init_model, loss_fn, prefill
 from repro.models.config import ModelConfig, ShapeConfig
 from repro.optim import (AdamWConfig, adamw_init, adamw_update,
                          quantize_int8)
-from repro.sharding import best_spec, current_rules, logical_shard
+from repro.sharding import logical_shard
 
 
 @dataclasses.dataclass

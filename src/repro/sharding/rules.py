@@ -17,12 +17,10 @@ Mesh axes (launch/mesh.py):
 from __future__ import annotations
 
 import contextlib
-import math
 import threading
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 AxisChoice = Union[None, str, Tuple[str, ...]]

@@ -1,0 +1,65 @@
+"""Thread-safety regression for the benchmarks.common recorders.
+
+Benches running sweep cells on a thread pool (run.py --workers N) record
+rows from worker threads; before _RECORD_LOCK the list appends raced and
+rows were lost under interleaving."""
+import threading
+
+import benchmarks.common as common
+
+
+def _drain(lst):
+    out = list(lst)
+    del lst[:]
+    return out
+
+
+class TestRecorderThreadSafety:
+    def test_concurrent_emits_lose_nothing(self):
+        saved = _drain(common.RECORDED_EMITS)
+        try:
+            n_threads, per_thread = 8, 200
+            barrier = threading.Barrier(n_threads)
+
+            def worker(tid):
+                barrier.wait()
+                for i in range(per_thread):
+                    common.emit(f"t{tid}-{i}", 1.0, "derived")
+
+            threads = [threading.Thread(target=worker, args=(t,))
+                       for t in range(n_threads)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            rows = _drain(common.RECORDED_EMITS)
+            assert len(rows) == n_threads * per_thread
+            assert len({r["name"] for r in rows}) == n_threads * per_thread
+        finally:
+            common.RECORDED_EMITS.extend(saved)
+
+    def test_concurrent_trace_and_dynamic_rows(self):
+        saved_t = _drain(common.RECORDED_TRACE_ROWS)
+        saved_d = _drain(common.RECORDED_DYNAMIC_ROWS)
+        try:
+            n_threads, per_thread = 6, 150
+            barrier = threading.Barrier(n_threads)
+
+            def worker(tid):
+                barrier.wait()
+                for i in range(per_thread):
+                    common.record_trace_row(scheduler=f"t{tid}", snapshot=i)
+                    common.record_dynamic_row(scheduler=f"t{tid}", event=i)
+
+            threads = [threading.Thread(target=worker, args=(t,))
+                       for t in range(n_threads)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            total = n_threads * per_thread
+            assert len(_drain(common.RECORDED_TRACE_ROWS)) == total
+            assert len(_drain(common.RECORDED_DYNAMIC_ROWS)) == total
+        finally:
+            common.RECORDED_TRACE_ROWS.extend(saved_t)
+            common.RECORDED_DYNAMIC_ROWS.extend(saved_d)

@@ -7,7 +7,6 @@ The legacy rules (scheduler ``_node_jobs``/``_uplink_jobs``/
 they are re-implemented HERE, verbatim, as the reference oracle, and
 compared on the star (S2) and fabric (1:1 "F1" variant, F2, F4) snapshots —
 including candidate-pod (extra) placements on every node."""
-import numpy as np
 import pytest
 
 from repro.configs.metronome_testbed import make_fabric_snapshot, make_snapshot

@@ -12,7 +12,6 @@ Three pillars:
   * results round-trip through schema-versioned JSON and sweeps isolate
     per-cell failures.
 """
-import dataclasses
 import json
 import math
 

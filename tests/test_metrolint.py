@@ -1,0 +1,399 @@
+"""metrolint: per-check fixture snippets (one violating, one clean) on
+miniature tmp-dir repos mirroring the real layout, plus the contract that
+the committed baseline exactly matches a fresh full-repo run."""
+import json
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (all_checks, apply_baseline, load_baseline,
+                            run_checks)
+from repro.analysis.core import BASELINE_NAME
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def mini_repo(tmp_path, files):
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    return tmp_path
+
+
+def findings_of(root, check):
+    return [f for f in run_checks(root, [check]) if f.check == check]
+
+
+class TestRegistry:
+    def test_all_five_checks_registered(self):
+        assert {"epoch-soundness", "kernel-parity", "determinism",
+                "cache-key-completeness",
+                "shared-state-race"} <= set(all_checks())
+
+    def test_unknown_check_rejected(self, tmp_path):
+        with pytest.raises(ValueError, match="unknown checks"):
+            run_checks(tmp_path, ["no-such-check"])
+
+
+class TestEpochSoundness:
+    VIOLATING = """
+        class Framework:
+            def drain(self, link):
+                link.allocatable_gbps -= 1.0
+                return link
+        """
+    CLEAN = """
+        class Framework:
+            def drain(self, link):
+                link.allocatable_gbps -= 1.0
+                self.cluster.bump_epoch()
+                return link
+        """
+
+    def test_mutation_without_bump_flagged(self, tmp_path):
+        root = mini_repo(tmp_path,
+                         {"src/repro/core/framework.py": self.VIOLATING})
+        found = findings_of(root, "epoch-soundness")
+        assert len(found) == 1
+        assert found[0].obj == "Framework.drain"
+        assert found[0].key == "no-bump"
+
+    def test_mutation_with_bump_clean(self, tmp_path):
+        root = mini_repo(tmp_path,
+                         {"src/repro/core/framework.py": self.CLEAN})
+        assert findings_of(root, "epoch-soundness") == []
+
+    def test_registry_store_mutation_flagged(self, tmp_path):
+        root = mini_repo(tmp_path, {"src/repro/core/framework.py": """
+            class Framework:
+                def admit(self, job):
+                    self.registry.jobs[job.name] = job
+            """})
+        found = findings_of(root, "epoch-soundness")
+        assert len(found) == 1 and found[0].obj == "Framework.admit"
+
+    def test_constructors_exempt(self, tmp_path):
+        root = mini_repo(tmp_path, {"src/repro/core/cluster.py": """
+            class Node:
+                def __init__(self):
+                    self.allocatable_gbps = 100.0
+            """})
+        assert findings_of(root, "epoch-soundness") == []
+
+
+class TestDeterminism:
+    def test_set_iteration_flagged(self, tmp_path):
+        root = mini_repo(tmp_path, {"src/repro/core/scoring.py": """
+            def order(xs):
+                pending = set(xs)
+                out = []
+                for x in pending:
+                    out.append(x)
+                return out
+            """})
+        found = findings_of(root, "determinism")
+        assert [f.key for f in found] == ["set-iteration:1"]
+
+    def test_sorted_set_clean(self, tmp_path):
+        root = mini_repo(tmp_path, {"src/repro/core/scoring.py": """
+            def order(xs):
+                pending = set(xs)
+                out = []
+                for x in sorted(pending):
+                    out.append(x)
+                return out
+            """})
+        assert findings_of(root, "determinism") == []
+
+    def test_unseeded_random_flagged_seeded_clean(self, tmp_path):
+        root = mini_repo(tmp_path, {"src/repro/core/fluid.py": """
+            import numpy as np
+
+            def jitter(n):
+                return np.random.rand(n)
+
+            def jitter_ok(n, seed):
+                return np.random.default_rng(seed).random(n)
+            """})
+        found = findings_of(root, "determinism")
+        assert len(found) == 1
+        assert found[0].obj == "jitter"
+        assert found[0].key.startswith("unseeded-random")
+
+    def test_float32_flagged_in_pinned_module(self, tmp_path):
+        root = mini_repo(tmp_path, {"src/repro/core/rotation.py": """
+            import numpy as np
+
+            def pack(x):
+                return np.asarray(x, dtype=np.float32)
+            """})
+        found = findings_of(root, "determinism")
+        assert [f.key for f in found] == ["float32"]
+
+    def test_unpinned_module_out_of_scope(self, tmp_path):
+        root = mini_repo(tmp_path, {"src/repro/core/workload.py": """
+            def order(xs):
+                for x in set(xs):
+                    yield x
+            """})
+        assert findings_of(root, "determinism") == []
+
+
+class TestKernelParity:
+    KERNEL = """
+        def my_fill(x, interpret=False):
+            return x
+        """
+    OPS = """
+        from .mykernel import my_fill
+
+        def fill(x, interpret=None):
+            return my_fill(x, interpret=bool(interpret))
+        """
+    REF = """
+        def my_fill_ref(x):
+            return x
+        """
+    PARITY_TEST = """
+        from repro.kernels import ops, ref
+
+        def test_fill_parity():
+            assert ops.fill(3, interpret=True) == ref.my_fill_ref(3)
+        """
+
+    def test_missing_parity_test_flagged(self, tmp_path):
+        root = mini_repo(tmp_path, {
+            "src/repro/kernels/mykernel.py": self.KERNEL,
+            "src/repro/kernels/ops.py": self.OPS,
+            "src/repro/kernels/ref.py": self.REF,
+        })
+        found = findings_of(root, "kernel-parity")
+        assert [f.key for f in found] == ["no-parity-test"]
+        assert found[0].obj == "my_fill"
+
+    def test_unwired_kernel_flagged(self, tmp_path):
+        root = mini_repo(tmp_path, {
+            "src/repro/kernels/mykernel.py": self.KERNEL,
+            "src/repro/kernels/ops.py": "def other():\n    return 1\n",
+            "src/repro/kernels/ref.py": self.REF,
+        })
+        found = findings_of(root, "kernel-parity")
+        assert [f.key for f in found] == ["unwired"]
+
+    def test_wired_and_tested_clean(self, tmp_path):
+        root = mini_repo(tmp_path, {
+            "src/repro/kernels/mykernel.py": self.KERNEL,
+            "src/repro/kernels/ops.py": self.OPS,
+            "src/repro/kernels/ref.py": self.REF,
+            "tests/test_kernels.py": self.PARITY_TEST,
+        })
+        assert findings_of(root, "kernel-parity") == []
+
+    def test_smoke_call_without_ref_is_not_parity(self, tmp_path):
+        root = mini_repo(tmp_path, {
+            "src/repro/kernels/mykernel.py": self.KERNEL,
+            "src/repro/kernels/ops.py": self.OPS,
+            "src/repro/kernels/ref.py": self.REF,
+            "tests/test_kernels.py": """
+                from repro.kernels import ops
+
+                def test_fill_smoke():
+                    assert ops.fill(3, interpret=True) == 3
+                """,
+        })
+        found = findings_of(root, "kernel-parity")
+        assert [f.key for f in found] == ["no-parity-test"]
+
+
+class TestCacheKeyCompleteness:
+    EXPERIMENT = """
+        import dataclasses
+
+        @dataclasses.dataclass(frozen=True)
+        class Scenario:
+            name: str
+            build: object
+            mode: str
+            sim_config: object
+
+            @property
+            def label(self):
+                return self.name
+
+        @dataclasses.dataclass(frozen=True)
+        class Policy:
+            scheduler: str
+            options: dict
+        """
+    SIMULATOR = """
+        import dataclasses
+
+        @dataclasses.dataclass
+        class SimConfig:
+            seed: int
+        """
+    CACHE_TMPL = """
+        import dataclasses
+
+        def _canon(obj):
+            if dataclasses.is_dataclass(obj):
+                return {{f.name: getattr(obj, f.name)
+                        for f in dataclasses.fields(obj)}}
+            return obj
+
+        def fingerprint(scenario, policies, cfg):
+            return {{
+                "mode": scenario.mode,
+                "built": scenario.materialize(),
+                "scenario_cfg": _canon(scenario.sim_config),
+                "policies": [{policy_expr} for p in policies],
+                "cfg": _canon(cfg),
+            }}
+        """
+
+    def files(self, policy_expr):
+        return {
+            "src/repro/core/experiment.py": self.EXPERIMENT,
+            "src/repro/core/simulator.py": self.SIMULATOR,
+            "benchmarks/cache.py": self.CACHE_TMPL.format(
+                policy_expr=policy_expr),
+        }
+
+    def test_label_keyed_policies_flagged(self, tmp_path):
+        root = mini_repo(tmp_path, self.files("p.name"))
+        found = [f for f in findings_of(root, "cache-key-completeness")
+                 if f.key == "uncovered:policies"]
+        assert len(found) == 1
+        assert "options" in found[0].message
+        assert "scheduler" in found[0].message
+
+    def test_canonicalized_policies_clean(self, tmp_path):
+        root = mini_repo(tmp_path, self.files("_canon(p)"))
+        assert [f for f in findings_of(root, "cache-key-completeness")
+                if f.key.startswith("uncovered")] == []
+
+    def test_missing_knob_in_plan_cache_key_flagged(self, tmp_path):
+        root = mini_repo(tmp_path, {"src/repro/core/rotation.py": """
+            def solve_link(view, link_id, *, mode="fast",
+                           demand="planning", di_pre=16, g_t_ms=5.0,
+                           e_t_frac=0.1, rotation_mode="intermediate",
+                           cache=None):
+                key = ("link", mode, demand, di_pre, g_t_ms, e_t_frac)
+                return key
+            """})
+        found = [f for f in findings_of(root, "cache-key-completeness")
+                 if f.obj == "solve_link"]
+        assert [f.key for f in found] == ["knobs"]
+        assert "rotation_mode" in found[0].message
+
+    def test_renamed_solver_reports_spec_drift(self, tmp_path):
+        root = mini_repo(tmp_path, {"src/repro/core/rotation.py": """
+            def solve_link_renamed():
+                return None
+            """})
+        found = [f for f in findings_of(root, "cache-key-completeness")
+                 if f.obj == "solve_link"]
+        assert [f.key for f in found] == ["spec-drift"]
+
+
+class TestSharedStateRace:
+    def test_unlocked_append_flagged(self, tmp_path):
+        root = mini_repo(tmp_path, {"benchmarks/common.py": """
+            RECORDED: list = []
+
+            def emit(row):
+                RECORDED.append(row)
+            """})
+        found = findings_of(root, "shared-state-race")
+        assert [f.key for f in found] == ["unlocked:RECORDED"]
+        assert found[0].obj == "emit"
+
+    def test_locked_append_clean(self, tmp_path):
+        root = mini_repo(tmp_path, {"benchmarks/common.py": """
+            import threading
+
+            _LOCK = threading.Lock()
+            RECORDED: list = []
+
+            def emit(row):
+                with _LOCK:
+                    RECORDED.append(row)
+            """})
+        assert findings_of(root, "shared-state-race") == []
+
+    def test_dict_slot_assignment_flagged(self, tmp_path):
+        root = mini_repo(tmp_path, {"src/repro/core/scoring.py": """
+            _CACHE: dict = {}
+
+            def memo(key):
+                if key not in _CACHE:
+                    _CACHE[key] = expensive(key)
+                return _CACHE[key]
+            """})
+        found = findings_of(root, "shared-state-race")
+        assert [f.key for f in found] == ["unlocked:_CACHE"]
+
+    def test_out_of_scope_module_ignored(self, tmp_path):
+        root = mini_repo(tmp_path, {"scripts/tool.py": """
+            ROWS: list = []
+
+            def emit(row):
+                ROWS.append(row)
+            """})
+        assert findings_of(root, "shared-state-race") == []
+
+
+class TestBaselineContract:
+    def test_committed_baseline_matches_fresh_run(self):
+        """The repo must be lint-clean modulo the committed, reason-
+        annotated baseline — and the baseline must carry no stale
+        entries."""
+        findings = run_checks(REPO_ROOT)
+        baseline = load_baseline(REPO_ROOT / BASELINE_NAME)
+        new, suppressed, stale = apply_baseline(findings, baseline)
+        assert new == [], "\n".join(f.render() for f in new)
+        assert stale == [], [s.fingerprint for s in stale]
+        assert len(suppressed) == len(baseline)
+
+    def test_every_suppression_has_substantive_reason(self):
+        baseline = load_baseline(REPO_ROOT / BASELINE_NAME)
+        assert baseline, "expected a committed baseline"
+        for s in baseline:
+            assert len(s.reason) > 20, s.fingerprint
+            assert s.reason != "baselined at adoption; triage", \
+                s.fingerprint
+
+    def test_reasonless_suppression_rejected(self, tmp_path):
+        p = tmp_path / BASELINE_NAME
+        p.write_text(json.dumps({"version": 1, "suppressions": [
+            {"check": "determinism", "path": "x.py", "obj": "f",
+             "key": "float32", "reason": ""}]}))
+        with pytest.raises(ValueError, match="no\\s+reason"):
+            load_baseline(p)
+
+    def test_fingerprint_is_line_independent(self, tmp_path):
+        """Moving a finding within its file must not invalidate its
+        suppression."""
+        src_v1 = """
+            class Framework:
+                def drain(self, link):
+                    link.allocatable_gbps -= 1.0
+            """
+        src_v2 = """
+            # a comment that shifts every line
+
+
+            class Framework:
+                def drain(self, link):
+                    link.allocatable_gbps -= 1.0
+            """
+        r1 = mini_repo(tmp_path / "a",
+                       {"src/repro/core/framework.py": src_v1})
+        r2 = mini_repo(tmp_path / "b",
+                       {"src/repro/core/framework.py": src_v2})
+        f1 = findings_of(r1, "epoch-soundness")
+        f2 = findings_of(r2, "epoch-soundness")
+        assert f1[0].line != f2[0].line
+        assert f1[0].fingerprint == f2[0].fingerprint

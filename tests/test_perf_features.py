@@ -11,7 +11,7 @@ from repro.configs import get_smoke_config
 from repro.launch.dryrun import (RULES_PRESETS, flash_attention_bytes,
                                  model_flops)
 from repro.launch.mesh import make_host_mesh
-from repro.models import forward, init_model, loss_fn
+from repro.models import forward, init_model
 from repro.models.config import SHAPES
 from repro.optim import AdamWConfig
 from repro.runtime.steps import build_train_step, init_train_state

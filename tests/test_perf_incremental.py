@@ -14,7 +14,6 @@ Four pillars:
     (C, L, R, S) kernel dispatch) equals per-problem joint_solve;
   * the timing-artifact schema (BENCH_sched_time.json) round-trips.
 """
-import dataclasses
 
 import numpy as np
 import pytest

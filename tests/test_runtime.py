@@ -12,13 +12,12 @@ from repro.checkpoint import (CheckpointManager, latest_step,
 from repro.configs import get_smoke_config
 from repro.core.controller import StopAndWaitController
 from repro.data import SyntheticLM
-from repro.models import init_model
 from repro.optim import (AdamWConfig, adamw_init, adamw_update,
                          compress_ef_int8, cosine_schedule, make_ef_state,
                          quantize_int8)
 from repro.runtime.comm_gate import CommGate
 from repro.runtime.elastic import plan_remesh
-from repro.runtime.steps import TrainState, build_train_step, init_train_state
+from repro.runtime.steps import build_train_step, init_train_state
 
 KEY = jax.random.PRNGKey(0)
 

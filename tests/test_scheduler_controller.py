@@ -1,6 +1,4 @@
 """Algorithm 1 scheduler + stop-and-wait controller behavior tests."""
-import numpy as np
-import pytest
 
 from repro.core.baselines import DefaultPlugin, DiktyoPlugin, ExclusivePlugin
 from repro.core.cluster import Cluster, Node, Resources

@@ -3,7 +3,6 @@ integration (CommGate + IterationReporter), and a tiny-mesh dry-run."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_smoke_config
 from repro.configs.metronome_testbed import MODEL_FLEET, make_snapshot

@@ -1,6 +1,5 @@
 """Fabric-topology layer: routing, progressive-filling fairness, the
 star-topology seed regression, and the oversubscribed-fabric scenarios."""
-import dataclasses
 
 import numpy as np
 import pytest
@@ -12,7 +11,7 @@ from repro.core.harness import run_experiment
 from repro.core.simulator import (BackgroundFlow, SimConfig, _max_min_fair,
                                   _progressive_fill)
 from repro.core.topology import Topology, is_uplink, uplink_id
-from repro.core.workload import HIGH, LOW, Workload, make_job
+from repro.core.workload import HIGH, Workload, make_job
 
 
 def fabric2x2(oversub=2.0):
