@@ -1,0 +1,189 @@
+"""Graceful degradation under an imperfect-information control plane.
+
+The acceptance bench of DESIGN.md section 19: every scheduler/controller
+read of allocatable bandwidth is routed through a
+:class:`~repro.core.telemetry.TelemetryChannel` (sampled, noisy, stale,
+lossy observation) while the fluid physics keeps running on ground truth,
+and the environment additionally misbehaves (flapping link failures,
+silently drifting traffic profiles).  Four distortion axes are swept, each
+against its own ``x == 0`` anchor:
+
+  * ``noise``     — multiplicative telemetry noise std on the dynamic
+    snapshots D1/D2 (background ramp / capacity drop mid-run).
+  * ``staleness`` — observation pipeline delay (ms) on D2 at fixed 10%%
+    noise.
+  * ``failure``   — flapping-cycle count of the R1 spine-uplink
+    failure/recovery train at fixed 10%% noise.
+  * ``trace``     — telemetry noise on a small online Gavel-style trace
+    (arrivals + queueing, the Fig. 10 regime).
+
+Two policies run every point:
+
+  * ``metronome``        — the oracle-assuming ablation: it believes every
+    observation and replans on every reported change.
+  * ``metronome-robust`` — degradation control ON: hysteresis debounce on
+    reconfiguration (min-interval + magnitude threshold) and
+    measured-vs-declared demand reconciliation.
+
+Each row is seed-averaged; ``degradation`` is the job-mean
+time-per-1000-iterations ratio against the same (axis, scenario, policy)
+group's anchor.  The graceful-degradation claim checked in CI
+(``scripts/diff_bench.py``) and pinned by the committed artifact: the
+robust policy's curve must stay SHALLOWER than the ablation's on the
+failure axis, where believing a flapping link costs full replans.
+
+Rows land in ``BENCH_robustness.json`` (run.py ``--robustness-out``).
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from repro.configs.metronome_testbed import (MODEL_FLEET, dynamic_scenario,
+                                             fault_scenario, trace_scenario)
+from repro.core import experiment
+from repro.core.experiment import Policy, Scenario
+from repro.core.simulator import SimConfig
+from repro.core.telemetry import TelemetryChannel
+from repro.core.trace import generate_trace
+
+from . import common
+from .common import Timer, emit, record_robustness_row
+
+SAMPLE_PERIOD_MS = 1000.0
+
+# the oracle-assuming ablation vs degradation control ON (same scheduler,
+# same thresholds — ONLY the robustness machinery differs)
+POLICIES = (
+    Policy("metronome"),
+    Policy("metronome", label="metronome-robust").with_options(
+        hysteresis_ms=3000.0, hysteresis_frac=0.05, reconcile=True),
+)
+
+NOISE_GRID = (0.0, 0.05, 0.1, 0.2, 0.4)
+STALENESS_GRID = (0.0, 2_000.0, 5_000.0, 10_000.0)
+FLAP_GRID = (0, 2, 4, 8)
+TRACE_NOISE_GRID = (0.0, 0.2)
+
+# fixed noise for the staleness/failure axes: distortions compose in
+# deployment, so the non-swept channel knobs stay at a realistic operating
+# point instead of zero
+AXIS_BASE_NOISE = 0.1
+
+
+def _channel(noise: float = 0.0, staleness: float = 0.0) -> TelemetryChannel:
+    return TelemetryChannel(sample_period_ms=SAMPLE_PERIOD_MS,
+                            noise_std=noise, staleness_ms=staleness)
+
+
+def _point(scn_factory: Callable[[], Scenario], policy: Policy,
+           cfg_factory: Callable[[int], SimConfig],
+           seeds) -> Dict[str, float]:
+    """Seed-averaged measurements of one (axis, scenario, policy, x) cell."""
+    cols: Dict[str, List[float]] = {k: [] for k in (
+        "t1000", "hi", "lo", "readj", "reconf", "supp", "recon")}
+    for seed in seeds:
+        r = experiment.run(scn_factory(), policy, cfg_factory(seed))
+        cols["t1000"].append(r.mean_s_per_1000())
+        cols["hi"].append(r.mean_s_per_1000(r.high_priority))
+        cols["lo"].append(r.mean_s_per_1000(r.low_priority))
+        cols["readj"].append(float(r.sim.readjustments))
+        cols["reconf"].append(float(r.sim.reconfigurations))
+        cols["supp"].append(float(r.sim.suppressed_reconfigurations))
+        cols["recon"].append(float(r.sim.reconciliations))
+    return {k: float(np.nanmean(v)) if any(not math.isnan(x) for x in v)
+            else math.nan
+            for k, v in cols.items()}
+
+
+def _sweep_axis(axis: str, scenario: str, xs, seeds,
+                scn_for: Callable[[float], Callable[[], Scenario]],
+                cfg_for: Callable[[float], Callable[[int], SimConfig]]
+                ) -> None:
+    """One axis x policy sweep: measure every x, anchor degradation on the
+    x == 0 point of the same policy, record + emit the rows."""
+    for pol in POLICIES:
+        anchor = None
+        for x in xs:
+            with Timer() as t:
+                m = _point(scn_for(x), pol, cfg_for(x), seeds)
+            if anchor is None:
+                anchor = m["t1000"]  # xs always starts at 0
+            deg = m["t1000"] / anchor if anchor else math.nan
+            record_robustness_row(
+                axis=axis, scenario=scenario, policy=pol.name, x=float(x),
+                seeds=len(seeds), t1000_mean_s=m["t1000"],
+                t1000_hi_s=m["hi"], t1000_lo_s=m["lo"], degradation=deg,
+                readjustments=m["readj"], reconfigurations=m["reconf"],
+                suppressed_reconfigurations=m["supp"],
+                reconciliations=m["recon"])
+            emit(f"robust_{axis}_{scenario}_x{x:g}_{pol.name}",
+                 t.us / len(seeds),
+                 f"t1000_s={m['t1000']:.2f};deg={deg:.3f};"
+                 f"readj={m['readj']:.1f};reconf={m['reconf']:.1f};"
+                 f"supp={m['supp']:.1f};recon={m['recon']:.1f}")
+
+
+def run() -> None:
+    seeds = common.pick((3, 4, 5), (3,))
+    n_iter = common.pick(300, 25)
+    dur_ms = common.pick(150_000.0, 15_000.0)
+
+    def snap_cfg(chan: TelemetryChannel) -> Callable[[int], SimConfig]:
+        return lambda seed: SimConfig(duration_ms=dur_ms, seed=seed,
+                                      jitter_std=0.01, telemetry=chan)
+
+    # -- axis 1: telemetry noise on the dynamic snapshots ----------------
+    for sid in common.pick(("D1", "D2"), ("D1",)):
+        _sweep_axis(
+            "noise", sid, common.pick(NOISE_GRID, (0.0, 0.2)), seeds,
+            scn_for=lambda x, sid=sid: (
+                lambda: dynamic_scenario(
+                    sid, n_iterations=n_iter,
+                    t_on_ms=common.pick(15_000.0, 4_000.0),
+                    t_off_ms=common.pick(45_000.0, 12_000.0))),
+            cfg_for=lambda x: snap_cfg(_channel(noise=x)))
+
+    # -- axis 2: observation staleness (D2, fixed 10% noise) -------------
+    _sweep_axis(
+        "staleness", "D2",
+        common.pick(STALENESS_GRID, (0.0, 5_000.0)), seeds,
+        scn_for=lambda x: (
+            lambda: dynamic_scenario(
+                "D2", n_iterations=n_iter,
+                t_on_ms=common.pick(15_000.0, 4_000.0),
+                t_off_ms=common.pick(45_000.0, 12_000.0))),
+        cfg_for=lambda x: snap_cfg(
+            _channel(noise=AXIS_BASE_NOISE, staleness=x)))
+
+    # -- axis 3: flapping-failure cycles (R1, fixed 10% noise) -----------
+    # the hysteresis showcase: every flap transition is a real
+    # on_link_change, so the ablation replans 2x per cycle while the
+    # robust policy sits short flaps out inside its debounce window
+    _sweep_axis(
+        "failure", "R1", common.pick(FLAP_GRID, (0, 2)), seeds,
+        scn_for=lambda x: (
+            lambda: fault_scenario(
+                "R1", n_iterations=n_iter,
+                start_ms=common.pick(20_000.0, 3_000.0),
+                period_ms=common.pick(15_000.0, 1_500.0),
+                down_ms=common.pick(2_000.0, 300.0), n_cycles=int(x))),
+        cfg_for=lambda x: snap_cfg(_channel(noise=AXIS_BASE_NOISE)))
+
+    # -- axis 4: telemetry noise on an online trace ----------------------
+    trace = generate_trace(
+        MODEL_FLEET, duration_s=common.pick(900.0, 240.0), total_gpus=13,
+        target_load=0.85, seed=1,
+        job_duration_range_s=(120.0, 240.0))[:common.pick(8, 3)]
+    trace_dur = common.pick(600_000.0, 45_000.0)
+    _sweep_axis(
+        "trace", "gavel-small", TRACE_NOISE_GRID, seeds,
+        scn_for=lambda x: (
+            lambda: trace_scenario(trace, open_ended=True,
+                                   name="gavel-small")),
+        cfg_for=lambda x: (
+            lambda seed: SimConfig(duration_ms=trace_dur, seed=seed,
+                                   jitter_std=0.01,
+                                   telemetry=_channel(noise=x))))

@@ -17,7 +17,8 @@ from typing import Dict, List, Optional, Sequence
 from repro.configs.metronome_testbed import snapshot_scenario
 from repro.core.experiment import Policy, Scenario, sweep
 from repro.core.results import (SweepResult, to_bench_dict,
-                                to_dynamic_throughput_dict, to_timing_dict,
+                                to_dynamic_throughput_dict,
+                                to_robustness_dict, to_timing_dict,
                                 to_trace_throughput_dict)
 from repro.core.simulator import SimConfig
 
@@ -55,6 +56,11 @@ RECORDED_TRACE_ROWS: List[Dict[str, object]] = []
 # process (run.py --dynamic-out persists the merged record as
 # schema-versioned BENCH_dynamic_throughput.json)
 RECORDED_DYNAMIC_ROWS: List[Dict[str, object]] = []
+
+# every graceful-degradation row bench_robustness recorded this process
+# (run.py --robustness-out persists the merged record as schema-versioned
+# BENCH_robustness.json)
+RECORDED_ROBUSTNESS_ROWS: List[Dict[str, object]] = []
 
 # parallel sweep execution (run.py --workers / --worker-mode): run_sweep
 # fans independent grid cells over a thread or process pool; 1/thread =
@@ -209,6 +215,25 @@ def write_dynamic_throughput(path: str) -> None:
         json.dump(
             to_dynamic_throughput_dict(RECORDED_DYNAMIC_ROWS, smoke=SMOKE),
             f, indent=1, allow_nan=False)
+
+
+def record_robustness_row(**row: object) -> None:
+    """Record one graceful-degradation row (see
+    ``results.to_robustness_dict`` for the field contract); run.py
+    ``--robustness-out`` persists the merged record."""
+    row.setdefault("origin", CURRENT_ORIGIN)
+    with _RECORD_LOCK:
+        RECORDED_ROBUSTNESS_ROWS.append(row)
+
+
+def write_robustness(path: str) -> None:
+    """Persist every recorded graceful-degradation row as schema-versioned
+    JSON (the BENCH_robustness.json artifact)."""
+    import json
+
+    with open(path, "w") as f:
+        json.dump(to_robustness_dict(RECORDED_ROBUSTNESS_ROWS, smoke=SMOKE),
+                  f, indent=1, allow_nan=False)
 
 
 class Timer:

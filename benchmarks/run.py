@@ -11,8 +11,8 @@ import traceback
 
 from . import (bench_ablation, bench_dynamic, bench_dynamic_throughput,
                bench_fabric, bench_kernels, bench_param_variation,
-               bench_persistence, bench_roofline, bench_rotation,
-               bench_sched_time, bench_snapshots, bench_tct,
+               bench_persistence, bench_robustness, bench_roofline,
+               bench_rotation, bench_sched_time, bench_snapshots, bench_tct,
                bench_thresholds, bench_trace_throughput, common)
 
 ALL = {
@@ -30,6 +30,7 @@ ALL = {
     "roofline": bench_roofline,       # dry-run roofline summary
     "trace_throughput": bench_trace_throughput,  # fluid-engine backends @ 10k jobs
     "dynamic_throughput": bench_dynamic_throughput,  # event loops @ 10k-job trace
+    "robustness": bench_robustness,   # imperfect telemetry + fault injection
 }
 
 
@@ -56,6 +57,10 @@ def main() -> None:
                     help="write the event-loop dynamic-throughput rows as "
                          "schema-versioned JSON (CI nightly: "
                          "BENCH_dynamic_throughput.json)")
+    ap.add_argument("--robustness-out", default=None, metavar="PATH",
+                    help="write the graceful-degradation rows as "
+                         "schema-versioned JSON (CI: BENCH_robustness.json, "
+                         "validated by scripts/validate_bench.py)")
     ap.add_argument("--workers", type=int, default=1, metavar="N",
                     help="fan independent sweep cells over N workers "
                          "(results identical to serial; default 1)")
@@ -103,6 +108,11 @@ def main() -> None:
         common.write_dynamic_throughput(args.dynamic_out)
         print(f"# wrote {len(common.RECORDED_DYNAMIC_ROWS)} "
               f"dynamic-throughput rows to {args.dynamic_out}",
+              file=sys.stderr)
+    if args.robustness_out:
+        common.write_robustness(args.robustness_out)
+        print(f"# wrote {len(common.RECORDED_ROBUSTNESS_ROWS)} "
+              f"robustness rows to {args.robustness_out}",
               file=sys.stderr)
     if failed:
         print(f"# FAILED benches: {failed}", file=sys.stderr)

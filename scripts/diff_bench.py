@@ -31,6 +31,11 @@ Gates per payload kind (sniffed from the files, which must match):
     quadratic legacy cost to show; the nightly full-trace job raises it),
     and every row's ``max_abs_err_vs_oracle`` must stay within
     ``--max-abs-err`` (default 1e-6).
+  * robustness (``BENCH_robustness.json``): runs are seeded and
+    deterministic, so every numeric field of every (axis, scenario,
+    policy, x) row must match within ``--rel-tol`` — the committed
+    baseline pins the whole graceful-degradation curve, including the
+    robust policy's shallower failure-axis slope.
 
 Exit 0 = no regression, 1 = regression(s) listed on stderr, 2 = usage.
 """
@@ -45,7 +50,7 @@ from typing import Any, Dict, Iterator, List, Tuple
 def _kind(doc: Any) -> str:
     if isinstance(doc, dict):
         if doc.get("kind") in ("timing", "trace_throughput",
-                               "dynamic_throughput"):
+                               "dynamic_throughput", "robustness"):
             return doc["kind"]
         if "sweeps" in doc:
             return "sweeps"
@@ -162,6 +167,31 @@ def diff_dynamic(base: Dict, cur: Dict, min_speedup: float,
     return problems
 
 
+def diff_robustness(base: Dict, cur: Dict, rel_tol: float) -> List[str]:
+    def rows(doc: Dict) -> Dict[Tuple[str, str, str, Any], Dict]:
+        return {(r.get("axis"), r.get("scenario"), r.get("policy"),
+                 r.get("x")): r for r in doc.get("rows", [])}
+
+    b, c = rows(base), rows(cur)
+    problems = []
+    for key in sorted(set(b) - set(c)):
+        problems.append(f"robustness row {key} present in baseline, "
+                        f"missing now")
+    for key in sorted(set(c) - set(b)):
+        print(f"note: new robustness row {key} (no baseline)",
+              file=sys.stderr)
+    for key in sorted(set(b) & set(c)):
+        rb, rc = b[key], c[key]
+        for field in sorted(set(rb) | set(rc)):
+            if field in ("axis", "scenario", "policy", "origin"):
+                continue
+            if not _close(rb.get(field), rc.get(field), rel_tol):
+                problems.append(f"robustness row {key}: {field} "
+                                f"{rb.get(field)!r} -> {rc.get(field)!r} "
+                                f"(rel tol {rel_tol})")
+    return problems
+
+
 def main(argv: List[str]) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("baseline")
@@ -203,6 +233,8 @@ def main(argv: List[str]) -> int:
     elif kb == "dynamic_throughput":
         problems = diff_dynamic(base, cur, args.min_dyn_speedup,
                                 args.max_abs_err)
+    elif kb == "robustness":
+        problems = diff_robustness(base, cur, args.rel_tol)
     else:
         problems = diff_trace(base, cur, args.min_speedup)
     if problems:

@@ -4,12 +4,14 @@
 Usage:  PYTHONPATH=src python scripts/validate_bench.py BENCH_sweep.json
         PYTHONPATH=src python scripts/validate_bench.py BENCH_sched_time.json
 
-Four payload kinds are recognized: experiment sweeps (``sweeps`` key,
+Five payload kinds are recognized: experiment sweeps (``sweeps`` key,
 the ``--sweep-out`` artifact), benchmark timing rows (``kind == "timing"``,
 the ``--bench-out`` artifact), fluid-engine trace-throughput rows
-(``kind == "trace_throughput"``, the ``--trace-out`` artifact), and
+(``kind == "trace_throughput"``, the ``--trace-out`` artifact),
 event-loop dynamic-throughput rows (``kind == "dynamic_throughput"``,
-the ``--dynamic-out`` artifact).  Exit 0 when the file matches
+the ``--dynamic-out`` artifact), and graceful-degradation rows
+(``kind == "robustness"``, the ``--robustness-out`` artifact).  Exit 0
+when the file matches
 ``repro.core.results.SCHEMA_VERSION``'s schema; exit 1 (listing every
 problem) on drift — CI runs this after the benchmark smoke so a
 silently-changed result format fails the build.
@@ -27,6 +29,7 @@ def main(argv) -> int:
     path = argv[1]
     from repro.core.results import (validate_bench_dict,
                                     validate_dynamic_throughput_dict,
+                                    validate_robustness_dict,
                                     validate_timing_dict,
                                     validate_trace_throughput_dict)
 
@@ -39,6 +42,8 @@ def main(argv) -> int:
         problems = validate_trace_throughput_dict(doc)
     elif kind == "dynamic_throughput":
         problems = validate_dynamic_throughput_dict(doc)
+    elif kind == "robustness":
+        problems = validate_robustness_dict(doc)
     else:
         problems = validate_bench_dict(doc)
     if problems:
@@ -67,6 +72,15 @@ def main(argv) -> int:
         print(f"{path}: OK — schema v{doc['schema_version']}, "
               f"dynamic_throughput, {len(rows)} rows, best array speedup "
               f"{best:.1f}x")
+        return 0
+    if kind == "robustness":
+        rows = doc.get("rows", [])
+        worst = max((r.get("degradation") or 0.0 for r in rows),
+                    default=0.0)
+        axes = sorted({r.get("axis", "") for r in rows})
+        print(f"{path}: OK — schema v{doc['schema_version']}, robustness, "
+              f"{len(rows)} rows over axes {axes}, worst degradation "
+              f"{worst:.2f}x")
         return 0
     n_sweeps = len(doc.get("sweeps", []))
     n_cells = sum(len(s.get("cells", [])) for s in doc.get("sweeps", []))

@@ -56,17 +56,24 @@ FINGERPRINT_SPECS = [
                                 "via materialize()"}),
         Binding("policies", "core/experiment.py", "Policy"),
         Binding("cfg", "core/simulator.py", "SimConfig"),
+        # SimConfig.telemetry nests the observation-channel dataclass;
+        # its distortion knobs are result-relevant and must be hashed by
+        # content too (a dataclasses-walking canonicalizer recurses)
+        Binding("cfg", "core/telemetry.py", "TelemetryChannel"),
     ]),
 ]
 
 # ------------------------------------------------------ PlanCache knob specs
 _SOLVER_KNOBS = {"mode", "demand", "rotation_mode", "di_pre", "g_t_ms",
                  "e_t_frac"}
+# link capacity is a mutable input since fault injection (LinkFailure
+# zeroes it mid-run, recovery restores it): a memo key omitting it would
+# serve a pre-failure scheme on the post-failure link
 KNOB_SPECS = [
-    ("core/rotation.py", "solve_link", _SOLVER_KNOBS),
-    ("core/rotation.py", "solve_link_batch", _SOLVER_KNOBS),
+    ("core/rotation.py", "solve_link", _SOLVER_KNOBS | {"cap"}),
+    ("core/rotation.py", "solve_link_batch", _SOLVER_KNOBS | {"cap"}),
     ("core/rotation.py", "_build_joint_problem",
-     _SOLVER_KNOBS | {"backend", "max_exhaustive"}),
+     _SOLVER_KNOBS | {"backend", "max_exhaustive", "caps", "bw_lp"}),
 ]
 
 

@@ -20,7 +20,8 @@ import dataclasses
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.cluster import Cluster, make_fabric_cluster, make_testbed_cluster
-from repro.core.events import BackgroundFlowChange, Event, LinkCapacityChange
+from repro.core.events import (BackgroundFlowChange, Event,
+                               LinkCapacityChange, flapping_schedule)
 from repro.core.experiment import Scenario
 from repro.core.simulator import BackgroundFlow, SimConfig
 from repro.core.topology import uplink_id
@@ -254,6 +255,39 @@ def make_dynamic_snapshot(
     return cluster, wls, bg, events
 
 
+def make_fault_snapshot(
+    sid: str, n_iterations: int = 400, start_ms: float = 15_000.0,
+    period_ms: float = 20_000.0, down_ms: float = 2_000.0, n_cycles: int = 3,
+) -> Tuple[Cluster, List[Workload], List[BackgroundFlow], List[Event]]:
+    """Fault-injection snapshots (DESIGN.md section 19): a static snapshot
+    plus an alternating failure/recovery train (:func:`flapping_schedule`).
+
+      R1 (flapping uplink): the F4 trio with spine uplink ``uplink:leaf0``
+         failing outright (capacity AND allocatable -> 0) ``n_cycles``
+         times for ``down_ms`` each, one failure every ``period_ms``.
+         Cross-leaf flows stall on the dead uplink until recovery; the
+         controller must re-derive uplink schemes on every transition
+         (or, with hysteresis, sit the flap out).
+
+      R2 (flapping host): the S2 pair with ``worker-a30-1`` dying on the
+         same schedule — every job with a task on it stalls (flows
+         dropped, iteration abandoned) and restarts on recovery.
+    """
+    if sid == "R1":
+        cluster, wls, bg = make_snapshot("F4", n_iterations=n_iterations)
+        events = flapping_schedule(
+            uplink_id("leaf0"), start_ms=start_ms, period_ms=period_ms,
+            down_ms=down_ms, n_cycles=n_cycles)
+    elif sid == "R2":
+        cluster, wls, bg = make_snapshot("S2", n_iterations=n_iterations)
+        events = flapping_schedule(
+            "worker-a30-1", start_ms=start_ms, period_ms=period_ms,
+            down_ms=down_ms, n_cycles=n_cycles, host=True)
+    else:
+        raise ValueError(f"unknown fault snapshot {sid!r}")
+    return cluster, wls, bg, events
+
+
 # -------------------------------------------------- declarative scenarios
 # (Scenario/Policy experiment API, DESIGN.md section 14): the snapshot
 # builders above stay the single source of truth for compositions; these
@@ -294,6 +328,24 @@ class DynamicBuild:
             self.sid, n_iterations=self.n_iterations,
             amplitude=self.amplitude, t_on_ms=self.t_on_ms,
             t_off_ms=self.t_off_ms)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultBuild:
+    """Picklable ``Scenario.build`` of one fault snapshot (R1/R2)."""
+
+    sid: str
+    n_iterations: int = 400
+    start_ms: float = 15_000.0
+    period_ms: float = 20_000.0
+    down_ms: float = 2_000.0
+    n_cycles: int = 3
+
+    def __call__(self):
+        return make_fault_snapshot(
+            self.sid, n_iterations=self.n_iterations,
+            start_ms=self.start_ms, period_ms=self.period_ms,
+            down_ms=self.down_ms, n_cycles=self.n_cycles)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -349,6 +401,19 @@ def dynamic_scenario(sid: str, n_iterations: int = 400,
         sim_config=sim_config)
 
 
+def fault_scenario(sid: str, n_iterations: int = 400,
+                   start_ms: float = 15_000.0, period_ms: float = 20_000.0,
+                   down_ms: float = 2_000.0, n_cycles: int = 3,
+                   sim_config: Optional[SimConfig] = None) -> Scenario:
+    """Fault snapshot ``sid`` (R1/R2) with its failure/recovery train as an
+    offline Scenario (events fire mid-run on the simulator clock)."""
+    return Scenario(
+        name=sid,
+        build=FaultBuild(sid, n_iterations, start_ms, period_ms, down_ms,
+                         n_cycles),
+        sim_config=sim_config)
+
+
 def trace_scenario(trace: List[TraceJobSpec], *, time_scale: float = 1.0,
                    open_ended: bool = True,
                    cluster_factory: Optional[Callable[[], Cluster]] = None,
@@ -377,3 +442,5 @@ FABRIC_SNAPSHOTS = ("F2", "F4")
 JOINT_SNAPSHOTS = ("J1",)
 # beyond-paper dynamic snapshots (mid-run fluctuation; bench_dynamic.py)
 DYNAMIC_SNAPSHOTS = ("D1", "D2")
+# fault-injection snapshots (failure/recovery trains; bench_robustness.py)
+FAULT_SNAPSHOTS = ("R1", "R2")

@@ -363,6 +363,10 @@ class LinkView:
             for leaf in self.traversed_uplinks(job):
                 up = topo.uplinks[leaf]
                 d = group_demand_gbps(self.uplink_groups(leaf).get(job, []))
-                if up.alloc_bw > EPS:
-                    stretch = max(stretch, d / up.alloc_bw)
+                # read through the cluster's link API (not the raw Link
+                # object) so a TelemetryView proxy observes the uplink's
+                # allocatable share like every other consumer
+                alloc = self.cluster.link_alloc(up.id)
+                if alloc > EPS:
+                    stretch = max(stretch, d / alloc)
         return spec.compute_ms + spec.comm_ms * stretch

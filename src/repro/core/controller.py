@@ -69,6 +69,11 @@ class StopAndWaitController:
         phase_monitor: bool = False,
         reconfigure: bool = True,
         joint: bool = True,  # False = legacy uplink-wins reconciliation
+        hysteresis_ms: float = 0.0,
+        hysteresis_frac: float = 0.0,
+        reconcile: bool = False,
+        reconcile_frac: float = 0.25,
+        reconcile_window: int = 8,
     ) -> None:
         self.a_t = a_t
         self.o_t = o_t
@@ -77,6 +82,27 @@ class StopAndWaitController:
         # background changes by re-deriving schemes; False = ablation
         self.reconfigure = reconfigure
         self.reconf_count = 0
+        # degradation control (DESIGN.md section 19): debounce the
+        # reconfiguration loop so sampled/noisy telemetry cannot trigger
+        # replan storms.  A link change is acted on only if at least
+        # ``hysteresis_ms`` passed since its last acted-on change AND the
+        # observed allocatable share moved by more than
+        # ``hysteresis_frac`` x capacity since then.  Both 0 (default)
+        # = the seed behavior: every reported change replans.
+        self.hysteresis_ms = hysteresis_ms
+        self.hysteresis_frac = hysteresis_frac
+        self.suppressed_reconf_count = 0
+        self._last_reconf_ms: Dict[str, float] = {}
+        self._reconf_alloc: Dict[str, float] = {}
+        # measured-vs-declared demand reconciliation: when a job's
+        # measured comm time drifts off its declared profile by more than
+        # ``reconcile_frac`` (median over ``reconcile_window``
+        # iterations), adopt the measurement as the new declared profile
+        self.reconcile = reconcile
+        self.reconcile_frac = reconcile_frac
+        self.reconcile_window = reconcile_window
+        self.reconcile_count = 0
+        self._measured_comm: Dict[str, collections.deque] = {}
         self.joint = joint
         self.joint_resolve_count = 0  # components re-solved jointly
         # epoch-scoped memo for the joint re-solves of offset resolution
@@ -244,7 +270,8 @@ class StopAndWaitController:
 
     # -------------------------------------------------------- reconfiguration
     def on_link_change(self, registry: TaskRegistry, cluster: Cluster,
-                       link_id: str) -> int:
+                       link_id: str, *,
+                       now_ms: Optional[float] = None) -> int:
         """Dynamic reconfiguration (paper section III-C): the monitor reports
         that ``link_id``'s capacity/background conditions changed.
 
@@ -259,10 +286,40 @@ class StopAndWaitController:
         re-derived scheme too: when the new per-link solution disagrees
         with the schemes of other links the jobs traverse, the component is
         re-solved jointly.  Returns the number of schemes re-derived (0
-        when reconfiguration is disabled or no scheme lives on the link)."""
+        when reconfiguration is disabled, no scheme lives on the link,
+        the link is observed dead, or the hysteresis gate suppressed the
+        change).
+
+        ``cluster`` may be a :class:`~repro.core.telemetry.TelemetryView`
+        proxy — the replan then works from the *observed* allocatable
+        share; ``now_ms`` (the simulator clock) arms the hysteresis
+        gate: changes within ``hysteresis_ms`` of the last acted-on
+        change, or moving the observed share by no more than
+        ``hysteresis_frac`` x capacity since then, are counted in
+        ``suppressed_reconf_count`` and ignored."""
         state = self.links.get(link_id)
         if not self.reconfigure or state is None:
             return 0
+        alloc = cluster.link_alloc(link_id)
+        if alloc <= 1e-9:
+            # link (observed) dead: there is no bandwidth to plan a
+            # rotation against — flows are rate-0 regardless; the
+            # recovery event replans and re-baselines
+            return 0
+        if now_ms is not None and (self.hysteresis_ms > 0.0
+                                   or self.hysteresis_frac > 0.0):
+            last_t = self._last_reconf_ms.get(link_id)
+            if last_t is not None and now_ms - last_t < self.hysteresis_ms:
+                self.suppressed_reconf_count += 1
+                return 0
+            ref = self._reconf_alloc.get(link_id)
+            if ref is not None:
+                cap = max(cluster.link_capacity(link_id), 1e-9)
+                if abs(alloc - ref) <= self.hysteresis_frac * cap:
+                    self.suppressed_reconf_count += 1
+                    return 0
+            self._last_reconf_ms[link_id] = now_ms
+            self._reconf_alloc[link_id] = alloc
         if link_id not in self.pending_recalc:
             self.pending_recalc.append(link_id)
         affected = list(state.scheme.jobs)
@@ -387,6 +444,34 @@ class StopAndWaitController:
         return actions
 
     # ----------------------------------------------------- traffic-change path
+    def reconcile_measurement(self, job: str, measured_ms: float,
+                              declared_ms: float) -> Optional[float]:
+        """Measured-vs-declared demand reconciliation (DESIGN.md sec. 19).
+
+        The node agent reports each iteration's measured comm duration;
+        when the median over ``reconcile_window`` reports deviates from
+        the declared comm time by more than ``reconcile_frac``, return
+        the median as the new declared comm time (the caller rewrites
+        the profile and replans via ``report_traffic_change``).  Returns
+        None while the evidence is insufficient.  The median over a full
+        window is deliberately sluggish: transient contention stretches
+        individual comm phases without representing a profile change."""
+        if not self.reconcile or declared_ms <= 0.0:
+            return None
+        hist = self._measured_comm.get(job)
+        if hist is None or hist.maxlen != self.reconcile_window:
+            hist = collections.deque(maxlen=self.reconcile_window)
+            self._measured_comm[job] = hist
+        hist.append(measured_ms)
+        if len(hist) < self.reconcile_window:
+            return None
+        med = float(np.median(list(hist)))
+        if abs(med - declared_ms) <= self.reconcile_frac * declared_ms:
+            return None
+        hist.clear()
+        self.reconcile_count += 1
+        return med
+
     def report_traffic_change(self, registry: TaskRegistry, cluster: Cluster,
                               job: str, new_spec: TrafficSpec) -> None:
         """Duty-cycle / period change (batch-size change, congestion onset):
@@ -414,6 +499,8 @@ class StopAndWaitController:
         self.run_offline_recalculation(registry, cluster)
         if job in self._history:
             self._history[job].clear()
+        # measured-comm evidence referred to the OLD declared profile
+        self._measured_comm.pop(job, None)
         # baseline must track the new traffic
         tasks = view.job_tasks(job)
         if tasks:

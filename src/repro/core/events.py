@@ -22,11 +22,24 @@ Event types:
     the physical capacity, e.g. a degraded uplink).
   * :class:`JobDeparture` — a job leaves the cluster early (user abort /
     preemption); its flows vanish and its rotation schemes are retired.
+  * :class:`LinkFailure` / :class:`LinkRecovery` — fault injection
+    (DESIGN.md section 19): a link's capacity AND allocatable share drop
+    to 0 and are later restored; :func:`flapping_schedule` builds the
+    alternating failure/recovery trains used by the robustness bench.
+  * :class:`HostFailure` / :class:`HostRecovery` — a worker node dies:
+    its host link fails and every job with a task on it stalls (flows
+    dropped); on recovery stalled jobs restart their interrupted
+    iteration (pending re-admission).
+
+Streams are validated at the ``run()`` boundary by
+:func:`validate_stream`; ``SimConfig.strict_events`` escalates problems
+from warn-once-and-drop to a structured :class:`EventValidationError`.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+import math
+from typing import List, Optional, Sequence, Set, Tuple
 
 
 class UnknownEventTargetWarning(UserWarning):
@@ -58,10 +71,18 @@ class Event:
 @dataclasses.dataclass(frozen=True)
 class TrafficChange(Event):
     """Job ``job`` multiplies its communication duty by ``duty_mult``
-    (clipped so the comm phase never exceeds the period)."""
+    (clipped so the comm phase never exceeds the period).
+
+    ``declared=True`` (the seed behavior) models the job *announcing* the
+    change: the profile is updated and the controller replans from it.
+    ``declared=False`` models silent drift — the job's actual traffic
+    changes but its declared profile does not, so only the controller's
+    measured-vs-declared reconciliation (``reconcile=True``) can close
+    the gap."""
 
     job: str
     duty_mult: float
+    declared: bool = True
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,6 +118,172 @@ class JobDeparture(Event):
     remaining iterations (user abort / preemption)."""
 
     job: str
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkFailure(Event):
+    """Link ``link`` fails outright: physical capacity and allocatable
+    share both drop to 0 until a :class:`LinkRecovery`.  Failing an
+    already-failed link is a no-op (flapping schedules may overlap)."""
+
+    link: str
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkRecovery(Event):
+    """Link ``link`` comes back.  By default the pre-failure capacity and
+    allocatable share are restored; ``capacity_gbps`` recovers at a
+    degraded physical capacity instead.  Recovering a link that is not
+    failed is a no-op."""
+
+    link: str
+    capacity_gbps: Optional[float] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class HostFailure(Event):
+    """Worker node ``host`` dies: its host link fails and every job with
+    a task placed on it stalls (in-flight flows drop, the interrupted
+    iteration is abandoned) until every failed host of the job has
+    recovered."""
+
+    host: str
+
+
+@dataclasses.dataclass(frozen=True)
+class HostRecovery(Event):
+    """Worker node ``host`` returns: its host link recovers and jobs
+    stalled only on it restart their interrupted iteration."""
+
+    host: str
+
+
+def flapping_schedule(link: str, *, start_ms: float, period_ms: float,
+                      down_ms: float, n_cycles: int,
+                      host: bool = False) -> List[Event]:
+    """An alternating failure/recovery train: ``n_cycles`` failures of
+    ``down_ms`` each, one every ``period_ms`` starting at ``start_ms``.
+    ``host=True`` emits host failures instead of link failures."""
+    if down_ms >= period_ms:
+        raise ValueError("down_ms must be < period_ms (link must recover "
+                         "before the next failure)")
+    events: List[Event] = []
+    for i in range(n_cycles):
+        t = start_ms + i * period_ms
+        if host:
+            events.append(HostFailure(time_ms=t, host=link))
+            events.append(HostRecovery(time_ms=t + down_ms, host=link))
+        else:
+            events.append(LinkFailure(time_ms=t, link=link))
+            events.append(LinkRecovery(time_ms=t + down_ms, link=link))
+    return events
+
+
+# ------------------------------------------------- boundary validation
+@dataclasses.dataclass(frozen=True)
+class EventProblem:
+    """One defect found by :func:`validate_stream`.
+
+    ``category`` is ``'bad-value'`` (malformed numbers: NaN times/rates,
+    negative capacities) or ``'unknown-target'`` (the event names a
+    link/host/job the simulator does not know)."""
+
+    index: int  # position in the (normalized) stream
+    category: str
+    kind: str  # 'link' | 'host' | 'job' | 'event'
+    name: str
+    time_ms: float
+    message: str
+
+
+class EventValidationError(ValueError):
+    """Raised by ``run(strict_events=True)`` when the event stream has
+    problems; carries the full structured list."""
+
+    def __init__(self, problems: Sequence[EventProblem]) -> None:
+        self.problems = list(problems)
+        lines = "\n".join(f"  - [{p.category}] {p.message}"
+                          for p in self.problems)
+        super().__init__(
+            f"event stream has {len(self.problems)} problem(s):\n{lines}")
+
+
+def _bad(v: Optional[float]) -> bool:
+    return v is not None and not math.isfinite(float(v))
+
+
+def validate_stream(events: Sequence[Event], *, known_links: Set[str],
+                    known_hosts: Set[str],
+                    known_jobs: Set[str]) -> List[EventProblem]:
+    """Check a normalized stream against the simulator's world.
+
+    Returns every problem found (empty list == valid).  The caller
+    decides severity: ``strict_events=True`` raises
+    :class:`EventValidationError` on any problem; the default mode
+    warn-onces and drops only ``bad-value`` events (unknown targets keep
+    the historical fire-time :class:`UnknownEventTargetWarning` path)."""
+    problems: List[EventProblem] = []
+
+    def add(i: int, category: str, kind: str, name: str, t: float,
+            msg: str) -> None:
+        problems.append(EventProblem(index=i, category=category, kind=kind,
+                                     name=name, time_ms=t, message=msg))
+
+    for i, ev in enumerate(events):
+        t = ev.time_ms
+        if _bad(t) or t < 0:
+            add(i, "bad-value", "event", type(ev).__name__, t,
+                f"{type(ev).__name__} at index {i} has invalid "
+                f"time_ms={t!r}")
+            continue
+        if isinstance(ev, TrafficChange):
+            if _bad(ev.duty_mult) or ev.duty_mult <= 0:
+                add(i, "bad-value", "job", ev.job, t,
+                    f"TrafficChange({ev.job!r}) at t={t:g}ms has invalid "
+                    f"duty_mult={ev.duty_mult!r}")
+            elif ev.job not in known_jobs:
+                add(i, "unknown-target", "job", ev.job, t,
+                    f"TrafficChange targets unknown job {ev.job!r}")
+        elif isinstance(ev, BackgroundFlowChange):
+            if _bad(ev.rate_gbps):
+                add(i, "bad-value", "link", ev.link, t,
+                    f"BackgroundFlowChange({ev.link!r}) at t={t:g}ms has "
+                    f"NaN/inf rate_gbps")
+            elif ev.link not in known_links:
+                add(i, "unknown-target", "link", ev.link, t,
+                    f"BackgroundFlowChange targets unknown link "
+                    f"{ev.link!r}")
+        elif isinstance(ev, LinkCapacityChange):
+            if _bad(ev.allocatable_gbps) or _bad(ev.capacity_gbps) or \
+                    (ev.allocatable_gbps is not None
+                     and ev.allocatable_gbps < 0) or \
+                    (ev.capacity_gbps is not None and ev.capacity_gbps < 0):
+                add(i, "bad-value", "link", ev.link, t,
+                    f"LinkCapacityChange({ev.link!r}) at t={t:g}ms has "
+                    f"negative/NaN capacity "
+                    f"(allocatable={ev.allocatable_gbps!r}, "
+                    f"capacity={ev.capacity_gbps!r})")
+            elif ev.link not in known_links:
+                add(i, "unknown-target", "link", ev.link, t,
+                    f"LinkCapacityChange targets unknown link {ev.link!r}")
+        elif isinstance(ev, (LinkFailure, LinkRecovery)):
+            cap = getattr(ev, "capacity_gbps", None)
+            if _bad(cap) or (cap is not None and cap < 0):
+                add(i, "bad-value", "link", ev.link, t,
+                    f"{type(ev).__name__}({ev.link!r}) at t={t:g}ms has "
+                    f"negative/NaN capacity_gbps={cap!r}")
+            elif ev.link not in known_links:
+                add(i, "unknown-target", "link", ev.link, t,
+                    f"{type(ev).__name__} targets unknown link {ev.link!r}")
+        elif isinstance(ev, (HostFailure, HostRecovery)):
+            if ev.host not in known_hosts:
+                add(i, "unknown-target", "host", ev.host, t,
+                    f"{type(ev).__name__} targets unknown host {ev.host!r}")
+        elif isinstance(ev, JobDeparture):
+            if ev.job not in known_jobs:
+                add(i, "unknown-target", "job", ev.job, t,
+                    f"JobDeparture targets unknown job {ev.job!r}")
+    return problems
 
 
 LegacyTrafficChange = Tuple[float, str, float]

@@ -39,6 +39,7 @@ from .framework import SchedulerPlugin, SchedulingFramework
 from .results import ExperimentResult, SweepCell, SweepResult
 from .scheduler import MetronomePlugin
 from .simulator import BackgroundFlow, ClusterSimulator, SimConfig, SimResult
+from .telemetry import TelemetryView
 from .workload import Job, Workload
 
 OFFLINE, TRACE = "offline", "trace"
@@ -256,7 +257,14 @@ def run(scenario: Scenario, policy: Policy,
 
     cl = cluster.copy()
     plugin, controller = build_scheduler(policy)
-    fw = SchedulingFramework(cl, plugin)
+    # Imperfect-information control plane (DESIGN.md section 19): when the
+    # config carries a telemetry channel, EVERY control-plane read — Score/
+    # Filter inside the framework, the controller's offline recalculation,
+    # and the simulator's reconfiguration callbacks — observes link state
+    # through one shared TelemetryView; the fluid physics keeps the truth.
+    tel = (TelemetryView(cl, config.telemetry, seed=config.seed)
+           if config.telemetry is not None else None)
+    fw = SchedulingFramework(cl if tel is None else tel, plugin)
 
     if scenario.mode == OFFLINE:
         accepted, rejected = [], []
@@ -268,10 +276,11 @@ def run(scenario: Scenario, policy: Policy,
                 if ok:
                     jobs.append(j)
         if controller is not None and not policy.skip_third_stage:
-            controller.run_offline_recalculation(fw.registry, cl)
+            controller.run_offline_recalculation(
+                fw.registry, cl if tel is None else tel)
         sim = ClusterSimulator(
             cl, jobs, config, controller=controller, background=background,
-            registry=fw.registry, events=events,
+            registry=fw.registry, events=events, telemetry=tel,
         )
         res = sim.run()
         placements = {j.name: j.nodes_used() for j in jobs}
@@ -280,6 +289,7 @@ def run(scenario: Scenario, policy: Policy,
             cl, [], config, controller=controller, background=background,
             registry=fw.registry, framework=fw, arrivals=workloads,
             events=events, offline_recalc=not policy.skip_third_stage,
+            telemetry=tel,
         )
         res = sim.run()
         accepted = list(sim.jobs)
@@ -295,6 +305,10 @@ def run(scenario: Scenario, policy: Policy,
 def _run_ideal(cluster: Cluster, workloads: Sequence[Workload],
                config: SimConfig):
     """Each job on a dedicated cluster: no contention, no shared links."""
+    if config.telemetry is not None:
+        # the dedicated-cluster reference is a STATIC contention-free bound;
+        # observing it through a noisy channel would make it non-ideal
+        config = dataclasses.replace(config, telemetry=None)
     merged_durations: Dict[str, List[float]] = {}
     per_1000: Dict[str, float] = {}
     finish: Dict[str, float] = {}

@@ -66,6 +66,8 @@ def sim_to_dict(sim: SimResult, include_durations: bool = True) -> Dict[str, Any
         "total_completion_ms": _f(sim.total_completion_ms),
         "iterations_done": {k: int(v) for k, v in sim.iterations_done.items()},
         "reconfigurations": int(sim.reconfigurations),
+        "suppressed_reconfigurations": int(sim.suppressed_reconfigurations),
+        "reconciliations": int(sim.reconciliations),
         "mean_iter_ms": {j: _f(sim.mean_iter_ms(j)) for j in sim.durations_ms},
     }
     if include_durations:
@@ -88,6 +90,9 @@ def sim_from_dict(d: Mapping[str, Any]) -> SimResult:
         total_completion_ms=_unf(d["total_completion_ms"]),
         iterations_done={k: int(v) for k, v in d["iterations_done"].items()},
         reconfigurations=int(d.get("reconfigurations", 0)),
+        suppressed_reconfigurations=int(
+            d.get("suppressed_reconfigurations", 0)),
+        reconciliations=int(d.get("reconciliations", 0)),
     )
 
 
@@ -480,12 +485,125 @@ def validate_dynamic_throughput_dict(doc: Mapping[str, Any]) -> List[str]:
     return problems
 
 
+ROBUSTNESS_AXES = ("noise", "staleness", "failure", "trace")
+
+
+def to_robustness_dict(rows: Sequence[Mapping[str, Any]], *,
+                       smoke: bool = False) -> Dict[str, Any]:
+    """The ``BENCH_robustness.json`` payload: graceful-degradation curves
+    under an imperfect-information control plane
+    (``benchmarks/bench_robustness.py``, DESIGN.md section 19).
+
+    One row per (axis, scenario, policy, x) point, seed-averaged.  ``axis``
+    names the swept distortion (``noise`` = telemetry noise_std,
+    ``staleness`` = telemetry staleness_ms, ``failure`` = flapping-cycle
+    count, ``trace`` = noise_std on an online trace); ``x`` its value.
+    ``degradation`` is the job-mean time-per-1000-iterations ratio against
+    the same (axis, scenario, policy) group's ``x == 0`` anchor — 1.0 at
+    the anchor by construction, and the acceptance criterion is that the
+    robust policy's curve stays monotone-ish and SHALLOWER than the
+    oracle-assuming ablation's.  The controller diagnostics
+    (``readjustments``/``reconfigurations``/``suppressed_reconfigurations``/
+    ``reconciliations``) record WHY: suppressed replans and adopted
+    reconciliations are the degradation-control machinery firing."""
+    out = []
+    for r in rows:
+        out.append(
+            {"axis": str(r["axis"]),
+             "scenario": str(r["scenario"]),
+             "policy": str(r["policy"]),
+             "x": _f(float(r["x"])),
+             "seeds": int(r["seeds"]),
+             "t1000_mean_s": _f(float(r["t1000_mean_s"])),
+             "t1000_hi_s": _f(float(r["t1000_hi_s"])),
+             "t1000_lo_s": _f(float(r["t1000_lo_s"])),
+             "degradation": _f(float(r["degradation"])),
+             "readjustments": _f(float(r["readjustments"])),
+             "reconfigurations": _f(float(r["reconfigurations"])),
+             "suppressed_reconfigurations": _f(
+                 float(r["suppressed_reconfigurations"])),
+             "reconciliations": _f(float(r["reconciliations"])),
+             "origin": str(r.get("origin", ""))})
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "generated_by": "benchmarks.run",
+        "kind": "robustness",
+        "smoke": bool(smoke),
+        "rows": out,
+    }
+
+
+def validate_robustness_dict(doc: Mapping[str, Any]) -> List[str]:
+    """Schema check of a robustness payload; empty list == valid."""
+    problems: List[str] = []
+    if not isinstance(doc, Mapping):
+        return ["top level is not an object"]
+    if doc.get("schema_version") != SCHEMA_VERSION:
+        problems.append(f"schema_version {doc.get('schema_version')!r} != "
+                        f"{SCHEMA_VERSION}")
+    if doc.get("kind") != "robustness":
+        problems.append(f"kind {doc.get('kind')!r} != 'robustness'")
+    rows = doc.get("rows")
+    if not isinstance(rows, list):
+        problems.append("'rows' missing or not a list")
+        return problems
+    if not rows:
+        problems.append("'rows' is empty — no degradation curve was run")
+    policies = set()
+    anchors = set()
+    groups = set()
+    for ri, row in enumerate(rows):
+        where = f"rows[{ri}]"
+        if not isinstance(row, Mapping):
+            problems.append(f"{where} is not an object")
+            continue
+        for key in ("axis", "scenario", "policy", "origin"):
+            if not isinstance(row.get(key), str):
+                problems.append(f"{where}.{key} missing or not a string")
+        if row.get("axis") not in ROBUSTNESS_AXES:
+            problems.append(f"{where}.axis {row.get('axis')!r} not in "
+                            f"{ROBUSTNESS_AXES}")
+        v = row.get("seeds")
+        if not isinstance(v, int) or isinstance(v, bool) or v < 1:
+            problems.append(f"{where}.seeds missing or not a positive int")
+        for key in ("x", "t1000_mean_s", "degradation", "readjustments",
+                    "reconfigurations", "suppressed_reconfigurations",
+                    "reconciliations"):
+            v = row.get(key)
+            if not isinstance(v, (int, float)) or isinstance(v, bool):
+                problems.append(f"{where}.{key} missing or not a number")
+        for key in ("t1000_hi_s", "t1000_lo_s"):
+            # null (NaN) is legitimate: a scenario may have no jobs of
+            # that priority class with measured iterations
+            v = row.get(key)
+            if v is not None and (not isinstance(v, (int, float))
+                                  or isinstance(v, bool)):
+                problems.append(f"{where}.{key} not a number or null")
+        policies.add(row.get("policy"))
+        group = (row.get("axis"), row.get("scenario"), row.get("policy"))
+        groups.add(group)
+        if row.get("x") == 0.0:
+            anchors.add(group)
+            deg = row.get("degradation")
+            if isinstance(deg, (int, float)) and abs(deg - 1.0) > 1e-9:
+                problems.append(
+                    f"{where}: x == 0 anchor has degradation {deg!r} != 1.0")
+    if rows and len(policies) < 2:
+        problems.append("fewer than 2 policies — the degradation curve has "
+                        "no ablation to compare against")
+    for g in sorted(groups - anchors):
+        problems.append(f"group {g} has no x == 0 anchor row — its "
+                        "degradation ratios are unanchored")
+    return problems
+
+
 _CELL_RESULT_KEYS = ("scenario", "policy", "scheduler", "accepted",
                      "rejected", "placements", "high_priority",
                      "low_priority", "sim")
 _SIM_KEYS = ("time_per_1000_iters_s", "link_utilization",
              "avg_bw_utilization", "readjustments", "finish_times_ms",
              "total_completion_ms", "iterations_done", "reconfigurations",
+             "suppressed_reconfigurations", "reconciliations",
              "mean_iter_ms")
 
 

@@ -35,6 +35,17 @@ PERFECT = 100.0
 # dependency-loop cap at 99.0) always dominates the choice.
 RACK_LOCALITY_PENALTY = 0.5
 
+# Reconfiguration-aware Score penalty (DESIGN.md section 19): when the
+# control plane observes through a telemetry channel, candidates whose
+# traversed links show high observed fluctuation (EWMA coefficient of
+# variation, ``TelemetryView.fluctuation``) are demoted — placing onto a
+# flapping link invites reconfiguration churn.  The penalty is the worst
+# traversed link's CV times this scale, so a 10%-CV link costs as much as
+# the rack-locality preference; with an oracle cluster (no telemetry
+# proxy) the penalty is identically 0.0 and scores are bit-for-bit the
+# seed's.
+FLUCTUATION_PENALTY_SCALE = 5.0
+
 
 @dataclasses.dataclass
 class ReserveMessage:
@@ -255,7 +266,8 @@ class MetronomePlugin(SchedulerPlugin):
             # placements before any uplink rotation is even needed
             ctx.cache.setdefault("early", {})[node_name] = True
             rot_scores[node_name] = PERFECT
-            return PERFECT - self._rack_penalty(view, pod)
+            return (PERFECT - self._rack_penalty(view, pod)
+                    - self._fluct_penalty(cluster, view, pod, node_name))
 
         # cross-link dependency loop: the per-link rotations cannot be made
         # globally consistent by offset translation alone.  With the joint
@@ -289,7 +301,9 @@ class MetronomePlugin(SchedulerPlugin):
         # the raw rotation score drives SkipPhaseThree (Reserve); the rack
         # penalty only demotes the NODE choice
         rot_scores[node_name] = float(worst)
-        return float(max(0.0, worst - self._rack_penalty(view, pod)))
+        return float(max(0.0, worst - self._rack_penalty(view, pod)
+                         - self._fluct_penalty(cluster, view, pod,
+                                               node_name)))
 
     def score_nodes(self, ctx: ScheduleContext, cluster: Cluster, pod: Task,
                     nodes: List[str],
@@ -366,6 +380,21 @@ class MetronomePlugin(SchedulerPlugin):
                 g_t_ms=self.g_t_ms, e_t_frac=self.e_t_frac,
                 cache=self.plan_cache,
             )
+
+    def _fluct_penalty(self, cluster: Cluster, view: LinkView, pod: Task,
+                       node_name: str) -> float:
+        """Reconfiguration-aware Score penalty: worst observed-fluctuation
+        CV over the links the candidate placement would traverse, scaled
+        by ``FLUCTUATION_PENALTY_SCALE``.  Exactly 0.0 on a plain
+        :class:`Cluster` (no ``fluctuation`` history — the oracle path),
+        so the seed's scores are untouched bit-for-bit."""
+        fluct = getattr(cluster, "fluctuation", None)
+        if fluct is None:
+            return 0.0
+        worst = 0.0
+        for l in self._candidate_links(cluster, view, pod, node_name):
+            worst = max(worst, fluct(l))
+        return FLUCTUATION_PENALTY_SCALE * min(1.0, worst)
 
     def _rack_penalty(self, view: LinkView, pod: Task) -> float:
         """Rack-locality Score bonus (inverted as a penalty): demote

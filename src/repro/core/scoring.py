@@ -88,6 +88,10 @@ def score_combos(
             rolled = patterns[i][roll_index(s)[combos[:, i] % s]]
         total += bw[i] * rolled
     ex = np.sum(np.maximum(total - capacity, 0.0), axis=1)
+    if capacity <= 0.0:
+        # a dead link (fault injection, DESIGN.md section 19) admits
+        # nothing: every scheme scores 0, and 0/0 must not leak NaN
+        return np.zeros(k, dtype=np.float64)
     return np.maximum(0.0, 100.0 * (1.0 - ex / (capacity * s)))
 
 
@@ -156,7 +160,11 @@ def lex_block_scores(
     total -= capacities.reshape((m,) + (1,) * (nfree + 1))
     np.maximum(total, 0.0, out=total)
     ex = np.sum(total, axis=-1).reshape(m, -1)
-    scores = np.maximum(0.0, 100.0 * (1.0 - ex / (capacities[:, None] * s)))
+    with np.errstate(divide="ignore", invalid="ignore"):
+        scores = np.maximum(0.0,
+                            100.0 * (1.0 - ex / (capacities[:, None] * s)))
+    # dead links (capacity 0, fault injection) score 0, not inf/NaN
+    scores = np.where(capacities[:, None] > 0.0, scores, 0.0)
     return scores[0] if squeeze else scores
 
 

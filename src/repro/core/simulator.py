@@ -41,11 +41,14 @@ from .fluid import FluidEngine
 # rate-sharing primitives live in the backend-swappable fluid engine now;
 # re-exported here because they are part of the simulator's historical API
 from .fluid import _max_min_fair, _progressive_fill  # noqa: F401
+from .telemetry import TelemetryChannel, TelemetryView
 from .workload import HIGH, Job
 
 EPS = 1e-9
 
 COMPUTE, COMM, PAUSED, WAITING, DONE = "compute", "comm", "paused", "waiting", "done"
+# a job with a task on a failed host: inert until every failed host returns
+STALLED = "stalled"
 
 
 @dataclasses.dataclass
@@ -89,6 +92,17 @@ class SimConfig:
     event_loop: str = "array"
     # collect per-phase counters/timings into SimResult.profile
     profile: bool = False
+    # observation channel for the control plane (DESIGN.md section 19):
+    # None = oracle telemetry (the seed behavior, bit-for-bit); a
+    # TelemetryChannel routes every scheduler/controller read of
+    # allocatable bandwidth through sampled/noisy/stale observation
+    telemetry: Optional[TelemetryChannel] = None
+    # event-stream boundary validation: False (default) warn-onces and
+    # drops malformed-value events, keeping the historical fire-time
+    # UnknownEventTargetWarning for unknown targets; True raises a
+    # structured events.EventValidationError on ANY problem before the
+    # run starts
+    strict_events: bool = False
 
 
 @dataclasses.dataclass
@@ -157,6 +171,13 @@ class JobState:
     # order) and the flow-table slots of the current comm phase
     index: int = -1
     flow_slots: Optional[np.ndarray] = None
+    # fault injection / drift (DESIGN.md section 19): failed hosts this
+    # job has tasks on (non-empty <=> STALLED); silent multiplier on the
+    # job's ACTUAL comm time vs its declared profile; wall-clock start of
+    # the current comm phase (feeds measured-vs-declared reconciliation)
+    stall_hosts: Set[str] = dataclasses.field(default_factory=set)
+    drift_mult: float = 1.0
+    comm_start: float = 0.0
 
     @property
     def name(self) -> str:
@@ -174,6 +195,11 @@ class SimResult:
     total_completion_ms: float
     iterations_done: Dict[str, int]
     reconfigurations: int = 0  # controller reconfiguration ops (section III-C)
+    # degradation control (DESIGN.md section 19): link changes the
+    # hysteresis gate debounced, and measured-vs-declared profile
+    # reconciliations adopted
+    suppressed_reconfigurations: int = 0
+    reconciliations: int = 0
     profile: Optional[SimProfile] = None  # set when SimConfig.profile
 
     def mean_iter_ms(self, job: str) -> float:
@@ -187,7 +213,8 @@ class SimResult:
                 if topology.is_uplink(k)}
 
 
-_PHASE_CODE = {WAITING: 0, COMPUTE: 1, PAUSED: 2, COMM: 3, DONE: 4}
+_PHASE_CODE = {WAITING: 0, COMPUTE: 1, PAUSED: 2, COMM: 3, DONE: 4,
+               STALLED: 5}
 _COMM_CODE = _PHASE_CODE[COMM]
 
 
@@ -283,6 +310,7 @@ class ClusterSimulator:
         arrivals: Sequence = (),
         events: Sequence[events_mod.Event] = (),
         offline_recalc: bool = True,
+        telemetry: Optional[TelemetryView] = None,
     ) -> None:
         """``events``: typed dynamic-environment events (see ``events.py``);
         ``traffic_changes`` — legacy (time_ms, job, duty_multiplier) tuples —
@@ -295,10 +323,28 @@ class ClusterSimulator:
         ``offline_recalc=False`` skips the controller's third-stage offline
         recalculation after each online admission (the trace-mode analogue
         of ``Policy.skip_third_stage``).
+
+        ``telemetry``: a :class:`TelemetryView` proxy over ``cluster``.
+        The fluid physics always runs on the true cluster; every
+        controller interaction (reconfiguration, offline recalculation,
+        re-baselining) goes through the proxy so the control plane sees
+        only observed state.  ``None`` (with ``config.telemetry`` unset)
+        is oracle mode — the seed behavior, bit-for-bit.
         """
         self.cluster = cluster
         self.config = config
         self.controller = controller
+        if telemetry is None and config.telemetry is not None:
+            telemetry = TelemetryView(cluster, config.telemetry,
+                                      seed=config.seed)
+        self.telemetry = telemetry
+        # what the CONTROL PLANE reads: the observed proxy when a channel
+        # is configured, the true cluster otherwise
+        self._ctl_cluster = telemetry if telemetry is not None else cluster
+        # fault-injection state: failed link -> its pre-failure
+        # (capacity, allocatable) pair; currently-failed hosts
+        self._failed_links: Dict[str, Tuple[float, Optional[float]]] = {}
+        self._failed_hosts: Set[str] = set()
         self.offline_recalc = offline_recalc
         self.rng = np.random.default_rng(config.seed)
         self.jobs: Dict[str, JobState] = {}
@@ -397,7 +443,7 @@ class ClusterSimulator:
         if self.framework.schedule_workload(wl):
             if self.controller is not None and self.offline_recalc:
                 self.controller.run_offline_recalculation(
-                    self.framework.registry, self.cluster)
+                    self.framework.registry, self._ctl_cluster)
             for job in wl.jobs:
                 self._admit_job(job)
             # a new scheme may shift existing low-priority jobs
@@ -429,14 +475,16 @@ class ClusterSimulator:
             self._pending = still
 
     # --------------------------------------------------------------- traffic
-    def _make_flows(self, job: Job, spec) -> List[FlowState]:
+    def _make_flows(self, job: Job, comm_ms: float) -> List[FlowState]:
         """One flow per used host link; the path extends over the source
         leaf's uplink when the job spans leaves.  The flow specification
         (which links, how much demand) comes from the unified contention
-        layer — the simulator only adds volume (demand x comm time)."""
+        layer — the simulator only adds volume (demand x ACTUAL comm
+        time, which silent drift may have moved off the declared
+        profile)."""
         return [
             FlowState(job.name, fs.node, fs.demand_gbps,
-                      fs.demand_gbps * spec.comm_ms / 1e3, links=fs.links)
+                      fs.demand_gbps * comm_ms / 1e3, links=fs.links)
             for fs in self._flow_specs(job)
         ]
 
@@ -521,14 +569,14 @@ class ClusterSimulator:
     def _flow_specs(self, job: Job):
         return self._link_view.flows_for(job, cache_epoch=self.cluster.epoch)
 
-    def _start_comm_flows(self, st: JobState, spec) -> bool:
+    def _start_comm_flows(self, st: JobState, comm_ms: float) -> bool:
         """Create the job's comm-phase flows; False for single-node jobs.
 
         Array mode registers table slots keyed (job index, spec position) —
         the seed's flow iteration order — and marks the touched links dirty;
         legacy mode builds the historical FlowState objects."""
         if not self._array_mode:
-            st.flows = self._make_flows(st.job, spec)
+            st.flows = self._make_flows(st.job, comm_ms)
             return bool(st.flows)
         specs = self._flow_specs(st.job)
         if not specs:
@@ -537,7 +585,7 @@ class ClusterSimulator:
         slots = np.empty(len(specs), dtype=np.int64)
         unfinished = 0
         for k, fs in enumerate(specs):
-            remaining = fs.demand_gbps * spec.comm_ms / 1e3
+            remaining = fs.demand_gbps * comm_ms / 1e3
             slots[k] = tbl.add(st.index, k, fs.demand_gbps, remaining,
                                fs.links)
             if remaining > EPS:
@@ -603,9 +651,50 @@ class ClusterSimulator:
 
     # ------------------------------------------------------------- main loop
     def run(self) -> SimResult:
+        self._validate_events()
         if self._array_mode:
             return self._run_array()
         return self._run_legacy()
+
+    def _validate_events(self) -> None:
+        """Boundary validation of the event stream (DESIGN.md section 19).
+
+        ``strict_events=True``: any problem — malformed values OR unknown
+        targets — raises a structured ``EventValidationError`` before the
+        clock starts.  Default mode: malformed-value events (NaN rates,
+        negative capacities) are warn-onced and DROPPED (firing them
+        would corrupt the fluid state); unknown-target events keep the
+        historical fire-time ``UnknownEventTargetWarning`` path, so their
+        reported ``time_ms`` stays the firing time."""
+        if not self._events:
+            return
+        known_jobs = set(self.jobs)
+        for _, _, wl in self._arrivals:
+            known_jobs.update(j.name for j in wl.jobs)
+        for wl in self._pending:
+            known_jobs.update(j.name for j in wl.jobs)
+        problems = events_mod.validate_stream(
+            list(self._events),
+            known_links=set(self.delivered_gb),
+            known_hosts=set(self.cluster.nodes),
+            known_jobs=known_jobs)
+        if not problems:
+            return
+        if self.config.strict_events:
+            raise events_mod.EventValidationError(problems)
+        drop = set()
+        for p in problems:
+            if p.category != "bad-value":
+                continue
+            drop.add(p.index)
+            key = ("value", f"{p.kind}:{p.name}")
+            if key not in self._warned:
+                self._warned.add(key)
+                warnings.warn(f"{p.message} — event dropped", UserWarning,
+                              stacklevel=3)
+        if drop:
+            self._events = collections.deque(
+                ev for i, ev in enumerate(self._events) if i not in drop)
 
     def _run_legacy(self) -> SimResult:
         """The pre-array per-object event loop, preserved verbatim: the
@@ -656,6 +745,8 @@ class ClusterSimulator:
                 for bg in self.background:
                     self.delivered_gb[bg.link_id] += bg.rate_gbps * dt / 1e3
             self.now = nxt
+            if self.telemetry is not None:
+                self.telemetry.now_ms = self.now
             if prof is not None:
                 t3 = perf()
                 prof.advance_s += t3 - t2
@@ -753,6 +844,8 @@ class ClusterSimulator:
                 for bg in self.background:
                     dv[link_index[bg.link_id]] += bg.rate_gbps * dt / 1e3
             self.now = nxt
+            if self.telemetry is not None:
+                self.telemetry.now_ms = self.now
             if prof is not None:
                 t3 = perf()
                 prof.advance_s += t3 - t2
@@ -908,13 +1001,22 @@ class ClusterSimulator:
     # -------------------------------------------------------- dynamic events
     def _apply_event(self, ev: events_mod.Event) -> None:
         if isinstance(ev, events_mod.TrafficChange):
-            self._apply_traffic_change(ev.job, ev.duty_mult)
+            self._apply_traffic_change(ev.job, ev.duty_mult,
+                                       declared=ev.declared)
         elif isinstance(ev, events_mod.BackgroundFlowChange):
             self._apply_bg_change(ev)
         elif isinstance(ev, events_mod.LinkCapacityChange):
             self._apply_capacity_change(ev)
         elif isinstance(ev, events_mod.JobDeparture):
             self._apply_departure(ev)
+        elif isinstance(ev, events_mod.LinkFailure):
+            self._apply_link_failure(ev)
+        elif isinstance(ev, events_mod.LinkRecovery):
+            self._apply_link_recovery(ev)
+        elif isinstance(ev, events_mod.HostFailure):
+            self._apply_host_failure(ev)
+        elif isinstance(ev, events_mod.HostRecovery):
+            self._apply_host_recovery(ev)
         else:  # pragma: no cover — defensive
             raise TypeError(f"unknown event {ev!r}")
 
@@ -975,7 +1077,124 @@ class ClusterSimulator:
                 and target.allocatable_gbps > getattr(target, cap_field)):
             target.allocatable_gbps = float(getattr(target, cap_field))
         self.cluster.bump_epoch()  # invalidate epoch-scoped planner caches
+        self._record_telemetry([ev.link])
         self._reconfigure_links([ev.link])
+
+    # ---------------------------------------------------- fault injection
+    def _link_target(self, link_id: str):
+        """(object, capacity-field) pair for any known link id."""
+        if link_id in self.cluster.nodes:
+            return self.cluster.node(link_id), "bw_gbps"
+        link = self.cluster.topology.link(link_id)
+        if link is None:
+            return None, ""
+        return link, "capacity_gbps"
+
+    def _fail_link(self, link_id: str) -> bool:
+        """Drop a link's capacity and allocatable share to 0, remembering
+        the pre-failure pair; False when already failed (flap overlap)."""
+        if link_id in self._failed_links:
+            return False
+        target, cap_field = self._link_target(link_id)
+        self._failed_links[link_id] = (getattr(target, cap_field),
+                                       target.allocatable_gbps)
+        setattr(target, cap_field, 0.0)
+        target.allocatable_gbps = 0.0
+        self._dirty_links.add(link_id)
+        self.cluster.bump_epoch()
+        self._record_telemetry([link_id])
+        return True
+
+    def _recover_link(self, link_id: str,
+                      capacity_gbps: Optional[float] = None) -> bool:
+        """Restore a failed link (optionally at a degraded physical
+        capacity); False when the link is not failed."""
+        saved = self._failed_links.pop(link_id, None)
+        if saved is None:
+            return False
+        cap, alloc = saved
+        if capacity_gbps is not None:
+            cap = float(capacity_gbps)
+            if alloc is not None:
+                alloc = min(alloc, cap)
+        target, cap_field = self._link_target(link_id)
+        setattr(target, cap_field, cap)
+        target.allocatable_gbps = alloc
+        self._dirty_links.add(link_id)
+        self.cluster.bump_epoch()
+        self._record_telemetry([link_id])
+        return True
+
+    def _apply_link_failure(self, ev: events_mod.LinkFailure) -> None:
+        if ev.link not in self.delivered_gb:
+            self._warn_unknown("link", ev.link)
+            return
+        if self._fail_link(ev.link):
+            self._reconfigure_links([ev.link])
+
+    def _apply_link_recovery(self, ev: events_mod.LinkRecovery) -> None:
+        if ev.link not in self.delivered_gb:
+            self._warn_unknown("link", ev.link)
+            return
+        if self._recover_link(ev.link, ev.capacity_gbps):
+            self._reconfigure_links([ev.link])
+
+    def _apply_host_failure(self, ev: events_mod.HostFailure) -> None:
+        """A worker dies: its host link fails and every job with a task
+        on it stalls — flows drop (their links' rates re-solve), the
+        interrupted iteration is abandoned, and the job stays inert (both
+        loops: STALLED never appears in next-event reductions) until
+        every failed host of the job recovers."""
+        host = ev.host
+        if host not in self.cluster.nodes:
+            self._warn_unknown("host", host)
+            return
+        if host in self._failed_hosts:
+            return
+        self._failed_hosts.add(host)
+        changed = self._fail_link(host)
+        for st in self.jobs.values():
+            if st.phase == DONE:
+                continue
+            if any(t.node == host for t in st.job.tasks):
+                st.stall_hosts.add(host)
+                if st.phase != STALLED:
+                    self._clear_flows(st)
+                    st.phase = STALLED
+                    st.phase_end = math.inf
+                    st.comm_extra_ms = 0.0
+                    self._sync_job(st)
+        if changed:
+            self._reconfigure_links([host])
+
+    def _apply_host_recovery(self, ev: events_mod.HostRecovery) -> None:
+        """The worker returns: the host link recovers and jobs stalled
+        only on it restart their interrupted iteration from its top
+        (pending re-admission: the aborted partial iteration is not
+        measured)."""
+        host = ev.host
+        if host not in self.cluster.nodes:
+            self._warn_unknown("host", host)
+            return
+        if host not in self._failed_hosts:
+            return
+        self._failed_hosts.discard(host)
+        changed = self._recover_link(host)
+        for st in self.jobs.values():
+            if host in st.stall_hosts:
+                st.stall_hosts.discard(host)
+                if not st.stall_hosts and st.phase == STALLED:
+                    st.phase = WAITING
+                    st.phase_end = max(self.now, st.start_time)
+                    self._sync_job(st)
+        if changed:
+            self._reconfigure_links([host])
+
+    def _record_telemetry(self, links: Sequence[str]) -> None:
+        """Feed a capacity mutation into the telemetry truth history so
+        samples taken later observe the value in force at sample time."""
+        if self.telemetry is not None:
+            self.telemetry.record_change(self.now, list(links))
 
     def _apply_departure(self, ev: events_mod.JobDeparture) -> None:
         st = self.jobs.get(ev.job)
@@ -1013,7 +1232,7 @@ class ClusterSimulator:
                 self.cluster.bump_epoch()
             if self.controller is not None:
                 self.controller.on_evict(t.node, t, registry=self.registry,
-                                         cluster=self.cluster)
+                                         cluster=self._ctl_cluster)
             if self.registry is not None:
                 self.registry.tasks.pop(t.uid, None)
                 self.registry.bump()
@@ -1030,25 +1249,37 @@ class ClusterSimulator:
             if link is not None:
                 link.allocatable_gbps = alloc
         self.cluster.bump_epoch()  # invalidate epoch-scoped planner caches
+        self._record_telemetry([link_id])
 
     def _reconfigure_links(self, link_ids: Sequence[str]) -> None:
         """The reconfiguration loop (paper section III-C): tell the
         controller which links changed; when it re-derives schemes, snap
-        low-priority jobs to the new offsets (high priority never pays)."""
+        low-priority jobs to the new offsets (high priority never pays).
+        The controller reads through ``_ctl_cluster`` — the telemetry
+        proxy when one is configured — and gets the clock so its
+        hysteresis gate can debounce."""
         if self.controller is None or self.registry is None:
             return
         n = 0
         for l in link_ids:
-            n += self.controller.on_link_change(self.registry, self.cluster, l)
+            n += self.controller.on_link_change(
+                self.registry, self._ctl_cluster, l, now_ms=self.now)
         if n:
             for name, st in self.jobs.items():
                 if st.phase != DONE and st.job.priority != HIGH:
                     self._apply_realign(name)
 
-    def _apply_traffic_change(self, jname: str, duty_mult: float) -> None:
+    def _apply_traffic_change(self, jname: str, duty_mult: float,
+                              declared: bool = True) -> None:
         st = self.jobs.get(jname)
         if st is None:
             self._warn_unknown("job", jname)
+            return
+        if not declared:
+            # silent drift: the job's ACTUAL comm volume/time changes but
+            # its declared profile (and the controller's plans) do not —
+            # only measured-vs-declared reconciliation can close the gap
+            st.drift_mult *= duty_mult
             return
         spec = st.job.traffic
         new_comm = min(spec.period_ms, spec.comm_ms * duty_mult)
@@ -1061,7 +1292,7 @@ class ClusterSimulator:
             self.registry.bump()  # stored tasks' traffic changed in place
         if self.controller is not None and self.registry is not None:
             self.controller.report_traffic_change(
-                self.registry, self.cluster, jname, new_spec
+                self.registry, self._ctl_cluster, jname, new_spec
             )
 
     def _step_job(self, st: JobState) -> None:
@@ -1087,13 +1318,19 @@ class ClusterSimulator:
                     for act in self.controller.report_phase_error(
                             job.name, err, period_eff):
                         self._apply_realign(act.job)
-            # start synchronized communication
-            has_flows = self._start_comm_flows(st, spec)
+            # start synchronized communication; silent drift moves the
+            # ACTUAL comm time off the declared profile (clipped at the
+            # period, like a declared change would be)
+            comm_ms = spec.comm_ms
+            if st.drift_mult != 1.0:
+                comm_ms = min(spec.period_ms, spec.comm_ms * st.drift_mult)
+            has_flows = self._start_comm_flows(st, comm_ms)
             st.comm_extra_ms = self._latency_penalty(job)
+            st.comm_start = self.now
             st.phase = COMM
             if not has_flows:
                 # single-node job: loopback sync takes the ideal comm time
-                st.phase_end = self.now + spec.comm_ms + st.comm_extra_ms
+                st.phase_end = self.now + comm_ms + st.comm_extra_ms
             else:
                 st.phase_end = math.inf
             self._sync_job(st)
@@ -1138,14 +1375,26 @@ class ClusterSimulator:
         st.durations_ms.append(dur)
         st.iter_index += 1
         job = st.job
-        if self.controller is not None and self.config.monitor:
+        ctl = self.controller
+        if ctl is not None and self.config.monitor:
             # the controller knows which pauses IT injected — report the
             # organic iteration time so its own actions don't re-trigger
             # the drift rule (a realign storm otherwise)
             organic = max(0.0, dur - st.pause_in_iter_ms)
-            actions = self.controller.report_iteration(job.name, organic)
+            actions = ctl.report_iteration(job.name, organic)
             for act in actions:
                 self._apply_realign(act.job)
+        if ctl is not None and getattr(ctl, "reconcile", False):
+            # measured-vs-declared reconciliation: the controller sees
+            # only the measured comm duration; when it decides the
+            # declared profile has drifted, the simulator rewrites the
+            # profile and rescales drift_mult so the job's ACTUAL
+            # traffic is unchanged by the bookkeeping
+            measured = max(0.0, self.now - st.comm_start)
+            new_comm = ctl.reconcile_measurement(
+                job.name, measured, job.traffic.comm_ms)
+            if new_comm is not None:
+                self._reconcile_traffic(st, new_comm)
         st.pause_in_iter_ms = 0.0
         if st.iter_index >= job.n_iterations:
             st.phase = DONE
@@ -1154,6 +1403,28 @@ class ClusterSimulator:
             return
         st.iter_start = self.now
         self._enter_compute(st, inject)
+
+    def _reconcile_traffic(self, st: JobState, new_comm_ms: float) -> None:
+        """Adopt a reconciled declared comm time for one job.
+
+        The declared profile moves to ``new_comm_ms`` (the controller's
+        measured estimate) and ``drift_mult`` is rescaled so the job's
+        actual comm time is preserved — reconciliation is bookkeeping
+        about *knowledge*, not a change of the underlying traffic."""
+        spec = st.job.traffic
+        new_comm_ms = min(spec.period_ms, new_comm_ms)
+        if new_comm_ms <= EPS:
+            return
+        actual = min(spec.period_ms, spec.comm_ms * st.drift_mult)
+        st.drift_mult = actual / new_comm_ms
+        new_spec = dataclasses.replace(spec, duty=new_comm_ms / spec.period_ms)
+        for t in st.job.tasks:
+            t.traffic = dataclasses.replace(new_spec)
+        if self.registry is not None:
+            self.registry.bump()
+        if self.controller is not None and self.registry is not None:
+            self.controller.report_traffic_change(
+                self.registry, self._ctl_cluster, st.name, new_spec)
 
     def _apply_realign(self, jname: str) -> None:
         """Stop-and-wait: pause a low-priority job so its next comm phase
@@ -1188,7 +1459,11 @@ class ClusterSimulator:
         link_util = {}
         for l in link_ids:
             cap = self.cluster.link_capacity(l)
-            link_util[l] = min(1.0, self.delivered_gb[l] / (cap * elapsed / 1e3))
+            if cap > 0:
+                link_util[l] = min(1.0,
+                                   self.delivered_gb[l] / (cap * elapsed / 1e3))
+            else:  # link down at sim end (fault injection)
+                link_util[l] = 0.0
         b_max = self.cluster.b_max
         caps = np.array([self.cluster.link_capacity(l) for l in link_ids])
         utils = np.array([link_util[l] for l in link_ids])
@@ -1224,6 +1499,11 @@ class ClusterSimulator:
             iterations_done=iters,
             reconfigurations=(self.controller.reconf_count
                               if self.controller else 0),
+            suppressed_reconfigurations=(
+                self.controller.suppressed_reconf_count
+                if self.controller else 0),
+            reconciliations=(self.controller.reconcile_count
+                             if self.controller else 0),
             profile=self.profile,
         )
 
